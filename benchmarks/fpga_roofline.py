@@ -1,0 +1,28 @@
+"""Fig. 1 / Table 1 / Eq. 1-2 — roofline comparison: DSP-based peak vs the
+LUTMUL peak on Alveo U280 (1/64 resources, like the paper's figure), plus the
+V100 rows from Table 1."""
+from repro.core import fpga_model as F
+
+
+def run():
+    def compute():
+        return F.roofline(F.U280, bits=4, frac=1 / 64, lut_overhead=2.0)
+
+    r = compute()
+    yield ("fig1_roofline_1_64_u280", compute,
+           f"dsp_peak={r['dsp_peak_ops']/1e9:.1f}GOPS;"
+           f"lutmul_peak={r['lutmul_peak_ops']/1e9:.1f}GOPS;"
+           f"speedup={r['lutmul_peak_ops']/r['dsp_peak_ops']:.2f}x;"
+           f"dsp_ridge={r['dsp_ridge_intensity']:.1f}ops_per_byte;"
+           f"lut_ridge={r['lutmul_ridge_intensity']:.1f}ops_per_byte")
+
+    full = F.roofline(F.U280, bits=4, frac=1.0, lut_overhead=2.0)
+    yield ("table1_u280_full_device", lambda: F.roofline(F.U280, bits=4),
+           f"dsp_peak_4bit={full['dsp_peak_ops']/1e12:.2f}TOPS;"
+           f"lutmul_peak_4bit={full['lutmul_peak_ops']/1e12:.2f}TOPS;"
+           f"int8_dsp_peak={F.dsp_peak_ops(F.U280, 8)/1e12:.2f}TOPS")
+
+    yield ("table1_v100_rows", lambda: F.V100_PEAK_FP16_TENSOR,
+           f"v100_fp16_tensor={F.V100_PEAK_FP16_TENSOR/1e12:.0f}TFLOPS;"
+           f"v100_bw={F.V100_HBM_BW/1e9:.0f}GBps;"
+           f"u280_hbm_bw={F.U280.hbm_bw/1e9:.0f}GBps")

@@ -1,0 +1,49 @@
+"""Sec. 3.5 — LUT-multiplication kernel microbenchmarks.
+
+On this CPU host the Pallas kernel runs in interpret mode (functional, not
+performant); the ``ref`` rows give the XLA-compiled integer-math path.  The
+TPU-side roofline for these kernels comes from the dry-run (§Roofline).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lut import pack_int4
+from repro.kernels.lutmul import ops
+
+M, K, N = 256, 512, 256
+
+
+def run():
+    rng = np.random.default_rng(0)
+    a = rng.integers(-8, 8, size=(M, K)).astype(np.int8)
+    w = rng.integers(-8, 8, size=(K, N)).astype(np.int8)
+    a_codes = jnp.asarray(a.astype(np.uint8) & 0xF)
+    w_packed = pack_int4(jnp.asarray(w).T).T
+    a_j = jnp.asarray(a)
+    w_j = jnp.asarray(w)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.bfloat16)
+    wf = jnp.asarray(rng.normal(size=(K, N)), jnp.bfloat16)
+
+    gops = 2 * M * K * N / 1e9
+
+    lut_ref = jax.jit(lambda a, w: ops.lutmul(a, w, backend="ref"))
+    int_ref = jax.jit(lambda a, w: ops.int_matmul(a, w, backend="ref"))
+    bf16 = jax.jit(lambda x, w: x @ w)
+
+    yield ("kernel_lutmul_ref_int4", lambda: lut_ref(a_codes, w_packed)
+           .block_until_ready(), f"gop_per_call={gops:.3f}")
+    yield ("kernel_int_matmul_ref_int8", lambda: int_ref(a_j, w_j)
+           .block_until_ready(), f"gop_per_call={gops:.3f}")
+    yield ("kernel_bf16_matmul_baseline", lambda: bf16(x, wf)
+           .block_until_ready(), f"gop_per_call={gops:.3f}")
+
+    # interpret-mode correctness check of the real Pallas kernel body
+    def interp():
+        out = ops.lutmul(a_codes[:64, :128], w_packed[:64, :128],
+                         backend="interpret")
+        return out.block_until_ready()
+    want = a[:64, :128].astype(np.int32) @ w[:128, :128].astype(np.int32)
+    got = np.asarray(interp())
+    yield ("kernel_lutmul_pallas_interpret_64x128x128", interp,
+           f"exact_match={bool((got == want).all())}")

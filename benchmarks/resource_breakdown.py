@@ -1,0 +1,49 @@
+"""Fig. 6 — LUT resource breakdown of MobileNetV2's second conv layer
+(1x1, 32 in / 32 out = 1024 weights).
+
+Paper: 1829 LUTs as multiplication ROM after HLS (theory: Eq.3 gives
+2048; Vivado dedups to 1829), 3277 ROM + 2645 adder/other = 5922 after
+implementation.  We reproduce the theoretical terms and the calibrated
+overhead factor the throughput model uses.
+"""
+from repro.core import lut
+
+N_WEIGHTS = 1024
+PAPER_HLS_ROM = 1829
+PAPER_IMPL_ROM = 3277
+PAPER_IMPL_ADDER = 2645
+PAPER_IMPL_TOTAL = 5922
+
+
+def adder_tree_luts(n_inputs: int, acc_bits: int = 8,
+                    luts_per_bit: float = 0.28) -> float:
+    """LUT estimate for the accumulation tree: (n-1) adders, width grows
+    log2 with depth.  ``luts_per_bit`` calibrates Vivado's CARRY8 chains +
+    ternary (3:1) adder packing + cross-channel resource sharing; 0.28 is
+    fit to the paper's Fig. 6 measurement (2645 adder LUTs for 32 channels
+    x 31 adds of ~9-bit average width)."""
+    total = 0.0
+    width = acc_bits
+    n = n_inputs
+    while n > 1:
+        adds = n // 2
+        total += adds * width * luts_per_bit
+        width += 1
+        n = (n + 1) // 2
+    return total
+
+
+def run():
+    def theory():
+        return N_WEIGHTS * lut.luts_per_multiply(4)
+
+    rom_theory = theory()
+    # per-output-channel adder tree over CIN=32 products
+    adders = 32 * adder_tree_luts(32)
+    total = rom_theory + adders
+    overhead = PAPER_IMPL_TOTAL / PAPER_HLS_ROM
+    yield ("fig6_resource_breakdown_conv2", theory,
+           f"rom_theory_eq3={rom_theory:.0f};paper_hls_rom={PAPER_HLS_ROM};"
+           f"adder_model={adders:.0f};paper_impl_adder={PAPER_IMPL_ADDER};"
+           f"model_total={total:.0f};paper_total={PAPER_IMPL_TOTAL};"
+           f"calibrated_overhead={overhead:.2f}x")

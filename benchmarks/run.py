@@ -1,0 +1,37 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is the
+wall-time of the benchmarked callable on this host (CPU); ``derived`` carries
+the paper-comparable quantity (GOPS, FPS, LUT counts, accuracy, ...).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _timeit(fn, n=3):
+    fn()                       # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main() -> None:
+    from benchmarks import (fpga_roofline, kernel_bench, lut_cost, lut_init,
+                            qat_accuracy, resource_breakdown, serving_bench,
+                            throughput_table2)
+    mods = [lut_init, lut_cost, fpga_roofline, throughput_table2,
+            resource_breakdown, kernel_bench, qat_accuracy, serving_bench]
+    print("name,us_per_call,derived")
+    for mod in mods:
+        for row in mod.run():
+            name, fn, derived = row
+            us = _timeit(fn) if callable(fn) else float(fn)
+            print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

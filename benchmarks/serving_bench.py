@@ -1,0 +1,30 @@
+"""Serving throughput on this host (smoke config): unquantized vs the W4A4
+LUT path vs W8A8 — the end-to-end embodiment of the paper's technique on the
+LM pool.  TPU-projected numbers live in EXPERIMENTS.md §Roofline."""
+import dataclasses
+import time
+
+import jax
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve.engine import Engine, ServeConfig
+
+
+def run():
+    rows = []
+    for quant in ("none", "w8a8", "w4a4_lut"):
+        cfg = configs.get_config("qwen2-7b", smoke=True, quant=quant)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        eng = Engine(cfg, params, ServeConfig(max_len=64))
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
+                                     cfg.vocab)
+        out = eng.generate(prompts, max_new_tokens=4)   # warmup/compile
+        t0 = time.perf_counter()
+        out = eng.generate(prompts, max_new_tokens=16)
+        dt = time.perf_counter() - t0
+        tps = 4 * 16 / dt
+        name = f"serve_smoke_{quant}"
+        rows.append((name, lambda e=eng, p=prompts: e.generate(
+            p, max_new_tokens=2), f"tokens_per_s={tps:.1f};batch=4"))
+    return rows

@@ -1,0 +1,70 @@
+"""Fault tolerance demo: a training run with an injected mid-run failure
+restarts from the last committed checkpoint and reproduces the exact loss
+trajectory of an uninterrupted run; plus the straggler monitor and an
+elastic (re-sharded) data pipeline restart.
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import shutil
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data import pipeline
+from repro.models import transformer as T
+from repro.train import loop
+from repro.train.step import TrainConfig
+
+
+def main():
+    cfg = configs.get_config("minicpm-2b", smoke=True)
+    dcfg = pipeline.DataConfig(seed=3, vocab=cfg.vocab, seq_len=16,
+                               global_batch=4)
+    tcfg = TrainConfig(total_steps=20, peak_lr=1e-3, warmup=2)
+    init = lambda: T.init_params(jax.random.PRNGKey(0), cfg)
+
+    for d in ("/tmp/ft_a", "/tmp/ft_b"):
+        shutil.rmtree(d, ignore_errors=True)
+
+    clean = loop.run(cfg, init, dcfg, tcfg,
+                     loop.RunConfig(steps=14, ckpt_every=4, ckpt_dir="/tmp/ft_a",
+                                    async_ckpt=False))
+    faulty = loop.run(cfg, init, dcfg, tcfg,
+                      loop.RunConfig(steps=14, ckpt_every=4,
+                                     ckpt_dir="/tmp/ft_b", async_ckpt=False,
+                                     fail_at_step=9))
+    l1 = {m["step"]: m["loss"] for m in clean["history"]}
+    l2 = {m["step"]: m["loss"] for m in faulty["history"]}
+    drift = max(abs(l1[s] - l2[s]) for s in range(14))
+    print(f"[fault] injected failure at step 9; restarts={faulty['restarts']}")
+    print(f"[fault] max loss drift vs uninterrupted run: {drift:.2e} "
+          f"({'BITWISE-IDENTICAL' if drift == 0 else 'tolerance-identical'})")
+
+    # elastic restart: the same global batch assembled under 4 shards
+    b2 = [pipeline.lm_batch(pipeline.DataConfig(seed=3, vocab=cfg.vocab,
+                                                seq_len=16, global_batch=4,
+                                                n_shards=2, shard=i), 5)
+          for i in range(2)]
+    b4 = [pipeline.lm_batch(pipeline.DataConfig(seed=3, vocab=cfg.vocab,
+                                                seq_len=16, global_batch=4,
+                                                n_shards=4, shard=i), 5)
+          for i in range(4)]
+    print(f"[elastic] step-5 batch under 2 shards {np.concatenate([b['tokens'] for b in b2]).shape} "
+          f"vs 4 shards {np.concatenate([b['tokens'] for b in b4]).shape} — "
+          "shard-count independent shapes; checkpoints restore across "
+          "topologies (see tests/test_checkpoint_and_loop.py)")
+
+    # straggler monitor
+    from repro.dist.straggler import StragglerMonitor
+    mon = StragglerMonitor()
+    for _ in range(4):                      # 4 step windows
+        for h in range(8):
+            mon.record(f"host{h}", 1.0 if h != 5 else 2.4)
+        rep = mon.evaluate()                # evaluated per window
+    print(f"[straggler] fleet median {rep['median']:.2f}s; "
+          f"excluded hosts: {rep['exclude']}")
+
+
+if __name__ == "__main__":
+    main()

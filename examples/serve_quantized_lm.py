@@ -1,0 +1,47 @@
+"""Serve an LM with batched requests under the paper's W4A4 LUT
+multiplication (the technique as a first-class serving feature), comparing
+against the bf16 baseline.
+
+    PYTHONPATH=src python examples/serve_quantized_lm.py [--arch gemma2-2b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (args.batch, 8), 0,
+                                 256)
+    outs = {}
+    for quant in ("none", "w4a4_lut"):
+        cfg = configs.get_config(args.arch, smoke=True, quant=quant)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        eng = Engine(cfg, params, ServeConfig(max_len=64))
+        eng.generate(prompts, max_new_tokens=2)      # compile
+        t0 = time.perf_counter()
+        out = eng.generate(prompts, max_new_tokens=args.new_tokens)
+        dt = time.perf_counter() - t0
+        outs[quant] = np.asarray(out)
+        print(f"[{quant:9s}] {args.batch * args.new_tokens / dt:7.1f} tok/s "
+              f"| sample: {out[0, 8:].tolist()}")
+    agree = float((outs["none"][:, 8:] == outs["w4a4_lut"][:, 8:]).mean())
+    print(f"[compare ] greedy token agreement bf16 vs W4A4-LUT: {agree:.0%} "
+          "(pre-QAT weights; QAT closes the gap — see "
+          "examples/train_mobilenet_qat.py)")
+
+
+if __name__ == "__main__":
+    main()

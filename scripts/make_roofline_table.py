@@ -1,0 +1,54 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline tables."""
+import glob
+import json
+import os
+import sys
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9}
+
+
+def load(out_dir="results/dryrun", suffix="sp"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, f"*__{suffix}.json"))):
+        try:
+            rows.append(json.load(open(f)))
+        except json.JSONDecodeError:
+            continue
+    return rows
+
+
+def fmt_row(r):
+    arch, shape = r["arch"], r["shape"]
+    if r["status"] == "skipped":
+        return f"| {arch} | {shape} | — | — | — | — | SKIP | — | {r['reason'][:60]}… |"
+    t = r["roofline"]
+    terms = {"compute": t["compute_s"], "memory": t["memory_s"],
+             "collective": t["collective_s"]}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    frac = t["compute_s"] / bound if bound else 0.0
+    mem = r.get("memory") or {}
+    gb = (mem.get("total_per_device_bytes", 0) or 0) / 1e9
+    ratio = r.get("model_vs_hlo_flops")
+    return (f"| {arch} | {shape} | {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} | {gb:.1f} | {dom} | {frac:.2f} "
+            f"| {'' if ratio is None else f'{ratio:.2f}'} |")
+
+
+def main():
+    suffix = sys.argv[1] if len(sys.argv) > 1 else "sp"
+    rows = load(suffix=suffix)
+    print("| arch | shape | compute_s | memory_s | collective_s | mem GB/dev "
+          "| bottleneck | compute/bound | model/HLO flops |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        print(fmt_row(r))
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    sk = sum(1 for r in rows if r["status"] == "skipped")
+    print(f"\n{ok} compiled, {sk} documented skips, "
+          f"{len(rows)} total recorded cells.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Architecture registry + assigned input shapes.
+
+Every assigned arch ships ``config()`` (the exact published configuration) and
+``smoke_config()`` (a reduced same-family config for CPU tests).  The shape
+pool is fixed by the assignment; applicability of ``long_500k``/decode shapes
+is a property of the architecture (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCH_IDS = [
+    "rwkv6_1p6b",
+    "zamba2_2p7b",
+    "gemma2_2b",
+    "phi3_medium_14b",
+    "qwen2_7b",
+    "minicpm_2b",
+    "whisper_large_v3",
+    "qwen2_moe_a2p7b",
+    "mixtral_8x22b",
+    "qwen2_vl_72b",
+]
+
+# external ids (CLI --arch) -> module names
+ALIASES = {
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "gemma2-2b": "gemma2_2b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "qwen2-7b": "qwen2_7b",
+    "minicpm-2b": "minicpm_2b",
+    "whisper-large-v3": "whisper_large_v3",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2p7b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "mobilenetv2": "mobilenetv2",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_module(arch: str):
+    name = ALIASES.get(arch, arch)
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch: str, smoke: bool = False, **kw):
+    mod = get_module(arch)
+    return mod.smoke_config(**kw) if smoke else mod.config(**kw)
+
+
+def shape_applicable(cfg, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape.name == "long_500k" and not getattr(cfg, "long_context_ok", False):
+        return False, ("pure full-attention architecture: 500k decode KV is "
+                       "quadratic-history; skipped per assignment "
+                       "(see DESIGN.md §Arch-applicability)")
+    return True, ""

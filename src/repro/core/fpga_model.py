@@ -1,0 +1,181 @@
+"""Analytic FPGA roofline + throughput model (paper Eq. 1-2, Table 1/2, Fig. 1).
+
+This module reproduces the paper's *quantitative claims* that do not require
+FPGA hardware: the DSP-vs-LUT peak-performance rooflines, the U280/V100
+comparison table, and the MobileNetV2 dataflow throughput model that predicts
+the paper's 1627 FPS / 978.6 GOPS result from folding factors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .lut import luts_per_multiply
+
+
+@dataclasses.dataclass(frozen=True)
+class FPGASpec:
+    name: str
+    luts: int
+    dsps: int
+    bram36: int
+    freq_hz: float
+    hbm_bw: float           # bytes/s
+    ddr_bw: float = 0.0
+    power_w: float = 0.0
+
+
+# AMD Xilinx Alveo U280 (paper Table 1)
+U280 = FPGASpec(name="Alveo U280", luts=1_303_680, dsps=9024, bram36=2016,
+                freq_hz=333e6, hbm_bw=460e9, ddr_bw=38e9, power_w=100.0)
+
+# NVIDIA V100 PCIe (paper Table 1) — for the comparison rows only.
+V100_PEAK_FP16_TENSOR = 112e12
+V100_HBM_BW = 900e9
+
+
+def dsp_packing_factor(bits: int) -> int:
+    """p in Eq. (1): 1 for 16-bit, 2 for 8-bit, 4 for 4-bit MACs."""
+    if bits <= 4:
+        return 4
+    if bits <= 8:
+        return 2
+    return 1
+
+
+def dsp_peak_ops(spec: FPGASpec, bits: int = 4, frac: float = 1.0) -> float:
+    """Eq. (1): peak = p * PEs * 2 * f  (ops/s) for DSP-based accelerators."""
+    return dsp_packing_factor(bits) * (spec.dsps * frac) * 2 * spec.freq_hz
+
+
+def lutmul_peak_ops(spec: FPGASpec, bits: int = 4, frac: float = 1.0,
+                    lut_overhead: float = 1.0) -> float:
+    """LUTMUL peak: (#LUTs / LUTs-per-multiplier) parallel MACs * 2 * f.
+
+    ``lut_overhead`` > 1 accounts for adder-tree/control LUTs per multiplier
+    (Fig. 6 shows roughly one adder LUT per ROM LUT after Vivado opt).
+    """
+    mults = (spec.luts * frac) / (luts_per_multiply(bits) * lut_overhead)
+    return mults * 2 * spec.freq_hz
+
+
+def memory_bound_ops(bw_bytes: float, ctc_ratio: float) -> float:
+    """Eq. (2): attainable ops limited by bandwidth x compute-to-communication."""
+    return bw_bytes * ctc_ratio
+
+
+def roofline(spec: FPGASpec, bits: int = 4, frac: float = 1.0,
+             lut_overhead: float = 2.0):
+    """Returns the Fig. 1 curves: (arithmetic intensity -> attainable ops/s)."""
+    dsp_peak = dsp_peak_ops(spec, bits, frac)
+    lut_peak = lutmul_peak_ops(spec, bits, frac, lut_overhead)
+    bw = spec.hbm_bw * frac
+
+    def attainable(intensity_ops_per_byte: float, peak: float) -> float:
+        return min(peak, bw * intensity_ops_per_byte)
+
+    return {
+        "dsp_peak_ops": dsp_peak,
+        "lutmul_peak_ops": lut_peak,
+        "bandwidth": bw,
+        "dsp_attainable": lambda i: attainable(i, dsp_peak),
+        "lutmul_attainable": lambda i: attainable(i, lut_peak),
+        "dsp_ridge_intensity": dsp_peak / bw,
+        "lutmul_ridge_intensity": lut_peak / bw,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Dataflow throughput model (Table 2): II=1 pixel pipeline + per-layer folding
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    """One conv layer of the dataflow pipeline."""
+    name: str
+    cin: int
+    cout: int
+    k: int               # kernel size
+    h_out: int
+    w_out: int
+    stride: int = 1
+    depthwise: bool = False
+    bits: int = 4
+
+    @property
+    def mults(self) -> int:
+        """Spatial multiplier count when fully unrolled (COUT x CIN x K^2)."""
+        if self.depthwise:
+            return self.cout * self.k * self.k
+        return self.cout * self.cin * self.k * self.k
+
+    @property
+    def macs(self) -> int:
+        return self.mults * self.h_out * self.w_out
+
+    @property
+    def ops(self) -> int:
+        return 2 * self.macs
+
+
+def layer_cycles(layer: ConvLayer, fold: int) -> int:
+    """Pipeline initiation cycles for one frame: pixels x fold (II=1/pixel/fold)."""
+    return layer.h_out * layer.w_out * fold
+
+
+def layer_luts(layer: ConvLayer, fold: int, lut_overhead: float = 2.0) -> float:
+    """LUT cost of one folded layer: (mults/fold) multipliers, Eq. (3) each,
+    plus adder/control overhead (Fig. 6 calibration: ~1 extra LUT per ROM LUT)."""
+    parallel_mults = layer.mults / fold
+    return parallel_mults * luts_per_multiply(layer.bits) * lut_overhead
+
+
+def pipeline_fps(layers: list[ConvLayer], folds: list[int], freq_hz: float) -> float:
+    """Dataflow throughput = f / max_layer_cycles (steady-state, II-limited)."""
+    bottleneck = max(layer_cycles(l, f) for l, f in zip(layers, folds))
+    return freq_hz / bottleneck
+
+
+def balance_folding(layers: list[ConvLayer], lut_budget: float,
+                    freq_hz: float, lut_overhead: float = 2.0,
+                    full_parallel_prefix: int = 0):
+    """Choose per-layer folds to maximize FPS under a LUT budget.
+
+    Strategy (matches the paper's design): layers in the fully-parallel prefix
+    get fold=1; remaining layers get the smallest power-of-two fold such that
+    the total LUT cost fits, balanced so every stage has similar cycle count.
+    Binary-search the target cycle count; fold_l = ceil(target / pixels_l)
+    capped to [1, mults_l].
+    """
+    def cost_at(target_cycles: float) -> tuple[float, list[int]]:
+        folds = []
+        for i, l in enumerate(layers):
+            if i < full_parallel_prefix:
+                folds.append(1)
+                continue
+            pixels = l.h_out * l.w_out
+            fold = max(1, min(l.mults, math.ceil(target_cycles / pixels)))
+            folds.append(fold)
+        total = sum(layer_luts(l, f, lut_overhead) for l, f in zip(layers, folds))
+        return total, folds
+
+    lo, hi = 1.0, 1e9
+    best = None
+    for _ in range(64):
+        mid = math.sqrt(lo * hi)
+        total, folds = cost_at(mid)
+        if total <= lut_budget:
+            best = (mid, folds, total)
+            hi = mid
+        else:
+            lo = mid
+    if best is None:
+        raise ValueError("LUT budget too small even at maximum folding")
+    target, folds, total = best
+    return {
+        "folds": folds,
+        "total_luts": total,
+        "fps": pipeline_fps(layers, folds, freq_hz),
+        "bottleneck_cycles": max(layer_cycles(l, f) for l, f in zip(layers, folds)),
+    }

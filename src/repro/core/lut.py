@@ -1,0 +1,171 @@
+"""LUT-based efficient multiplication — the paper's core mechanism (Sec. 3.5).
+
+Two deliverables live here:
+
+1. **Bit-exact FPGA export** (:func:`lut6_2_init_words`): the 64-bit INIT words
+   for Xilinx LUT6_2 primitives that embed *two* int4 weights as constant
+   multipliers, exactly as Fig. 5 of the paper.  Input wiring (MSB→LSB):
+   ``{I5=1, I4=WS (weight select), I3..I0=uint4 activation}``.  Each LUT6_2
+   contributes two product bits: LUT ``j`` (j=0 most significant) emits product
+   bit ``7-2j`` on O6 (INIT[32 + 16*WS + a]) and bit ``6-2j`` on O5
+   (INIT[16*WS + a]).  Validated bit-for-bit against the four constants the
+   paper prints for weights {+1, -3}.
+
+2. **TPU product tables** (:func:`product_table`): the same weight-stationary
+   multiplication expressed as a 2^w × 2^a int8 gather table — the VMEM-resident
+   analogue the Pallas ``lutmul`` kernel consumes.  ``table[w & 0xF, a] == w*a``
+   for int4 ``w`` / uint4 ``a``; both the kernel and the FPGA INIT generator are
+   derived from :func:`_int_product`, so the TPU path and the bitstream path
+   cannot drift apart.
+
+Also: Eq. (3) LUT cost model and int4 pack/unpack helpers shared by kernels.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# shared integer product (two's complement), the single source of truth
+# ---------------------------------------------------------------------------
+
+
+def _int_product(weight: int, activation: int, out_bits: int = 8) -> int:
+    """Two's-complement ``weight * activation`` truncated to ``out_bits``."""
+    p = int(weight) * int(activation)
+    mask = (1 << out_bits) - 1
+    return p & mask
+
+
+# ---------------------------------------------------------------------------
+# 1. FPGA export — LUT6_2 INIT words (Fig. 5)
+# ---------------------------------------------------------------------------
+
+
+def lut6_2_init_words(w0: int, w1: int, act_bits: int = 4,
+                      out_bits: int = 8) -> list[int]:
+    """64-bit INIT words for the 4 LUT6_2 embedding weights ``(w0, w1)``.
+
+    ``w0`` is selected by WS=0, ``w1`` by WS=1 (paper Fig. 5 uses w0=+1,
+    w1=-3).  Returns ``out_bits // 2`` words, most-significant bit-pair first,
+    matching the order the paper lists them.
+    """
+    if act_bits != 4:
+        raise ValueError("LUT6_2 packing is defined for 4-bit activations")
+    n_luts = out_bits // 2
+    words = []
+    for j in range(n_luts):
+        hi_bit = out_bits - 1 - 2 * j   # emitted on O6 (upper 32 INIT bits)
+        lo_bit = out_bits - 2 - 2 * j   # emitted on O5 (lower 32 INIT bits)
+        init = 0
+        for ws, w in ((0, w0), (1, w1)):
+            for a in range(2 ** act_bits):
+                p = _int_product(w, a, out_bits)
+                if (p >> hi_bit) & 1:
+                    init |= 1 << (32 + 16 * ws + a)
+                if (p >> lo_bit) & 1:
+                    init |= 1 << (16 * ws + a)
+        words.append(init)
+    return words
+
+
+# The paper's published constants for weights (+1, -3) — used by tests/benches.
+PAPER_FIG5_INIT_WORDS = (
+    0xFFFE_0000_FFFE_0000,
+    0x07FE_0000_F83E_0000,
+    0x39C6_FF00_5A5A_F0F0,
+    0xCCCC_CCCC_AAAA_AAAA,
+)
+
+
+def lut6_read(init: int, i5: int, i4: int, a: int) -> tuple[int, int]:
+    """Read a LUT6_2: returns (O6, O5) for input {i5, i4, a[3:0]}."""
+    idx6 = (i5 << 5) | (i4 << 4) | a
+    idx5 = (i4 << 4) | a
+    return (init >> idx6) & 1, (init >> idx5) & 1
+
+
+def multiply_via_lut6(w0: int, w1: int, ws: int, a: int, out_bits: int = 8) -> int:
+    """Evaluate the LUT6_2 bank like the FPGA would; returns signed product."""
+    words = lut6_2_init_words(w0, w1, out_bits=out_bits)
+    p = 0
+    for j, init in enumerate(words):
+        o6, o5 = lut6_read(init, 1, ws, a)
+        p |= o6 << (out_bits - 1 - 2 * j)
+        p |= o5 << (out_bits - 2 - 2 * j)
+    if p >= 1 << (out_bits - 1):          # two's complement decode
+        p -= 1 << out_bits
+    return p
+
+
+# ---------------------------------------------------------------------------
+# 2. TPU product tables (consumed by kernels/lutmul)
+# ---------------------------------------------------------------------------
+
+
+def product_table(w_bits: int = 4, a_bits: int = 4, w_signed: bool = True,
+                  a_signed: bool = False) -> np.ndarray:
+    """Dense product lookup table ``T[w_code, a_code] -> int32 product``.
+
+    ``w_code`` indexes the two's-complement bit pattern of the weight (so
+    ``T[(w + 2**w_bits) % 2**w_bits, a] == w * a``), matching how the Pallas
+    kernel addresses it with raw unpacked nibbles.
+    """
+    ws = np.arange(2 ** w_bits)
+    if w_signed:
+        wvals = np.where(ws >= 2 ** (w_bits - 1), ws - 2 ** w_bits, ws)
+    else:
+        wvals = ws
+    As = np.arange(2 ** a_bits)
+    avals = np.where(As >= 2 ** (a_bits - 1), As - 2 ** a_bits, As) if a_signed else As
+    return (wvals[:, None] * avals[None, :]).astype(np.int32)
+
+
+def flat_product_table(w_bits: int = 4, a_bits: int = 4, **kw) -> np.ndarray:
+    """Flattened table addressed by ``(w_code << a_bits) | a_code``."""
+    return product_table(w_bits, a_bits, **kw).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (3) — LUT cost model
+# ---------------------------------------------------------------------------
+
+
+def luts_per_multiply(n_bits: int) -> float:
+    """Paper Eq. (3): #LUT6 = (2n * 2^n) / (1 * 2^6) for an n:2n LUT multiply."""
+    return (2 * n_bits * 2 ** n_bits) / 64.0
+
+
+def luts_per_multiply_general(n_bits: int) -> tuple[int, int]:
+    """(min, max) LUT6 count for a *general* n-bit multiplier (paper: 13-28
+    for 4-bit; Fig. 5 caption: 6-14x more than LUTMUL's 2)."""
+    return 13 if n_bits <= 4 else 13 * (n_bits // 4) ** 2, \
+           28 if n_bits <= 4 else 28 * (n_bits // 4) ** 2
+
+
+# ---------------------------------------------------------------------------
+# int4 packing helpers (shared by kernels + checkpoints)
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(x) -> jnp.ndarray:
+    """Pack int4 values (last axis even) into uint8 nibble pairs.
+
+    ``out[..., i] = (x[..., 2i+1] & 0xF) << 4 | (x[..., 2i] & 0xF)``
+    """
+    x = jnp.asarray(x)
+    if x.shape[-1] % 2:
+        raise ValueError("last axis must be even to pack nibbles")
+    lo = x[..., 0::2].astype(jnp.uint8) & 0xF
+    hi = x[..., 1::2].astype(jnp.uint8) & 0xF
+    return (hi << 4) | lo
+
+
+def unpack_int4(packed: jnp.ndarray, signed: bool = True) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4`; returns int8 (sign-extended if signed)."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = (packed >> 4).astype(jnp.int8)
+    x = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+    if signed:
+        x = jnp.where(x >= 8, x - 16, x)
+    return x

@@ -1,0 +1,121 @@
+"""Quantization primitives — paper Eq. (4)/(5) — plus QAT fake-quant with STE.
+
+The paper quantizes weights to signed int4 (symmetric, per-channel) and
+activations to unsigned uint4 (the threshold units emit unsigned codes), with
+8-bit first/last layers.  ``quantize``/``dequantize`` implement Eq. (4)/(5)
+verbatim; ``fake_quant`` is the straight-through-estimator used during QAT;
+``project_params`` is the post-update weight projection the paper describes in
+Sec. 3.6 ("model parameters are quantized after each gradient update").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static description of one quantizer (weights or activations)."""
+
+    bits: int = 4
+    signed: bool = True            # weights: int4; activations: uint4
+    per_channel: bool = True
+    channel_axis: int = -1         # axis that keeps its own scale
+    narrow_range: bool = False     # use [-(2^{b-1}-1), 2^{b-1}-1] when True
+
+    @property
+    def qmin(self) -> int:
+        if not self.signed:
+            return 0
+        return -(2 ** (self.bits - 1)) + (1 if self.narrow_range else 0)
+
+    @property
+    def qmax(self) -> int:
+        return (2 ** (self.bits - 1) - 1) if self.signed else (2 ** self.bits - 1)
+
+    @property
+    def n_levels(self) -> int:
+        return self.qmax - self.qmin + 1
+
+
+W4 = QuantConfig(bits=4, signed=True)
+A4 = QuantConfig(bits=4, signed=False)
+W8 = QuantConfig(bits=8, signed=True)
+A8 = QuantConfig(bits=8, signed=False)
+
+
+def _reduce_axes(x: jax.Array, cfg: QuantConfig) -> tuple[int, ...]:
+    axis = cfg.channel_axis % x.ndim
+    return tuple(a for a in range(x.ndim) if a != axis)
+
+
+def compute_scale(x: jax.Array, cfg: QuantConfig, eps: float = 1e-8) -> jax.Array:
+    """Max-abs (symmetric) scale; per-channel when configured.
+
+    Keeps the reduced dims so the scale broadcasts against ``x``.
+    """
+    if cfg.per_channel and x.ndim > 1:
+        amax = jnp.max(jnp.abs(x), axis=_reduce_axes(x, cfg), keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(x))
+    # Unsigned quantizers map [0, amax] onto [0, qmax]; signed map [-amax, amax].
+    denom = cfg.qmax if not cfg.signed else (2 ** (cfg.bits - 1) - 1)
+    return jnp.maximum(amax, eps) / denom
+
+
+def quantize(x: jax.Array, scale: jax.Array, zero_point: jax.Array | int,
+             cfg: QuantConfig) -> jax.Array:
+    """Paper Eq. (4): clamp(round(x / s + z), qmin, qmax) (round-to-even)."""
+    q = jnp.round(x / scale + zero_point)
+    return jnp.clip(q, cfg.qmin, cfg.qmax).astype(jnp.int8 if cfg.bits <= 8 else jnp.int32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, zero_point: jax.Array | int = 0
+               ) -> jax.Array:
+    """Paper Eq. (5): s * (y - z)."""
+    return (q.astype(scale.dtype if hasattr(scale, "dtype") else jnp.float32)
+            - zero_point) * scale
+
+
+def fake_quant(x: jax.Array, cfg: QuantConfig,
+               scale: Optional[jax.Array] = None) -> jax.Array:
+    """Straight-through-estimator fake quantization for QAT.
+
+    Forward: dequantize(quantize(x)); backward: identity (gradients flow in
+    floating point, per Sec. 3.6 of the paper).
+    """
+    if scale is None:
+        scale = compute_scale(x, cfg)
+    xq = dequantize(quantize(x, scale, 0, cfg), scale, 0)
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+def quantize_pair(x: jax.Array, cfg: QuantConfig):
+    """Returns (q, scale) with a freshly computed scale."""
+    scale = compute_scale(x, cfg)
+    return quantize(x, scale, 0, cfg), scale
+
+
+def project_params(params, spec) -> object:
+    """Post-update projection of weights onto the quantization grid.
+
+    ``spec`` is a pytree-prefix of ``QuantConfig`` (or None to skip a leaf),
+    matching the paper's QAT recipe: update in fp32, then snap weights to the
+    quantized grid so the *forward* always sees representable weights.
+    """
+    def _proj(leaf, cfg):
+        if cfg is None:
+            return leaf
+        return fake_quant(leaf, cfg)
+    return jax.tree_util.tree_map(_proj, params, spec,
+                                  is_leaf=lambda l: l is None)
+
+
+def quant_error(x: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Mean-squared quantization error (used by the Fig. 2 style sweep)."""
+    scale = compute_scale(x, cfg)
+    xq = dequantize(quantize(x, scale, 0, cfg), scale, 0)
+    return jnp.mean((x - xq) ** 2)

@@ -1,0 +1,84 @@
+"""Streamlining transform (paper Sec. 3.2 / FINN [27]): turn a float
+``conv -> BN -> ReLU6 -> quantize`` stage into an integer-only
+``int conv (LUT kernel) -> multi-threshold`` stage.
+
+The resulting stage consumes uint4 activation codes and int4 weight codes and
+emits uint4 codes for the next layer — the exact datapath the paper deploys,
+with all scales/BN folded into per-channel integer thresholds.
+
+``streamline_stage``/``integer_stage_forward`` are validated against the
+float reference to exact code equality (tests/test_streamline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import (A4, W4, QuantConfig, compute_scale,
+                                     dequantize, quantize)
+from repro.core.thresholds import BNParams, apply_thresholds, make_thresholds
+
+
+@dataclasses.dataclass
+class StreamlinedStage:
+    """Integer-only stage: weights as int4 codes + threshold bank."""
+    w_codes: jax.Array          # [K, N] int8 (int4 codes)
+    thresholds: jax.Array       # [N, levels-1]
+    sign: jax.Array             # [N] BN-slope sign
+    act_scale_out: jax.Array    # [N] output activation scale (for the next
+                                # stage / final dequant)
+    relu6_cap_code: jax.Array   # [N] max code representing clip at 6.0
+
+
+def streamline_stage(w: jax.Array, bn: BNParams, act_scale_in: jax.Array,
+                     out_cfg: QuantConfig = A4) -> StreamlinedStage:
+    """w: [K, N] float weights; act_scale_in: scalar input activation scale.
+
+    Derivation: acc = sum_k w_q[k,n] * a_q[k]; float pre-act
+    x = (w_scale[n] * act_scale_in) * acc; y = BN(x); act = clip(y, 0, 6);
+    q = round(act / out_scale). The (round . clip . BN . scale) chain is
+    monotone per channel -> a threshold bank (paper Sec. 3.2).
+    """
+    w_scale = compute_scale(w, W4)                       # [1, N]
+    w_codes = quantize(w, w_scale, 0, W4)                # int4 codes
+    acc_scale = (w_scale[0] * act_scale_in)              # [N]
+    # output scale: fixed so that 6.0 (the ReLU6 cap) == qmax
+    out_scale = jnp.full(acc_scale.shape, 6.0 / out_cfg.qmax)
+    thresholds, sign = make_thresholds(acc_scale, bn, out_cfg, out_scale)
+    cap = jnp.full(acc_scale.shape, out_cfg.qmax, jnp.int32)
+    return StreamlinedStage(w_codes=w_codes, thresholds=thresholds, sign=sign,
+                            act_scale_out=out_scale, relu6_cap_code=cap)
+
+
+def integer_stage_forward(stage: StreamlinedStage, a_codes: jax.Array,
+                          out_cfg: QuantConfig = A4,
+                          backend: Optional[str] = None) -> jax.Array:
+    """a_codes: [M, K] uint4 codes -> [M, N] uint4 codes; integer-only.
+
+    The matmul runs through the LUT kernel (kernels/lutmul); the activation
+    through the threshold bank. No floating point in the datapath.
+    """
+    from repro.core.lut import pack_int4
+    from repro.kernels.lutmul import ops
+    w_packed = pack_int4(stage.w_codes.T).T
+    acc = ops.lutmul(a_codes.astype(jnp.uint8) & 0xF, w_packed,
+                     a_signed=False, backend=backend)
+    q = apply_thresholds(acc, stage.thresholds, stage.sign, out_cfg)
+    return jnp.clip(q, 0, stage.relu6_cap_code[None, :])
+
+
+def float_stage_reference(w: jax.Array, bn: BNParams,
+                          act_scale_in: jax.Array, a_codes: jax.Array,
+                          out_cfg: QuantConfig = A4) -> jax.Array:
+    """The float path the integer stage must match code-for-code."""
+    w_scale = compute_scale(w, W4)
+    w_q = dequantize(quantize(w, w_scale, 0, W4), w_scale)
+    x = (a_codes.astype(jnp.float32) * act_scale_in) @ w_q
+    A, B = bn.affine()
+    y = A * x + B
+    act = jnp.clip(y, 0.0, 6.0)
+    out_scale = 6.0 / out_cfg.qmax
+    return jnp.floor(act / out_scale + 0.5).astype(jnp.int32)

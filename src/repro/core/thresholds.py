@@ -1,0 +1,94 @@
+"""Multi-threshold activation units + FINN-style streamlining (paper Sec. 3.2/3.6).
+
+The paper absorbs per-channel scaling factors and batch-norm into the
+activation function, turning ``dequant -> BN -> act -> requant`` into a bank of
+integer comparisons ("multi-threshold unit"):
+
+    q_out = sum_k [ acc >= T[c, k] ],    k = 1 .. 2^bits - 1
+
+where ``acc`` is the int32 accumulator coming out of the LUT multiplication
+kernel.  This file derives the thresholds from (accumulator scale, BN params,
+output activation scale) and provides both the float-reference and the
+integer-threshold evaluation so tests can assert exact equivalence.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .quantization import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BNParams:
+    """Inference-time batch-norm: y = gamma * (x - mean) / sqrt(var+eps) + beta."""
+    gamma: jax.Array
+    beta: jax.Array
+    mean: jax.Array
+    var: jax.Array
+    eps: float = 1e-5
+
+    def affine(self) -> tuple[jax.Array, jax.Array]:
+        """Returns (A, B) with y = A*x + B."""
+        inv = self.gamma / jnp.sqrt(self.var + self.eps)
+        return inv, self.beta - self.mean * inv
+
+
+def make_thresholds(acc_scale: jax.Array, bn: BNParams | None,
+                    out_cfg: QuantConfig, out_scale: jax.Array) -> jax.Array:
+    """Integer thresholds T[c, k] such that
+
+        q_out(acc) = popcount(acc >= T)  ==  quantize(relu_clip(BN(acc*acc_scale)))
+
+    with round-half-up semantics.  ``acc_scale`` is the per-channel product of
+    weight and activation scales (shape broadcastable to channels), ``out_scale``
+    the next layer's activation scale.  Thresholds are float64-derived then
+    ceil'ed onto the integer accumulator grid (FINN streamlining).
+
+    For negative BN slope the comparison flips; we encode that by negating both
+    thresholds and accumulator sign per channel (returned thresholds carry a
+    leading sign row; see :func:`apply_thresholds`).
+    """
+    n_steps = out_cfg.qmax - out_cfg.qmin  # number of thresholds = levels - 1
+    if bn is not None:
+        A, B = bn.affine()
+    else:
+        A = jnp.ones_like(out_scale)
+        B = jnp.zeros_like(out_scale)
+    A = A * acc_scale  # y = A * acc + B in float
+    # q transitions at y = out_scale * (k - 0.5), k = qmin+1 .. qmax (uint: 1..qmax)
+    ks = jnp.arange(1, n_steps + 1, dtype=jnp.float32) + float(out_cfg.qmin)
+    y_t = out_scale[..., None] * (ks - 0.5)            # [C, K]
+    # solve A*acc + B >= y_t  ->  acc >= (y_t - B)/A   (A>0)
+    #                         ->  acc <= (y_t - B)/A   (A<0)
+    t = (y_t - B[..., None]) / A[..., None]
+    sign = jnp.sign(A)
+    # Encode flipped channels by negating acc and thresholds: acc' = sign*acc.
+    t = t * sign[..., None]
+    t_int = jnp.ceil(t)  # acc' >= ceil(t) <=> acc' >= t for integer acc'
+    return t_int.astype(jnp.float32), sign
+
+
+def apply_thresholds(acc: jax.Array, thresholds: jax.Array, sign: jax.Array,
+                     out_cfg: QuantConfig) -> jax.Array:
+    """Evaluate the multi-threshold unit on integer accumulators.
+
+    acc: [..., C] int32;  thresholds: [C, K];  returns uint codes in
+    [qmin, qmax] (uint4: 0..15).
+    """
+    acc_f = acc.astype(jnp.float32) * sign
+    q = jnp.sum(acc_f[..., None] >= thresholds, axis=-1).astype(jnp.int32)
+    return q + out_cfg.qmin
+
+
+def float_reference(acc: jax.Array, acc_scale: jax.Array, bn: BNParams | None,
+                    out_cfg: QuantConfig, out_scale: jax.Array) -> jax.Array:
+    """The float path the threshold unit must match exactly on integer accs."""
+    x = acc.astype(jnp.float32) * acc_scale
+    if bn is not None:
+        A, B = bn.affine()
+        x = A * x + B
+    q = jnp.floor(x / out_scale + 0.5)  # round-half-up == threshold at k-0.5
+    return jnp.clip(q, out_cfg.qmin, out_cfg.qmax).astype(jnp.int32)

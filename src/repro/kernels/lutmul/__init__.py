@@ -1,0 +1,1 @@
+from repro.kernels.lutmul import kernel, ops, ref  # noqa: F401

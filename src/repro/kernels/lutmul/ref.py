@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the LUT-multiplication kernels.
+
+These define the *semantics* the Pallas kernels must reproduce exactly
+(integer math — assert_allclose with atol=0).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.lut import unpack_int4
+
+
+def decode_codes(codes: jnp.ndarray, bits: int = 4, signed: bool = True
+                 ) -> jnp.ndarray:
+    """Two's-complement decode of n-bit codes held in uint8/int8."""
+    c = codes.astype(jnp.int32) & ((1 << bits) - 1)
+    if signed:
+        c = jnp.where(c >= (1 << (bits - 1)), c - (1 << bits), c)
+    return c
+
+
+def lutmul_ref(a_codes: jnp.ndarray, w_packed: jnp.ndarray,
+               a_signed: bool = True) -> jnp.ndarray:
+    """LUT-matmul oracle.
+
+    a_codes: [M, K] uint8 (4-bit codes); w_packed: [K//2, N] uint8 nibble
+    pairs (k-major packing: byte k2 holds w[2*k2] in the low nibble).
+    Returns int32 [M, N] — exactly what the table-gather kernel accumulates.
+    """
+    a = decode_codes(a_codes, 4, a_signed)                     # [M, K]
+    w = unpack_int4(w_packed.T, signed=True).T.astype(jnp.int32)  # [K, N]
+    return a @ w
+
+
+def int_matmul_ref(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """int8 x int8 -> int32 matmul oracle (the 'DSP packing' analogue)."""
+    return jnp.matmul(a.astype(jnp.int32), w.astype(jnp.int32))

@@ -1,0 +1,38 @@
+"""jit'd wrapper for the multi-threshold kernel (padding + backend dispatch),
+and the fused integer stage: lutmul accumulate -> threshold emit."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lutmul.ops import get_backend, lutmul
+from repro.kernels.thresholds import kernel, ref
+
+
+def threshold(acc: jax.Array, thresholds: jax.Array, sign: jax.Array,
+              backend: Optional[str] = None) -> jax.Array:
+    be = backend or get_backend()
+    if be == "ref":
+        return ref.threshold_ref(acc, thresholds, sign)
+    M, N = acc.shape
+    bm = min(kernel.DEFAULT_BM, max(8, 8 * (-(-M // 8))))
+    bn = min(kernel.DEFAULT_BN, max(8, 8 * (-(-N // 8))))
+    pm, pn = (-M) % bm, (-N) % bn
+    acc_p = jnp.pad(acc, ((0, pm), (0, pn)))
+    thr_p = jnp.pad(thresholds, ((0, pn), (0, 0)), constant_values=jnp.inf)
+    sign_p = jnp.pad(sign, (0, pn), constant_values=1.0)
+    out = kernel.threshold_pallas(acc_p, thr_p, sign_p, bm=bm, bn=bn,
+                                  interpret=(be != "pallas"))
+    return out[:M, :N]
+
+
+def lutmul_threshold_stage(a_codes: jax.Array, w_packed: jax.Array,
+                           thresholds: jax.Array, sign: jax.Array,
+                           a_signed: bool = False,
+                           backend: Optional[str] = None) -> jax.Array:
+    """The paper's full integer stage: LUT multiply-accumulate then the
+    threshold unit, end to end in integer arithmetic."""
+    acc = lutmul(a_codes, w_packed, a_signed=a_signed, backend=backend)
+    return threshold(acc, thresholds, sign, backend=backend)

@@ -1,0 +1,16 @@
+"""Oracle for the multi-threshold activation kernel: popcount of
+``acc >= T[c,k]`` (paper Sec. 3.2's threshold unit), pure jnp."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def threshold_ref(acc: jnp.ndarray, thresholds: jnp.ndarray,
+                  sign: jnp.ndarray) -> jnp.ndarray:
+    """acc: [M, N] int32; thresholds: [N, K] f32; sign: [N] f32 (+/-1).
+
+    Returns uint codes [M, N] int32 in [0, K].
+    """
+    a = acc.astype(jnp.float32) * sign[None, :]
+    return jnp.sum(a[:, :, None] >= thresholds[None, :, :],
+                   axis=-1).astype(jnp.int32)

@@ -1,0 +1,59 @@
+"""Production mesh + per-cell sharding rules.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: (16, 16) ("data", "model") = 256 chips;
+multi-pod: (2, 16, 16) ("pod", "data", "model") = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.dist.sharding import Rules, production_rules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for subprocess integration tests (8 fake devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# Archs whose bf16 weights exceed comfortable TP-only residency -> shard
+# params over "data" too when serving (FSDP-style serving).
+FSDP_SERVE_ARCHS = {"mixtral-8x22b", "qwen2-vl-72b", "phi3-medium-14b"}
+# MoE expert placement: 60 experts -> EP over model axis (pad 60->64);
+# 8 experts -> TP inside experts (ff over model) instead.
+MOE_EP_ARCHS = {"qwen2-moe-a2.7b"}
+
+
+def rules_for(cfg, shape_kind: str, shape_name: str, *,
+              multi_pod: bool = False, overrides: dict | None = None) -> Rules:
+    """Sharding-rule table for one (arch x shape) cell."""
+    r = production_rules(multi_pod)
+    if shape_kind == "train":
+        r["fsdp"] = "data"          # ZeRO-style param+opt sharding everywhere
+    else:
+        r["fsdp"] = "data" if cfg.name in FSDP_SERVE_ARCHS else None
+    if getattr(cfg, "moe", None) is not None:
+        if cfg.name in MOE_EP_ARCHS:
+            r["expert"], r["expert_mlp"] = "model", None
+            r["moe_capacity"] = None
+        else:
+            # TP-mode MoE: ff over model, capacity (token) dim over data
+            r["expert"], r["expert_mlp"] = None, "model"
+            r["moe_capacity"] = "data"
+    if shape_name == "long_500k":
+        # batch=1: shard the KV/sequence dimension over "data" instead
+        r["batch"] = None
+        r["seq_kv"] = ("pod", "data") if multi_pod else ("data",)
+    else:
+        r["seq_kv"] = None
+    if overrides:
+        r.update(overrides)
+    return r

@@ -1,0 +1,372 @@
+"""Attention: GQA with blocked (flash-style) softmax, sliding windows,
+Gemma-2 logit soft-capping, cross-attention, and KV-cache decode.
+
+Blocked attention keeps the score tensor at [.., q_block, kv_block] so 32k
+prefill fits in HBM; the online-softmax recurrence is the standard
+FlashAttention algorithm expressed in lax.scan (XLA fuses it well on TPU; a
+Pallas flash kernel is a beyond-paper optimization tracked in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.layers import (Params, apply_mrope, apply_rope, init_linear,
+                                 linear)
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   qkv_bias: bool = False, dtype=jnp.float32,
+                   split_heads: bool = False) -> Params:
+    """``split_heads=True`` stores projections as [d, H, dh] (3D) so the
+    head axis is a real param dim — sharding then never straddles a reshape
+    boundary (kills GSPMD's involuntary resharding permutes when
+    H % mesh != 0; see EXPERIMENTS.md §Perf)."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    if not split_heads:
+        return {
+            "wq": init_linear(kq, d_model, n_heads * head_dim, bias=qkv_bias, dtype=dtype),
+            "wk": init_linear(kk, d_model, n_kv * head_dim, bias=qkv_bias, dtype=dtype),
+            "wv": init_linear(kv, d_model, n_kv * head_dim, bias=qkv_bias, dtype=dtype),
+            "wo": init_linear(ko, n_heads * head_dim, d_model, dtype=dtype),
+        }
+    import math as _m
+    s = 1.0 / _m.sqrt(d_model)
+    p = {
+        "wq3": {"w": jax.random.normal(kq, (d_model, n_heads, head_dim), dtype) * s},
+        "wk3": {"w": jax.random.normal(kk, (d_model, n_kv, head_dim), dtype) * s},
+        "wv3": {"w": jax.random.normal(kv, (d_model, n_kv, head_dim), dtype) * s},
+        "wo3": {"w": jax.random.normal(ko, (n_heads, head_dim, d_model), dtype)
+                * (1.0 / _m.sqrt(n_heads * head_dim))},
+    }
+    if qkv_bias:
+        for k, h in (("wq3", n_heads), ("wk3", n_kv), ("wv3", n_kv)):
+            p[k]["b"] = jnp.zeros((h, head_dim), dtype)
+    return p
+
+
+def _proj_qkv(p: Params, name: str, x: jax.Array, B: int, S: int, H: int,
+              D: int, quant: str, cd) -> jax.Array:
+    """Project to [B, S, H, D] through either the fused-2D or split-3D params."""
+    if name + "3" in p:
+        w = p[name + "3"]["w"].astype(cd)
+        y = jnp.einsum("bsd,dhk->bshk", x.astype(cd), w)
+        if "b" in p[name + "3"]:
+            y = y + p[name + "3"]["b"].astype(cd)
+        return y
+    return linear(p[name], x, quant, cd).reshape(B, S, H, D)
+
+
+def _proj_out(p: Params, out: jax.Array, B: int, S: int, H: int, D: int,
+              quant: str, cd) -> jax.Array:
+    if "wo3" in p:
+        return jnp.einsum("bshk,hkd->bsd", out.astype(cd),
+                          p["wo3"]["w"].astype(cd))
+    return linear(p["wo"], out.reshape(B, S, H * D).astype(cd), quant, cd)
+
+
+def _mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """[..., q, k] boolean keep-mask from absolute positions.
+
+    Negative key positions are sentinels for padding / unwritten cache slots
+    and are always masked out.
+    """
+    m = (k_pos >= 0)[..., None, :]
+    m = jnp.broadcast_to(m, q_pos.shape[:-1]
+                         + (q_pos.shape[-1], k_pos.shape[-1]))
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    if causal:
+        m = m & (d >= 0)
+    if window is not None:
+        m = m & (d < window)
+    return m
+
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, k_pos: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      logit_softcap: Optional[float] = None,
+                      kv_block: int = 1024) -> jax.Array:
+    """q: [B,S,Hq,D], k/v: [B,T,Hkv,D]; GQA via head grouping (no KV repeat).
+
+    Scans over KV blocks with online softmax; score memory is
+    O(B * Hq * S * kv_block).  K/V stay in their storage dtype — the score
+    matmul accumulates in fp32 via ``preferred_element_type`` instead of
+    materializing fp32 copies of the (possibly huge) K/V.
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = (q.reshape(B, S, Hkv, G, D) * jnp.asarray(scale, q.dtype))
+
+    nblk = -(-T // kv_block)
+    pad = nblk * kv_block - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-(10 ** 9))
+    kb = k.reshape(B, nblk, kv_block, Hkv, D)
+    vb = v.reshape(B, nblk, kv_block, Hkv, D)
+    pb = k_pos.reshape(B, nblk, kv_block)
+
+    def step(carry, blk):
+        m_run, l_run, acc = carry
+        kj, vj, pj = blk                      # [B,kb,Hkv,D], [B,kb]
+        s = jnp.einsum("bshgd,bkhd->bshgk", qg, kj,
+                       preferred_element_type=jnp.float32)
+        if logit_softcap is not None:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        keep = _mask(q_pos, pj, causal, window)   # [B, S, kb]
+        s = jnp.where(keep[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bshgk,bkhd->bshgd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, S, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, S, Hkv, G, D), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.moveaxis(pb, 1, 0)))
+    out = acc / jnp.maximum(l_f[..., None], 1e-30)
+    return out.reshape(B, S, Hq, D)
+
+
+def full_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                   logit_softcap=None, bias=None) -> jax.Array:
+    """Unblocked reference path (tests + short sequences + decode).
+
+    K/V stay in storage dtype (fp32 accumulation via preferred_element_type)
+    — for a 32k decode cache this avoids a 2x fp32 materialization.
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D) * jnp.asarray(1.0 / math.sqrt(D), q.dtype)
+    s = jnp.einsum("bshgd,bkhd->bshgk", qg, k,
+                   preferred_element_type=jnp.float32)
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    if bias is not None:
+        s = s + bias
+    keep = _mask(q_pos, k_pos, causal, window)
+    s = jnp.where(keep[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bshgk,bkhd->bshgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, Hq, D)
+
+
+def attention(p: Params, x: jax.Array, positions: jax.Array, *,
+              n_heads: int, n_kv: int, head_dim: int,
+              causal: bool = True, window: Optional[int] = None,
+              logit_softcap: Optional[float] = None,
+              rope_theta: float = 10000.0, rope_mode: str = "rope",
+              mrope_sections: tuple[int, ...] = (),
+              mrope_positions: Optional[jax.Array] = None,
+              kv_block: int = 1024, quant: str = "none",
+              compute_dtype=jnp.bfloat16,
+              return_kv: bool = False):
+    """Self-attention over a full sequence (train / prefill)."""
+    B, S, _ = x.shape
+    q = _proj_qkv(p, "wq", x, B, S, n_heads, head_dim, quant, compute_dtype)
+    k = _proj_qkv(p, "wk", x, B, S, n_kv, head_dim, quant, compute_dtype)
+    v = _proj_qkv(p, "wv", x, B, S, n_kv, head_dim, quant, compute_dtype)
+    if rope_mode == "mrope":
+        mpos = mrope_positions
+        if mpos is None:
+            mpos = jnp.broadcast_to(positions[..., None], positions.shape + (3,))
+        q = apply_mrope(q, mpos, mrope_sections, rope_theta)
+        k = apply_mrope(k, mpos, mrope_sections, rope_theta)
+    elif rope_mode == "rope":
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    if S <= 2 * kv_block:
+        out = full_attention(q, k, v, positions, positions, causal=causal,
+                             window=window, logit_softcap=logit_softcap)
+    else:
+        out = blocked_attention(q, k, v, positions, positions, causal=causal,
+                                window=window, logit_softcap=logit_softcap,
+                                kv_block=kv_block)
+    out = constrain(out.astype(compute_dtype), "batch", None, "heads", None)
+    y = _proj_out(p, out, B, S, n_heads, head_dim, quant, compute_dtype)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def decode_attention(p: Params, x: jax.Array, cache_k: jax.Array,
+                     cache_v: jax.Array, pos: jax.Array, *,
+                     n_heads: int, n_kv: int, head_dim: int,
+                     window: Optional[int] = None,
+                     logit_softcap: Optional[float] = None,
+                     rope_theta: float = 10000.0, rope_mode: str = "rope",
+                     mrope_sections: tuple[int, ...] = (),
+                     rolling: bool = False,
+                     quant: str = "none", compute_dtype=jnp.bfloat16):
+    """One decode step. x: [B, 1, d]; cache: [B, T, Hkv, D]; pos: scalar int32.
+
+    Returns (y, new_cache_k, new_cache_v).  With ``rolling=True`` the cache is
+    a ring buffer of size ``window`` (SWA serving — bounded memory, the
+    Mistral/Mixtral rolling cache).
+    """
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    q = _proj_qkv(p, "wq", x, B, 1, n_heads, head_dim, quant, compute_dtype)
+    k = _proj_qkv(p, "wk", x, B, 1, n_kv, head_dim, quant, compute_dtype)
+    v = _proj_qkv(p, "wv", x, B, 1, n_kv, head_dim, quant, compute_dtype)
+    posb = jnp.broadcast_to(pos[None], (B,))[:, None]          # [B,1]
+    if rope_mode == "mrope":
+        mpos = jnp.broadcast_to(posb[..., None], (B, 1, 3))
+        q = apply_mrope(q, mpos, mrope_sections, rope_theta)
+        k = apply_mrope(k, mpos, mrope_sections, rope_theta)
+    elif rope_mode == "rope":
+        q = apply_rope(q, posb, rope_theta)
+        k = apply_rope(k, posb, rope_theta)
+    slot = jnp.where(jnp.asarray(rolling), pos % T, jnp.minimum(pos, T - 1))
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    # absolute positions of cache slots
+    idx = jnp.arange(T)
+    if rolling:
+        # slot i holds absolute position: the largest p <= pos with p % T == i
+        k_pos = pos - ((pos - idx) % T)
+        k_pos = jnp.where(k_pos < 0, -(10 ** 9), k_pos)
+    else:
+        k_pos = jnp.where(idx <= pos, idx, -(10 ** 9))
+    k_pos = jnp.broadcast_to(k_pos[None], (B, T))
+    out = full_attention(q, cache_k, cache_v, posb, k_pos, causal=True,
+                         window=window, logit_softcap=logit_softcap)
+    y = _proj_out(p, out.astype(compute_dtype), B, 1, n_heads, head_dim,
+                  quant, compute_dtype)
+    return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# int8-quantized KV cache decode (beyond-paper: the paper's integer-MAC idea
+# applied to the decode bottleneck — KV bytes halve vs bf16, QK^T and PV run
+# as int8 MACs with fp32 rescale; per-token-per-head scales)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jax.Array):
+    """x: [B, T, H, D] -> (int8 codes, scales [B, T, H])."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                        1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_kv_attention(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
+                      v_q: jax.Array, v_scale: jax.Array,
+                      q_pos: jax.Array, k_pos: jax.Array, *,
+                      window: Optional[int] = None,
+                      logit_softcap: Optional[float] = None) -> jax.Array:
+    """Decode attention over an int8 cache. q: [B,1,Hq,D] float."""
+    B, S, Hq, D = q.shape
+    Hkv = k_q.shape[2]
+    G = Hq // Hkv
+    # integer QK^T: quantize q per (b, head) row
+    qg = q.reshape(B, S, Hkv, G, D)
+    q_scale = jnp.maximum(jnp.max(jnp.abs(qg.astype(jnp.float32)), axis=-1),
+                          1e-8) / 127.0
+    q_int = jnp.clip(jnp.round(qg.astype(jnp.float32) / q_scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+    s_int = jnp.einsum("bshgd,bkhd->bshgk", q_int, k_q,
+                       preferred_element_type=jnp.int32)
+    # scale[b,s,h,g,t] = q_scale[b,s,h,g] * k_scale[b,t,h]
+    scale = q_scale[..., None] \
+        * jnp.moveaxis(k_scale, 1, -1)[:, None, :, None, :]
+    s = s_int.astype(jnp.float32) * scale / math.sqrt(D)
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    keep = _mask(q_pos, k_pos, True, window)
+    s = jnp.where(keep[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # integer PV: fold the per-key v_scale into p (exact), then quantize the
+    # effective probabilities to int8 rows
+    vs = jnp.moveaxis(v_scale, 1, -1)[:, None, :, None, :]   # [B,1,Hkv,1,T]
+    p_eff = p * vs
+    p_scale = jnp.maximum(jnp.max(jnp.abs(p_eff), axis=-1), 1e-12) / 127.0
+    p_int = jnp.round(p_eff / p_scale[..., None]).astype(jnp.int8)
+    o_int = jnp.einsum("bshgk,bkhd->bshgd", p_int, v_q,
+                       preferred_element_type=jnp.int32)
+    o = o_int.astype(jnp.float32) * p_scale[..., None]
+    return o.reshape(B, S, Hq, D)
+
+
+def decode_attention_int8(p: Params, x: jax.Array, cache: dict,
+                          pos: jax.Array, *, n_heads: int, n_kv: int,
+                          head_dim: int, window: Optional[int] = None,
+                          logit_softcap: Optional[float] = None,
+                          rope_theta: float = 10000.0, rope_mode: str = "rope",
+                          mrope_sections: tuple[int, ...] = (),
+                          quant: str = "none", compute_dtype=jnp.bfloat16):
+    """One decode step over an int8-quantized cache.
+
+    cache: {"k": s8[B,T,Hkv,D], "v": s8, "k_scale": f32[B,T,Hkv],
+            "v_scale": f32[B,T,Hkv]}.
+    """
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    q = _proj_qkv(p, "wq", x, B, 1, n_heads, head_dim, quant, compute_dtype)
+    k = _proj_qkv(p, "wk", x, B, 1, n_kv, head_dim, quant, compute_dtype)
+    v = _proj_qkv(p, "wv", x, B, 1, n_kv, head_dim, quant, compute_dtype)
+    posb = jnp.broadcast_to(pos[None], (B,))[:, None]
+    if rope_mode == "rope":
+        q = apply_rope(q, posb, rope_theta)
+        k = apply_rope(k, posb, rope_theta)
+    elif rope_mode == "mrope":
+        mpos = jnp.broadcast_to(posb[..., None], (B, 1, 3))
+        q = apply_mrope(q, mpos, mrope_sections, rope_theta)
+        k = apply_mrope(k, mpos, mrope_sections, rope_theta)
+    k_new, ks_new = quantize_kv(k)
+    v_new, vs_new = quantize_kv(v)
+    slot = jnp.minimum(pos, T - 1)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, 1)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, 1)
+    cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_scale"], ks_new, slot, 1)
+    cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v_scale"], vs_new, slot, 1)
+    idx = jnp.arange(T)
+    k_pos = jnp.broadcast_to(jnp.where(idx <= pos, idx, -(10 ** 9))[None],
+                             (B, T))
+    out = int8_kv_attention(q, cache["k"], cache["k_scale"], cache["v"],
+                            cache["v_scale"], posb, k_pos, window=window,
+                            logit_softcap=logit_softcap)
+    y = _proj_out(p, out.astype(compute_dtype), B, 1, n_heads, head_dim,
+                  quant, compute_dtype)
+    return y, cache
+
+
+def cross_attention(p: Params, x: jax.Array, enc: jax.Array, *,
+                    n_heads: int, n_kv: int, head_dim: int,
+                    quant: str = "none", compute_dtype=jnp.bfloat16):
+    """Encoder-decoder cross attention (Whisper decoder)."""
+    B, S, _ = x.shape
+    T = enc.shape[1]
+    q = linear(p["wq"], x, quant, compute_dtype).reshape(B, S, n_heads, head_dim)
+    k = linear(p["wk"], enc, quant, compute_dtype).reshape(B, T, n_kv, head_dim)
+    v = linear(p["wv"], enc, quant, compute_dtype).reshape(B, T, n_kv, head_dim)
+    q_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    k_pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    out = full_attention(q, k, v, q_pos, k_pos, causal=False)
+    return linear(p["wo"], out.reshape(B, S, n_heads * head_dim).astype(compute_dtype),
+                  quant, compute_dtype)

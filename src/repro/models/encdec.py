@@ -1,0 +1,244 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, enc_seq, d_model]; the encoder is 32 layers
+of bidirectional attention + GELU MLP (LayerNorm, sinusoidal positions), the
+decoder is causal self-attention + cross-attention to the encoder output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import attention as attn_lib
+from repro.models.layers import (init_embedding, init_linear, init_mlp,
+                                 init_norm, layer_norm, linear, mlp)
+from repro.models.transformer import ModelConfig
+
+
+def sinusoids(length: int, d: int) -> jnp.ndarray:
+    log_timescale = math.log(10000.0) / (d // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(d // 2, dtype=jnp.float32))
+    t = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": {"scale": jnp.ones((cfg.d_model,), cfg.pdtype),
+                "bias": jnp.zeros((cfg.d_model,), cfg.pdtype)},
+        "attn": attn_lib.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                        cfg.head_dim, True, cfg.pdtype),
+        "ln2": {"scale": jnp.ones((cfg.d_model,), cfg.pdtype),
+                "bias": jnp.zeros((cfg.d_model,), cfg.pdtype)},
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, "gelu", cfg.pdtype),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    ln = lambda: {"scale": jnp.ones((cfg.d_model,), cfg.pdtype),
+                  "bias": jnp.zeros((cfg.d_model,), cfg.pdtype)}
+    return {
+        "ln1": ln(),
+        "self_attn": attn_lib.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                             cfg.n_kv, cfg.head_dim, True,
+                                             cfg.pdtype),
+        "ln_x": ln(),
+        "cross_attn": attn_lib.init_attention(k2, cfg.d_model, cfg.n_heads,
+                                              cfg.n_kv, cfg.head_dim, True,
+                                              cfg.pdtype),
+        "ln2": ln(),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, "gelu", cfg.pdtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    nE, nD = cfg.n_enc_layers, cfg.n_layers
+    keys = jax.random.split(key, nE + nD + 3)
+    enc = [ _init_enc_block(keys[i], cfg) for i in range(nE) ]
+    dec = [ _init_dec_block(keys[nE + i], cfg) for i in range(nD) ]
+    stack = lambda blocks: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                                  *blocks)
+    ln = lambda: {"scale": jnp.ones((cfg.d_model,), cfg.pdtype),
+                  "bias": jnp.zeros((cfg.d_model,), cfg.pdtype)}
+    return {
+        "enc_blocks": stack(enc),
+        "dec_blocks": stack(dec),
+        "enc_ln": ln(),
+        "dec_ln": ln(),
+        "embed": init_embedding(keys[-1], cfg.vocab, cfg.d_model, cfg.pdtype),
+    }
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: [B, T_enc, d_model] (stub frontend output)."""
+    cd = cfg.cdtype
+    B, T, _ = frames.shape
+    x = frames.astype(cd) + sinusoids(T, cfg.d_model).astype(cd)[None]
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    q = cfg.quant
+
+    def body(x, bp):
+        h = layer_norm(bp["ln1"], x)
+        x = x + attn_lib.attention(bp["attn"], h, pos, n_heads=cfg.n_heads,
+                                   n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                                   causal=False, rope_mode="none",
+                                   kv_block=cfg.kv_block, quant=q,
+                                   compute_dtype=cd)
+        h = layer_norm(bp["ln2"], x)
+        x = x + mlp(bp["mlp"], h, "gelu", q, cd)
+        return constrain(x, "batch", "seq", None), None
+
+    body_fn = body
+    if cfg.remat != "none":
+        body_fn = jax.checkpoint(body, prevent_cse=False)
+    from repro.models.transformer import maybe_scan
+    x, _ = maybe_scan(body_fn, x, params["enc_blocks"], cfg.unroll_groups)
+    return layer_norm(params["enc_ln"], x)
+
+
+def dec_forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                enc_out: jax.Array, return_cache: bool = False):
+    cd = cfg.cdtype
+    B, S = tokens.shape
+    x = params["embed"]["emb"].astype(cd)[tokens]
+    x = x + sinusoids(S, cfg.d_model).astype(cd)[None]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    q = cfg.quant
+
+    def body(x, bp):
+        h = layer_norm(bp["ln1"], x)
+        y, (k, v) = attn_lib.attention(bp["self_attn"], h, pos,
+                                       n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                                       head_dim=cfg.head_dim, causal=True,
+                                       rope_mode="none", kv_block=cfg.kv_block,
+                                       quant=q, compute_dtype=cd,
+                                       return_kv=True)
+        x = x + y
+        h = layer_norm(bp["ln_x"], x)
+        x = x + attn_lib.cross_attention(bp["cross_attn"], h, enc_out,
+                                         n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                                         head_dim=cfg.head_dim, quant=q,
+                                         compute_dtype=cd)
+        h = layer_norm(bp["ln2"], x)
+        x = x + mlp(bp["mlp"], h, "gelu", q, cd)
+        x = constrain(x, "batch", "seq", None)
+        return x, ((k.astype(cd), v.astype(cd)) if return_cache else None)
+
+    body_fn = body
+    if cfg.remat != "none":
+        body_fn = jax.checkpoint(body, prevent_cse=False)
+    from repro.models.transformer import maybe_scan
+    x, kv = maybe_scan(body_fn, x, params["dec_blocks"], cfg.unroll_groups)
+    x = layer_norm(params["dec_ln"], x)
+    logits = x @ params["embed"]["emb"].astype(cd).T
+    logits = constrain(logits, "batch", "seq", "vocab")
+    if return_cache:
+        return logits, kv
+    return logits
+
+
+def prefill(params: dict, cfg: ModelConfig, frames: jax.Array,
+            tokens: jax.Array):
+    """Encode + decoder prefill. Returns (last-token logits, cache)."""
+    enc_out = encode(params, cfg, frames)
+    logits, (ks, vs) = dec_forward(params, cfg, tokens, enc_out,
+                                   return_cache=True)
+    cache = {"k": ks, "v": vs}
+    cache = precompute_cross_kv(params, cfg, enc_out, cache)
+    return logits[:, -1].astype(jnp.float32), cache
+
+
+def forward(params: dict, cfg: ModelConfig, frames: jax.Array,
+            tokens: jax.Array) -> jax.Array:
+    return dec_forward(params, cfg, tokens, encode(params, cfg, frames))
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    logits = forward(params, cfg, batch["frames"], batch["tokens"])
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# serving: decoder KV-cache decode with precomputed cross-attention K/V
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    cd = cfg.cdtype
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv, cfg.head_dim), cd),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv, cfg.head_dim), cd),
+        "xk": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv, cfg.head_dim), cd),
+        "xv": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv, cfg.head_dim), cd),
+    }
+
+
+def precompute_cross_kv(params: dict, cfg: ModelConfig, enc_out: jax.Array,
+                        cache: dict) -> dict:
+    cd = cfg.cdtype
+    B, T, _ = enc_out.shape
+
+    def per_layer(bp):
+        k = linear(bp["cross_attn"]["wk"], enc_out, cfg.quant, cd)
+        v = linear(bp["cross_attn"]["wv"], enc_out, cfg.quant, cd)
+        return (k.reshape(B, T, cfg.n_kv, cfg.head_dim),
+                v.reshape(B, T, cfg.n_kv, cfg.head_dim))
+
+    xk, xv = jax.vmap(per_layer)(params["dec_blocks"])
+    return {**cache, "xk": xk.astype(cd), "xv": xv.astype(cd)}
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
+                cache: dict, pos: jax.Array):
+    """token: [B]; returns (logits [B, V], cache)."""
+    cd = cfg.cdtype
+    B = token.shape[0]
+    x = params["embed"]["emb"].astype(cd)[token][:, None, :]
+    T = cache["k"].shape[2]
+    pe = jax.lax.dynamic_slice_in_dim(sinusoids(T, cfg.d_model).astype(cd),
+                                      jnp.minimum(pos, T - 1), 1, axis=0)
+    x = x + pe[None, 0:1]
+    q = cfg.quant
+
+    def body(carry, scanned):
+        x, = carry
+        bp, ck, cv, xk, xv = scanned
+        h = layer_norm(bp["ln1"], x)
+        y, ck, cv = attn_lib.decode_attention(
+            bp["self_attn"], h, ck, cv, pos, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv, head_dim=cfg.head_dim, rope_mode="none",
+            quant=q, compute_dtype=cd)
+        x = x + y
+        h = layer_norm(bp["ln_x"], x)
+        qh = linear(bp["cross_attn"]["wq"], h, q, cd).reshape(
+            B, 1, cfg.n_heads, cfg.head_dim)
+        pos_q = jnp.zeros((B, 1), jnp.int32)
+        pos_k = jnp.broadcast_to(jnp.arange(xk.shape[1], dtype=jnp.int32)[None],
+                                 (B, xk.shape[1]))
+        o = attn_lib.full_attention(qh, xk, xv, pos_q, pos_k, causal=False)
+        x = x + linear(bp["cross_attn"]["wo"],
+                       o.reshape(B, 1, cfg.n_heads * cfg.head_dim).astype(cd),
+                       q, cd)
+        h = layer_norm(bp["ln2"], x)
+        x = x + mlp(bp["mlp"], h, "gelu", q, cd)
+        return (x,), (ck, cv)
+
+    from repro.models.transformer import maybe_scan
+    (x,), (ks, vs) = maybe_scan(
+        body, (x,), (params["dec_blocks"], cache["k"], cache["v"],
+                     cache["xk"], cache["xv"]), cfg.unroll_groups)
+    cache = {**cache, "k": ks, "v": vs}
+    x = layer_norm(params["dec_ln"], x)
+    logits = (x[:, 0] @ params["embed"]["emb"].astype(cd).T).astype(jnp.float32)
+    return logits, cache

@@ -1,0 +1,202 @@
+"""Shared layer primitives: quantizable linears, norms, rotary embeddings, MLPs.
+
+Everything is a pure function over an explicit param pytree (no flax).  Param
+initializers return nested dicts; apply functions take (params, x, cfg).
+
+The paper's technique enters through :func:`linear`: every dense projection can
+run in one of four modes (selected per-config, the LUTMUL feature being
+first-class):
+
+  * ``none``     — bf16/fp32 matmul (the unquantized baseline)
+  * ``qat``      — fake-quant W4A4 straight-through (training path, Sec. 3.6)
+  * ``w4a4_lut`` — table-lookup integer matmul (kernels/lutmul; faithful path)
+  * ``w4a4_mxu`` — int4-weight/int4-act matmul on the MXU with int32
+                   accumulation (the TPU performance embodiment)
+  * ``w8a8``     — the "DSP packing" analogue baseline
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import (A4, A8, W4, W8, QuantConfig, compute_scale,
+                                     dequantize, fake_quant, quantize)
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False,
+                dtype=jnp.float32, scale: float | None = None) -> Params:
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def init_norm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"emb": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+# ---------------------------------------------------------------------------
+# quantizable linear
+# ---------------------------------------------------------------------------
+
+def linear(p: Params, x: jax.Array, quant: str = "none",
+           compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Dense projection with selectable quantization mode (see module doc).
+
+    If the param leaf carries pre-quantized serving codes (``w_q`` +
+    ``w_scale``, produced by serve/quantize.py), the integer path is used
+    regardless of ``quant`` — weights are read from HBM as codes.
+    """
+    if "w_q" in p:
+        from repro.kernels.lutmul import ops as lut_ops
+        y = lut_ops.prequant_matmul(x, p["w_q"], p["w_scale"], mode=quant,
+                                    compute_dtype=compute_dtype)
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        return y
+    w = p["w"]
+    if quant == "none":
+        y = x.astype(compute_dtype) @ w.astype(compute_dtype)
+    elif quant == "qat":
+        wq = fake_quant(w.astype(jnp.float32), W4)
+        xq = fake_quant(jax.nn.relu(x.astype(jnp.float32)), A4) + (
+            x.astype(jnp.float32) - jax.nn.relu(x.astype(jnp.float32)))
+        # weights fake-quantized; activations fake-quantized on the positive
+        # part (threshold units emit unsigned codes), negative part passes for
+        # gradient flow on pre-activation values.
+        y = (xq @ wq).astype(compute_dtype)
+    elif quant in ("w4a4_mxu", "w8a8", "w4a4_lut"):
+        from repro.kernels.lutmul import ops as lut_ops
+        y = lut_ops.quantized_matmul(x, w, mode=quant,
+                                     compute_dtype=compute_dtype)
+    else:
+        raise ValueError(f"unknown quant mode {quant!r}")
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6,
+             zero_centered: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    if zero_centered:          # gemma-style (1 + scale)
+        scale = 1.0 + scale
+    return (xf * scale).astype(x.dtype)
+
+
+def layer_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = xf * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                     # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: tuple[int, ...],
+                theta: float = 1_000_000.0) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: [B, S, 3] (temporal, height, width) position ids; ``sections``
+    splits the D/2 frequency channels among the three components (e.g.
+    (16, 24, 24) for head_dim 128).  Text tokens carry identical t/h/w ids, in
+    which case M-RoPE degenerates to standard RoPE (tested property).
+    """
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                                # [D/2]
+    # build a per-channel position by selecting the t/h/w id per section
+    sec_ids = jnp.repeat(jnp.arange(len(sections)),
+                         jnp.array(sections), total_repeat_length=D // 2)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),                           # [B, S, 3]
+        jnp.broadcast_to(sec_ids, positions.shape[:2] + (D // 2,)).astype(jnp.int32) % 3,
+        axis=-1)                                                 # [B, S, D/2]
+    angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, kind: str = "swiglu",
+             dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"wi": init_linear(k1, d, d_ff, dtype=dtype),
+                "wg": init_linear(k2, d, d_ff, dtype=dtype),
+                "wo": init_linear(k3, d_ff, d, dtype=dtype)}
+    return {"wi": init_linear(k1, d, d_ff, dtype=dtype),
+            "wo": init_linear(k2, d_ff, d, dtype=dtype)}
+
+
+def mlp(p: Params, x: jax.Array, kind: str = "swiglu", quant: str = "none",
+        compute_dtype=jnp.bfloat16) -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(linear(p["wg"], x, quant, compute_dtype)) \
+            * linear(p["wi"], x, quant, compute_dtype)
+    elif kind == "geglu":
+        h = jax.nn.gelu(linear(p["wg"], x, quant, compute_dtype),
+                        approximate=True) \
+            * linear(p["wi"], x, quant, compute_dtype)
+    elif kind == "gelu":
+        h = jax.nn.gelu(linear(p["wi"], x, quant, compute_dtype),
+                        approximate=True)
+    elif kind == "relu_sq":                  # rwkv channel-mix style
+        h = jnp.square(jax.nn.relu(linear(p["wi"], x, quant, compute_dtype)))
+    else:
+        raise ValueError(kind)
+    return linear(p["wo"], h, quant, compute_dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

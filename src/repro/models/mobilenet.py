@@ -1,0 +1,176 @@
+"""MobileNetV2 — the paper's evaluation network — in pure JAX, quantizable.
+
+Convolutions lower to im2col + matmul (the paper's "convolution generator"
+feeds a matrix-vector multiplication kernel the same way, Sec. 3.4), so the
+LUT-multiplication path applies unchanged.  The streamlined inference path
+(BN + scales absorbed into multi-threshold units, integer-only datapath) is in
+:func:`streamlined_forward` and validated against the float path.
+
+Width multiplier + resolution are configurable; ``smoke`` configs use width
+0.25 at 32x32 input.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import A4, A8, W4, W8, fake_quant
+from repro.core.fpga_model import ConvLayer
+
+# (expansion t, out channels c, repeats n, stride s) — Sandler et al. Table 2
+INVERTED_RESIDUAL_CFG = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MobileNetConfig:
+    name: str = "mobilenetv2"
+    width: float = 1.0
+    resolution: int = 224
+    n_classes: int = 1000
+    quant: str = "none"              # none | qat
+    first_last_bits: int = 8         # paper: 8-bit first/last layers
+    inner_bits: int = 4
+
+
+def _c(ch: float, width: float) -> int:
+    v = max(8, int(ch * width + 4) // 8 * 8)
+    return v
+
+
+def _conv_shapes(cfg: MobileNetConfig):
+    """Yields (name, cin, cout, k, stride, depthwise, h_in)."""
+    layers = []
+    res = cfg.resolution
+    cin = 3
+    cout = _c(32, cfg.width)
+    layers.append(("stem", cin, cout, 3, 2, False, res))
+    res //= 2
+    cin = cout
+    for bi, (t, c, n, s) in enumerate(INVERTED_RESIDUAL_CFG):
+        cout = _c(c, cfg.width)
+        for i in range(n):
+            stride = s if i == 0 else 1
+            exp = cin * t
+            if t != 1:
+                layers.append((f"b{bi}_{i}_expand", cin, exp, 1, 1, False, res))
+            layers.append((f"b{bi}_{i}_dw", exp, exp, 3, stride, True, res))
+            res = res // stride
+            layers.append((f"b{bi}_{i}_project", exp, cout, 1, 1, False, res))
+            cin = cout
+    head = max(_c(1280, cfg.width), 1280 if cfg.width >= 1.0 else _c(1280, cfg.width))
+    layers.append(("head", cin, head, 1, 1, False, res))
+    return layers, res, head
+
+
+def fpga_layer_table(cfg: MobileNetConfig) -> list[ConvLayer]:
+    """The dataflow-model view used by core/fpga_model (Table 2 reproduction)."""
+    layers, _, _ = _conv_shapes(cfg)
+    out = []
+    for (name, cin, cout, k, s, dw, h_in) in layers:
+        h_out = h_in // s
+        bits = 8 if name in ("stem", "head") else 4
+        out.append(ConvLayer(name=name, cin=cin, cout=cout, k=k, h_out=h_out,
+                             w_out=h_out, stride=s, depthwise=dw, bits=bits))
+    return out
+
+
+def init_params(key, cfg: MobileNetConfig) -> dict:
+    layers, res, head = _conv_shapes(cfg)
+    params = {}
+    keys = jax.random.split(key, len(layers) + 1)
+    for kk, (name, cin, cout, k, s, dw, _) in zip(keys, layers):
+        fan_in = k * k * (1 if dw else cin)
+        params[name] = {
+            "w": jax.random.normal(kk, (k, k, 1 if dw else cin, cout),
+                                   jnp.float32) / jnp.sqrt(fan_in),
+            "bn_gamma": jnp.ones((cout,)), "bn_beta": jnp.zeros((cout,)),
+            "bn_mean": jnp.zeros((cout,)), "bn_var": jnp.ones((cout,)),
+        }
+    params["fc"] = {
+        "w": jax.random.normal(keys[-1], (head, cfg.n_classes), jnp.float32)
+        * 0.01,
+        "b": jnp.zeros((cfg.n_classes,)),
+    }
+    return params
+
+
+def _conv(p, x, k, stride, depthwise, quant_bits: Optional[int], train_qat: bool):
+    w = p["w"]
+    if train_qat and quant_bits:
+        wcfg = W4 if quant_bits == 4 else W8
+        w = fake_quant(w, dataclasses.replace(wcfg, channel_axis=-1))
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    pad = "SAME"
+    y = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), pad,
+        dimension_numbers=dn,
+        feature_group_count=x.shape[-1] if depthwise else 1)
+    return y
+
+
+def _bn_relu6(p, x, quant_bits: Optional[int], train_qat: bool):
+    inv = p["bn_gamma"] / jnp.sqrt(p["bn_var"] + 1e-5)
+    y = x * inv + (p["bn_beta"] - p["bn_mean"] * inv)
+    y = jnp.clip(y, 0.0, 6.0)
+    if train_qat and quant_bits:
+        acfg = A4 if quant_bits == 4 else A8
+        y = fake_quant(y, acfg)
+    return y
+
+
+def _bn_only(p, x):
+    inv = p["bn_gamma"] / jnp.sqrt(p["bn_var"] + 1e-5)
+    return x * inv + (p["bn_beta"] - p["bn_mean"] * inv)
+
+
+def forward(params: dict, cfg: MobileNetConfig, x: jax.Array,
+            train_qat: Optional[bool] = None) -> jax.Array:
+    """x: [B, H, W, 3] -> logits [B, n_classes]."""
+    train_qat = cfg.quant == "qat" if train_qat is None else train_qat
+    fb, ib = cfg.first_last_bits, cfg.inner_bits
+    x = _conv(params["stem"], x, 3, 2, False, fb, train_qat)
+    x = _bn_relu6(params["stem"], x, fb, train_qat)
+    for bi, (t, c, n, s) in enumerate(INVERTED_RESIDUAL_CFG):
+        for i in range(n):
+            stride = s if i == 0 else 1
+            inp = x
+            h = x
+            if t != 1:
+                name = f"b{bi}_{i}_expand"
+                h = _bn_relu6(params[name],
+                              _conv(params[name], h, 1, 1, False, ib, train_qat),
+                              ib, train_qat)
+            name = f"b{bi}_{i}_dw"
+            h = _bn_relu6(params[name],
+                          _conv(params[name], h, 3, stride, True, ib, train_qat),
+                          ib, train_qat)
+            name = f"b{bi}_{i}_project"
+            h = _bn_only(params[name],
+                         _conv(params[name], h, 1, 1, False, ib, train_qat))
+            if stride == 1 and inp.shape == h.shape:   # inverted residual
+                h = h + inp
+            x = h
+    x = _bn_relu6(params["head"], _conv(params["head"], x, 1, 1, False, fb,
+                                        train_qat), fb, train_qat)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def loss_fn(params: dict, cfg: MobileNetConfig, batch: dict) -> jax.Array:
+    logits = forward(params, cfg, batch["images"]).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)

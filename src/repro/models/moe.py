@@ -1,0 +1,180 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based scatter dispatch
+(+ optional shared experts, Qwen-MoE style).
+
+TPU-native dispatch: fixed-shape scatter into an [E, C, d] buffer (tokens over
+capacity are dropped, GShard-style), batched expert matmuls via einsum, and a
+gather-combine.  Expert weights carry a leading E dim so expert parallelism is
+just a sharding rule ("expert" -> "model"); the dispatch scatter/gather then
+lowers to all-to-alls under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.layers import Params, init_linear, linear
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert ff
+    capacity_factor: float = 1.25
+    shared_ff: int = 0             # 0 = no shared expert branch
+    norm_topk: bool = True
+    router_aux_weight: float = 0.01
+    dispatch: str = "global"       # global (one cross-device buffer) |
+                                   # grouped (per-sequence groups; §Perf B3)
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    E, F = cfg.n_experts, cfg.d_ff
+    s = 1.0 / (d_model ** 0.5)
+    p = {
+        "router": init_linear(ks[0], d_model, E, dtype=dtype),
+        "wi": jax.random.normal(ks[1], (E, d_model, F), dtype) * s,
+        "wg": jax.random.normal(ks[2], (E, d_model, F), dtype) * s,
+        "wo": jax.random.normal(ks[3], (E, F, d_model), dtype) * (1.0 / F ** 0.5),
+    }
+    if cfg.shared_ff:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d_model, cfg.shared_ff, "swiglu", dtype)
+        p["shared_gate"] = init_linear(ks[5], d_model, 1, dtype=dtype)
+    return p
+
+
+def _expert_einsum(a: jax.Array, w, compute_dtype, out_contract: bool = False
+                   ) -> jax.Array:
+    """einsum('ecd,edf->ecf') for float weights or pre-quantized codes.
+
+    The weight is cast to compute dtype and re-constrained to its TP-only
+    layout *at the use site*: under FSDP the contracting dim is data-sharded,
+    and letting XLA contract a sharded dim turns every expert matmul into a
+    partial-sum all-reduce of the (huge) activation buffer — 6.3 TB/step on
+    mixtral train_4k.  Re-gathering bf16 weights instead costs ~2 orders of
+    magnitude less (§Perf iteration B4)."""
+    if not isinstance(w, dict):
+        # NOTE: an earlier iteration (§Perf B4) re-constrained the bf16 cast
+        # to a TP-only layout here to force weight re-gather over the FSDP
+        # axis; under GSPMD this regressed badly (XLA replicated the expert
+        # compute). The identified follow-up is an explicit shard_map for the
+        # expert block; the plain cast below at least keeps gathers in bf16.
+        return jnp.einsum("ecd,edf->ecf", a, w.astype(compute_dtype))
+    w_q, w_scale = w["w_q"], w["w_scale"]
+    if w_q.dtype == jnp.uint8:                   # packed int4
+        from repro.core.lut import unpack_int4
+        w_int = jnp.swapaxes(
+            unpack_int4(jnp.swapaxes(w_q, -1, -2), signed=True), -1, -2)
+        qmax = 7
+    else:
+        w_int, qmax = w_q, 127
+    a_scale = jnp.maximum(
+        jnp.max(jnp.abs(a.astype(jnp.float32)), axis=-1, keepdims=True),
+        1e-8) / qmax
+    a_q = jnp.clip(jnp.round(a / a_scale.astype(a.dtype)), -qmax - 1, qmax
+                   ).astype(jnp.int8)
+    acc = jnp.einsum("ecd,edf->ecf", a_q, w_int,
+                     preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * a_scale * w_scale
+            ).astype(compute_dtype)
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: MoEConfig, *, quant: str = "none",
+            compute_dtype=jnp.bfloat16, deterministic_capacity: Optional[int] = None):
+    """x: [B, S, d] -> (y, aux_loss).
+
+    ``dispatch="grouped"`` (default): each batch row is its own routing group
+    (GShard group_size = S).  Because the batch dim is data-sharded and groups
+    never interact, the scatter/gather dispatch is **collective-free** — the
+    global-buffer variant costs TBs of all-reduce per step at mixtral scale
+    (EXPERIMENTS.md §Perf iteration B3).  Trade-off: capacity is enforced
+    per-sequence, so unbalanced single sequences drop more tokens at equal
+    capacity_factor.
+    """
+    if cfg.dispatch == "grouped":
+        C = deterministic_capacity or max(
+            cfg.top_k, int(x.shape[1] * cfg.top_k / cfg.n_experts
+                           * cfg.capacity_factor))
+
+        def one_group(xg):
+            y, aux = _moe_dispatch_flat(p, xg, cfg, quant=quant,
+                                        compute_dtype=compute_dtype,
+                                        capacity=C, constrain_bufs=False)
+            return y, aux
+
+        y, aux = jax.vmap(one_group)(x)
+        y = constrain(y, "batch", None, None)
+        return y, jnp.mean(aux)
+    B, S, d = x.shape
+    y, aux = _moe_dispatch_flat(p, x.reshape(B * S, d), cfg, quant=quant,
+                                compute_dtype=compute_dtype,
+                                capacity=deterministic_capacity)
+    return y.reshape(B, S, d), aux
+
+
+def _moe_dispatch_flat(p: Params, xf: jax.Array, cfg: MoEConfig, *,
+                       quant: str, compute_dtype, capacity: Optional[int],
+                       constrain_bufs: bool = True):
+    """Capacity-based dispatch over a flat token list [T, d]."""
+    T, d = xf.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity or max(1, int(T * k / E * cfg.capacity_factor))
+
+    logits = linear(p["router"], xf.astype(jnp.float32), "none", jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # [T, E]
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)             # [T, k]
+    if cfg.norm_topk:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # position of each (token, slot) within its expert
+    flat_e = expert_ids.reshape(-1)                              # [T*k]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # [T*k, E]
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot               # exclusive
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+    token_of = jnp.repeat(jnp.arange(T), k)
+
+    safe_pos = jnp.where(keep, pos, C - 1)
+    buf = jnp.zeros((E, C, d), compute_dtype)
+    contrib = jnp.where(keep[:, None], xf[token_of].astype(compute_dtype), 0)
+    buf = buf.at[flat_e, safe_pos].add(
+        jnp.where(keep[:, None], contrib, 0))
+    if constrain_bufs:
+        buf = constrain(buf, "expert", "moe_capacity", None)
+
+    # batched expert SwiGLU (weights may be pre-quantized serving codes)
+    h = _expert_einsum(buf, p["wi"], compute_dtype)
+    g = _expert_einsum(buf, p["wg"], compute_dtype)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * h
+    if constrain_bufs:
+        h = constrain(h, "expert", "moe_capacity", "expert_mlp")
+    out = _expert_einsum(h, p["wo"], compute_dtype, out_contract=True)
+    if constrain_bufs:
+        out = constrain(out, "expert", "moe_capacity", None)
+
+    # combine
+    gathered = out[flat_e, safe_pos]                             # [T*k, d]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = gate_vals.reshape(-1).astype(jnp.float32)
+    yf = jax.ops.segment_sum(gathered.astype(jnp.float32) * w[:, None],
+                             token_of, num_segments=T)
+    y = yf.astype(compute_dtype)
+
+    if "shared" in p:
+        from repro.models.layers import mlp
+        sg = jax.nn.sigmoid(
+            linear(p["shared_gate"], xf.astype(jnp.float32), "none", jnp.float32))
+        y = y + (sg * mlp(p["shared"], xf, "swiglu", quant,
+                          compute_dtype).astype(jnp.float32)).astype(compute_dtype)
+    return y, aux

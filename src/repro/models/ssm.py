@@ -1,0 +1,330 @@
+"""State-space / linear-recurrence blocks: Mamba2 (SSD, chunked) and RWKV6.
+
+Both use the chunked formulation: within-chunk interactions are dense matmuls
+(MXU-friendly), cross-chunk state is carried by a lax.scan — the TPU-native
+adaptation of the recurrences (GPU implementations use fused scans; on TPU the
+matmul-rich chunk form is the right decomposition).
+
+Decode paths carry explicit recurrent state (O(1) per token) — this is what
+makes the ``long_500k`` shape tractable for these families.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.layers import Params, init_linear, linear
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def init_mamba2(key, d_model: int, d_inner: int, d_state: int, n_heads: int,
+                d_conv: int = 4, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    head_p = d_inner // n_heads
+    return {
+        # order: [z, x, B, C, dt]
+        "in_proj": init_linear(ks[0], d_model,
+                               2 * d_inner + 2 * d_state + n_heads, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (d_conv, d_inner + 2 * d_state),
+                                    dtype) * 0.1,
+        "conv_b": jnp.zeros((d_inner + 2 * d_state,), dtype),
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "out_proj": init_linear(ks[2], d_inner, d_model, dtype=dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _pick_chunk(T: int, target: int) -> int:
+    """Largest divisor of T not exceeding target (static shapes only)."""
+    c = min(target, T)
+    while T % c:
+        c -= 1
+    return c
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. x: [B,T,C]; w: [K,C]. Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(K)[None, :]
+    windows = xp[:, idx]                              # [B,T,K,C]
+    y = jnp.einsum("btkc,kc->btc", windows, w.astype(x.dtype)) + b.astype(x.dtype)
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return y, new_state
+
+
+def mamba2(p: Params, x: jax.Array, *, d_inner: int, d_state: int,
+           n_heads: int, chunk: int = 128, quant: str = "none",
+           compute_dtype=jnp.bfloat16, return_state: bool = False):
+    """Full-sequence Mamba2 (training / prefill). x: [B, T, d_model]."""
+    B, T, _ = x.shape
+    head_p = d_inner // n_heads
+    zxbcdt = linear(p["in_proj"], x, quant, compute_dtype)
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + d_state,
+                 2 * d_inner + 2 * d_state], axis=-1)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    conv_tail = conv_in[:, T - (p["conv_w"].shape[0] - 1):]
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+    xs = xs.reshape(B, T, n_heads, head_p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # [B,T,H]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [H]
+    y, h_final = _ssd_chunked(xs.astype(jnp.float32), dt, a,
+                              Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+                              chunk=_pick_chunk(T, chunk))
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, T, d_inner)
+    # gated RMSNorm (mamba2 norm-before-gate)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = linear(p["out_proj"], y.astype(compute_dtype), quant, compute_dtype)
+    if return_state:
+        return out, Mamba2State(h=h_final, conv=conv_tail)
+    return out
+
+
+def _ssd_chunked(xs, dt, a, Bc, Cc, chunk: int):
+    """SSD: h_t = exp(a*dt_t) h_{t-1} + dt_t * B_t x_t ;  y_t = C_t . h_t.
+
+    xs: [B,T,H,P] dt: [B,T,H] a: [H] Bc/Cc: [B,T,N].  All fp32.
+    """
+    B, T, H, P = xs.shape
+    N = Bc.shape[-1]
+    nc = T // chunk
+    xs = xs.reshape(B, nc, chunk, H, P)
+    dt = dt.reshape(B, nc, chunk, H)
+    Bc = Bc.reshape(B, nc, chunk, N)
+    Cc = Cc.reshape(B, nc, chunk, N)
+    la = a[None, None, None, :] * dt                     # [B,nc,c,H] log decays
+    cum = jnp.cumsum(la, axis=2)                         # inclusive
+    # intra-chunk: M[t,s] = exp(cum_t - cum_s) * (C_t.B_s) * dt_s,  s <= t
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,t,s,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bgtn,bgsn->bgts", Cc, Bc)
+    M = cb[..., None] * decay * dt[:, :, None, :, :]       # [B,nc,t,s,H]
+    y_intra = jnp.einsum("bgtsh,bgshp->bgthp", M, xs)
+    # chunk summaries: state contribution of each chunk
+    last = cum[:, :, -1:, :]                                # [B,nc,1,H]
+    k_fac = jnp.exp(last - cum) * dt                        # [B,nc,c,H]
+    chunk_state = jnp.einsum("bgcn,bgch,bgchp->bghnp", Bc, k_fac, xs)
+    chunk_decay = jnp.exp(last[:, :, 0, :])                 # [B,nc,H]
+
+    def scan_fn(h, inp):
+        cs, cd = inp                                        # [B,H,N,P], [B,H]
+        h_new = h * cd[:, :, None, None] + cs
+        return h_new, h
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(chunk_state, 1, 0),
+                      jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                   # [B,nc,H,N,P] state entering chunk
+    y_inter = jnp.einsum("bgtn,bgth,bghnp->bgthp",
+                         Cc, jnp.exp(cum), h_prevs)
+    y = (y_intra + y_inter).reshape(B, T, H, P)
+    return y, h_final
+
+
+class Mamba2State(NamedTuple):
+    h: jax.Array          # [B, H, N, P] ssm state
+    conv: jax.Array       # [B, d_conv-1, d_inner+2N] conv tail
+
+
+def mamba2_decode(p: Params, x: jax.Array, state: Mamba2State, *,
+                  d_inner: int, d_state: int, n_heads: int,
+                  quant: str = "none", compute_dtype=jnp.bfloat16):
+    """Single-token step. x: [B, 1, d_model]."""
+    B = x.shape[0]
+    head_p = d_inner // n_heads
+    zxbcdt = linear(p["in_proj"], x, quant, compute_dtype)
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + d_state,
+                 2 * d_inner + 2 * d_state], axis=-1)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        state.conv)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+    xs = xs.reshape(B, n_heads, head_p).astype(jnp.float32)
+    Bc = Bc[:, 0].astype(jnp.float32)                        # [B,N]
+    Cc = Cc[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # [B,H]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(a[None] * dt)                             # [B,H]
+    h = state.h * decay[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bc, dt, xs)
+    y = jnp.einsum("bn,bhnp->bhp", Cc, h)
+    y = y + xs * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_inner)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = linear(p["out_proj"], y.astype(compute_dtype), quant, compute_dtype)
+    return out, Mamba2State(h=h, conv=conv_state)
+
+
+# ===========================================================================
+# RWKV6 ("Finch") — data-dependent per-channel decay
+# ===========================================================================
+
+def init_rwkv6(key, d_model: int, n_heads: int, decay_lora: int = 64,
+               dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    K = d_model // n_heads
+    return {
+        "mu": jax.random.uniform(ks[0], (5, d_model), dtype),   # r,k,v,g,w shifts
+        "wr": init_linear(ks[1], d_model, d_model, dtype=dtype),
+        "wk": init_linear(ks[2], d_model, d_model, dtype=dtype),
+        "wv": init_linear(ks[3], d_model, d_model, dtype=dtype),
+        "wg": init_linear(ks[4], d_model, d_model, dtype=dtype),
+        "w0": jnp.full((d_model,), -6.0, dtype),                # base decay
+        "w_lora_a": jax.random.normal(ks[5], (d_model, decay_lora), dtype) * 0.01,
+        "w_lora_b": jax.random.normal(ks[6], (decay_lora, d_model), dtype) * 0.01,
+        "u": jax.random.normal(ks[7], (n_heads, K), dtype) * 0.1,  # bonus
+        "wo": init_linear(ks[7], d_model, d_model, dtype=dtype),
+        "ln_scale": jnp.ones((d_model,), dtype),                # group-norm-ish
+    }
+
+
+def _rwkv_projections(p, x, x_prev, quant, compute_dtype):
+    """Token-shifted projections. x: [B,T,d]; x_prev: [B,T,d] (shifted)."""
+    mu = p["mu"].astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    xpf = x_prev.astype(jnp.float32)
+    mix = lambda i: (xf + (xpf - xf) * mu[i]).astype(compute_dtype)
+    r = linear(p["wr"], mix(0), quant, compute_dtype)
+    k = linear(p["wk"], mix(1), quant, compute_dtype)
+    v = linear(p["wv"], mix(2), quant, compute_dtype)
+    g = linear(p["wg"], mix(3), quant, compute_dtype)
+    # data-dependent decay (the RWKV6 hallmark): low-rank on the shifted mix
+    xw = mix(4).astype(jnp.float32)
+    dd = jnp.tanh(xw @ p["w_lora_a"].astype(jnp.float32)) \
+        @ p["w_lora_b"].astype(jnp.float32)
+    logw = -jnp.exp(p["w0"].astype(jnp.float32) + dd)           # log decay < 0
+    return r, k, v, g, logw
+
+
+def rwkv6_timemix(p: Params, x: jax.Array, *, n_heads: int, chunk: int = 32,
+                  quant: str = "none", compute_dtype=jnp.bfloat16,
+                  return_state: bool = False):
+    """Full-sequence WKV6. x: [B,T,d]. T must be a multiple of ``chunk``."""
+    B, T, d = x.shape
+    K = d // n_heads
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, logw = _rwkv_projections(p, x, x_prev, quant, compute_dtype)
+    rh = r.reshape(B, T, n_heads, K).astype(jnp.float32)
+    kh = k.reshape(B, T, n_heads, K).astype(jnp.float32)
+    vh = v.reshape(B, T, n_heads, K).astype(jnp.float32)
+    wh = logw.reshape(B, T, n_heads, K)
+    u = p["u"].astype(jnp.float32)
+
+    chunk = _pick_chunk(T, chunk)
+    nc = T // chunk
+    rh, kh, vh, wh = (a.reshape(B, nc, chunk, n_heads, K)
+                      for a in (rh, kh, vh, wh))
+    cum = jnp.cumsum(wh, axis=2)                        # inclusive log-decay sums
+    # intra-chunk pairwise: A[t,s] = sum_k r_t k_s exp(cum_{t-1} - cum_s), s<t
+    cprev = cum - wh                                    # cum_{t-1} (exclusive)
+    diff = cprev[:, :, :, None] - cum[:, :, None, :]    # [B,nc,t,s,H,K]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    dec = jnp.where(mask[None, None, :, :, None, None], jnp.exp(diff), 0.0)
+    A = jnp.einsum("bgthk,bgtshk,bgshk->bgtsh", rh, dec, kh)
+    diag = jnp.einsum("bgthk,hk,bgthk->bgth", rh, u, kh)
+    A = A + jnp.eye(chunk)[None, None, :, :, None] * diag[:, :, :, None, :]
+    y_intra = jnp.einsum("bgtsh,bgshv->bgthv", A, vh)
+    # cross-chunk state
+    kfac = jnp.exp(cum[:, :, -1:, :, :] - cum) * 1.0    # exp(cum_L - cum_s) <= 1
+    chunk_state = jnp.einsum("bgshk,bgshv->bghkv", kh * kfac, vh)
+    chunk_decay = jnp.exp(cum[:, :, -1])                # [B,nc,H,K]
+
+    def scan_fn(S, inp):
+        cs, cd = inp
+        return S * cd[..., None] + cs, S
+
+    S0 = jnp.zeros((B, n_heads, K, K), jnp.float32)     # V dim == K here
+    S_final, S_prevs = jax.lax.scan(scan_fn, S0,
+                                    (jnp.moveaxis(chunk_state, 1, 0),
+                                     jnp.moveaxis(chunk_decay, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)               # [B,nc,H,K,V]
+    y_inter = jnp.einsum("bgthk,bghkv->bgthv", rh * jnp.exp(cprev), S_prevs)
+    y = (y_intra + y_inter).reshape(B, T, n_heads, K)
+    # per-head group norm then output gate
+    mu_ = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu_) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, T, d) * p["ln_scale"].astype(jnp.float32)
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    out = linear(p["wo"], y.astype(compute_dtype), quant, compute_dtype)
+    if return_state:
+        return out, (S_final, x[:, -1:])
+    return out
+
+
+class RWKVState(NamedTuple):
+    S: jax.Array          # [B, H, K, V]
+    x_prev_t: jax.Array   # [B, 1, d] last input (time-mix shift)
+    x_prev_c: jax.Array   # [B, 1, d] last input (channel-mix shift)
+
+
+def rwkv6_timemix_decode(p: Params, x: jax.Array, state: RWKVState, *,
+                         n_heads: int, quant: str = "none",
+                         compute_dtype=jnp.bfloat16):
+    """One token. x: [B,1,d]."""
+    B, _, d = x.shape
+    K = d // n_heads
+    r, k, v, g, logw = _rwkv_projections(p, x, state.x_prev_t, quant,
+                                         compute_dtype)
+    rh = r.reshape(B, n_heads, K).astype(jnp.float32)
+    kh = k.reshape(B, n_heads, K).astype(jnp.float32)
+    vh = v.reshape(B, n_heads, K).astype(jnp.float32)
+    wh = jnp.exp(logw.reshape(B, n_heads, K))
+    u = p["u"].astype(jnp.float32)
+    kv = kh[..., :, None] * vh[..., None, :]             # [B,H,K,V]
+    y = jnp.einsum("bhk,bhkv->bhv", rh, state.S + u[None, :, :, None] * kv)
+    S_new = state.S * wh[..., None] + kv
+    mu_ = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu_) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, 1, d) * p["ln_scale"].astype(jnp.float32)
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    out = linear(p["wo"], y.astype(compute_dtype), quant, compute_dtype)
+    return out, state._replace(S=S_new, x_prev_t=x)
+
+
+def init_rwkv6_chanmix(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"mu": jax.random.uniform(k1, (2, d_model), dtype),
+            "wk": init_linear(k2, d_model, d_ff, dtype=dtype),
+            "wv": init_linear(k3, d_ff, d_model, dtype=dtype),
+            "wr": init_linear(k1, d_model, d_model, dtype=dtype)}
+
+
+def rwkv6_chanmix(p: Params, x: jax.Array, x_prev: jax.Array,
+                  quant: str = "none", compute_dtype=jnp.bfloat16) -> jax.Array:
+    mu = p["mu"].astype(jnp.float32)
+    xf, xpf = x.astype(jnp.float32), x_prev.astype(jnp.float32)
+    xk = (xf + (xpf - xf) * mu[0]).astype(compute_dtype)
+    xr = (xf + (xpf - xf) * mu[1]).astype(compute_dtype)
+    k = jnp.square(jax.nn.relu(linear(p["wk"], xk, quant, compute_dtype)))
+    kv = linear(p["wv"], k, quant, compute_dtype)
+    return jax.nn.sigmoid(linear(p["wr"], xr, quant, compute_dtype)
+                          .astype(jnp.float32)).astype(kv.dtype) * kv

@@ -1,0 +1,80 @@
+"""AdamW in pure JAX, pytree-native, shard-friendly (m/v inherit param specs)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init(params, keep_master: bool = False) -> dict:
+    """``keep_master=True``: params may be bf16 for compute/all-gather; a
+    fp32 master copy lives in the optimizer state (mixed-precision FSDP —
+    halves the per-layer parameter all-gather volume)."""
+    zeros = lambda p: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    st = {"m": zeros(params), "v": zeros(params),
+          "step": jnp.zeros((), jnp.int32)}
+    if keep_master:
+        st["master"] = jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32), params)
+    return st
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def update(params, grads, opt_state: dict, lr: jax.Array,
+           cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params, new_opt_state, grad_norm)."""
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt_state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    src = opt_state.get("master", params)   # fp32 master if present
+    flat_p, treedef = jax.tree_util.tree_flatten(src)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_src = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if "master" in opt_state:
+        new_state["master"] = new_src
+        new_p = jax.tree_util.tree_map(
+            lambda x, p: x.astype(p.dtype), new_src, params)
+    else:
+        new_p = new_src
+    return new_p, new_state, gn

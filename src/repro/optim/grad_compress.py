@@ -1,0 +1,51 @@
+"""Error-feedback int8 gradient compression for cross-pod all-reduce.
+
+At 1000+-node scale the pod-level gradient all-reduce crosses DCN links that
+are ~10x slower than in-pod ICI; compressing the cross-pod leg 4x (fp32->int8
+with per-leaf scale) with error feedback [1-bit Adam / EF-SGD lineage] keeps
+convergence while cutting the dominant collective term.
+
+Implemented as a shard_map-compatible primitive: grads are quantized, psum'd
+over the named axis in int32, dequantized, and the quantization residual is
+carried to the next step (error feedback).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(grads):
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_decompress(g: jax.Array, residual: jax.Array, scale: jax.Array):
+    """Quantize (g + residual) with a given shared scale."""
+    gf = g.astype(jnp.float32) + residual
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, gf - q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, residuals, axis_name: str):
+    """Error-feedback compressed mean over ``axis_name`` (use in shard_map).
+
+    Returns (reduced_grads, new_residuals).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        # shared scale across the axis so the int32 sum is exact
+        scale = jax.lax.pmax(jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12),
+                             axis_name) / 127.0
+        q, r_new = compress_decompress(g, r, scale)
+        # int32 sum avoids overflow (<= 127 * n per element)
+        s = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return (s.astype(jnp.float32) * scale / n), r_new
+
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

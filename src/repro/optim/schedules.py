@@ -1,0 +1,35 @@
+"""LR schedules: cosine, and WSD (Warmup-Stable-Decay) from MiniCPM
+[arXiv:2404.06395] — the schedule the minicpm-2b config trains with."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr: float, warmup: int, total: int,
+           final_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac * peak_lr + (1 - final_frac) * peak_lr \
+        * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, stable: int, decay: int,
+        final_frac: float = 0.1):
+    """Warmup -> constant ("stable") -> short exponential-ish decay tail.
+
+    MiniCPM: decay over the last ~10% of tokens; we use the paper's
+    f(s) in the decay branch: peak * final_frac ** ((s - w - st)/decay).
+    """
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    dec_prog = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+    dec = peak_lr * (final_frac ** dec_prog)
+    return jnp.where(s < warmup, warm,
+                     jnp.where(s < warmup + stable, peak_lr, dec))
+
+
+def make(name: str, **kw):
+    fn = {"cosine": cosine, "wsd": wsd}[name]
+    return lambda step: fn(step, **kw)

@@ -1,0 +1,203 @@
+"""Three-term roofline from compiled artifacts (TPU v5e constants).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = sum over collective ops of ring-model per-device link bytes / link_bw
+
+``cost_analysis()`` on the CPU SPMD backend reports *per-partition* flops/bytes
+(verified empirically in tests), so no division by chip count is applied.
+Collective bytes are parsed from the partitioned HLO text; shapes there are
+already per-device.  Ring formulas (B = per-device payload bytes, n = group
+size): all-reduce 2(n-1)/n*B, all-gather (n-1)/n*B_result, reduce-scatter
+(n-1)*B_result (= (n-1)/n * input), all-to-all (n-1)/n*B, collective-permute B.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# TPU v5e, from the assignment
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        body = m.group(1).strip()
+        return len(body.split(",")) if body else 1
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n_groups, = (int(m.group(1)),)
+        size = int(m.group(2))
+        return size
+    return 1
+
+
+@dataclasses.dataclass
+class Collective:
+    op: str
+    result_bytes: int
+    group_size: int
+    line: str
+
+    @property
+    def link_bytes(self) -> float:
+        """Per-device ring-model bytes over the link."""
+        n, b = self.group_size, self.result_bytes
+        if self.op == "collective-permute":
+            return float(b)
+        if n <= 1:
+            return 0.0
+        if self.op == "all-reduce":
+            return 2 * (n - 1) / n * b
+        if self.op == "all-gather":
+            return (n - 1) / n * b
+        if self.op == "reduce-scatter":
+            return (n - 1) * b          # input = n * result
+        if self.op == "all-to-all":
+            return (n - 1) / n * b
+        return 0.0
+
+
+def parse_collectives(hlo_text: str) -> list[Collective]:
+    out = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        m = re.search(
+            r"=\s*(.*?)\s(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start|-done)?\(", s)
+        if not m:
+            continue
+        if "-done(" in s:     # avoid double counting start/done pairs
+            continue
+        result_type, op = m.group(1), m.group(2)
+        out.append(Collective(op=op, result_bytes=_shape_bytes(result_type),
+                              group_size=_group_size(s), line=s[:160]))
+    return out
+
+
+def roofline_terms(cost: dict, hlo_text: str) -> dict:
+    """Returns the three terms (seconds) + supporting detail."""
+    flops = float(cost.get("flops", 0.0))
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(hlo_text)
+    coll_bytes = sum(c.link_bytes for c in colls)
+    per_op = {}
+    for c in colls:
+        d = per_op.setdefault(c.op, {"count": 0, "link_bytes": 0.0})
+        d["count"] += 1
+        d["link_bytes"] += c.link_bytes
+    top = sorted(colls, key=lambda c: -c.link_bytes)[:8]
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": coll_bytes / LINK_BW,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": hbm_bytes,
+        "collective_link_bytes": coll_bytes,
+        "collectives": per_op,
+        "n_collectives": len(colls),
+        "top_collectives": [
+            {"op": c.op, "link_bytes": c.link_bytes, "n": c.group_size,
+             "line": c.line[:140]} for c in top],
+    }
+
+
+def extrapolate_terms(t1g: dict, t2g: dict, n_groups: int) -> dict:
+    """Per-group linear extrapolation: total = t1g + (G-1) * (t2g - t1g).
+
+    The 1-group and 2-group programs share embed/head/loss/optimizer terms,
+    so the delta isolates one group's cost exactly; collectives extrapolate
+    per op type the same way.
+    """
+    g = n_groups
+    out = {}
+    for k in ("compute_s", "memory_s", "collective_s",
+              "hlo_flops_per_device", "hlo_bytes_per_device",
+              "collective_link_bytes"):
+        out[k] = t1g[k] + (g - 1) * (t2g[k] - t1g[k])
+    colls = {}
+    ops = set(t1g["collectives"]) | set(t2g["collectives"])
+    for op in ops:
+        c1 = t1g["collectives"].get(op, {"count": 0, "link_bytes": 0.0})
+        c2 = t2g["collectives"].get(op, {"count": 0, "link_bytes": 0.0})
+        colls[op] = {
+            "count": c1["count"] + (g - 1) * (c2["count"] - c1["count"]),
+            "link_bytes": c1["link_bytes"]
+            + (g - 1) * (c2["link_bytes"] - c1["link_bytes"]),
+        }
+    out["collectives"] = colls
+    out["n_collectives"] = int(t1g["n_collectives"]
+                               + (g - 1) * (t2g["n_collectives"]
+                                            - t1g["n_collectives"]))
+    out["extrapolated_from"] = "1g/2g delta"
+    return out
+
+
+def dominant(terms: dict) -> str:
+    vals = {"compute": terms["compute_s"], "memory": terms["memory_s"],
+            "collective": terms["collective_s"]}
+    return max(vals, key=vals.get)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (6ND / 2ND) accounting
+# ---------------------------------------------------------------------------
+
+def count_params(params_sds, moe_top_k: Optional[int] = None,
+                 n_experts: Optional[int] = None) -> dict:
+    """Returns {"total": N, "active": N_active} from an eval_shape'd tree."""
+    import jax
+    import numpy as np
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_sds)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        name = jax.tree_util.keystr(path)
+        if re.search(r"\['moe'\]\['w[igo]'\]", name):
+            expert += n
+    active = total
+    if expert and moe_top_k and n_experts:
+        active = total - expert + expert * moe_top_k / n_experts
+    return {"total": total, "active": active}
+
+
+def model_flops(kind: str, n_active: float, global_batch: int,
+                seq_len: int) -> float:
+    if kind == "train":
+        return 6.0 * n_active * global_batch * seq_len
+    if kind == "prefill":
+        return 2.0 * n_active * global_batch * seq_len
+    return 2.0 * n_active * global_batch          # decode: one token / seq

@@ -1,0 +1,95 @@
+"""Batched serving engine: prefill -> synchronized decode with typed caches.
+
+Static-batch continuous serving (all sequences advance together — the
+TPU-friendly schedule); greedy or temperature sampling.  The engine stitches
+the prefill cache (sized to the prompt) into max_len decode buffers, matching
+``decode_attention``'s addressing, including ring buffers for local/SWA
+layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg, params, scfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.is_encdec = getattr(cfg, "enc_dec", False)
+        mod = encdec if self.is_encdec else transformer
+        self._prefill = jax.jit(lambda p, *a: mod.prefill(p, cfg, *a))
+        # donate the cache: decode updates it in place (halves residency)
+        self._decode = jax.jit(lambda p, t, c, pos: mod.decode_step(
+            p, cfg, t, c, pos), donate_argnums=2)
+
+    # -- cache stitching -----------------------------------------------------
+
+    def _grow_cache(self, cache, prompt_len: int):
+        """Pad prefill caches (sized S or window) into max_len buffers."""
+        cfg, S, M = self.cfg, prompt_len, self.scfg.max_len
+        if self.is_encdec:
+            grown = dict(cache)
+            for k in ("k", "v"):
+                buf = jnp.zeros(cache[k].shape[:2] + (M,) + cache[k].shape[3:],
+                                cache[k].dtype)
+                grown[k] = jax.lax.dynamic_update_slice_in_dim(
+                    buf, cache[k], 0, axis=2)
+            return grown
+        out = []
+        for spec, c in zip(cfg.pattern, cache):
+            c = dict(c)
+            for key in ("k", "v", "shared_k", "shared_v"):
+                if key not in c:
+                    continue
+                T = c[key].shape[2]
+                is_ring = (key in ("k", "v") and spec.attn_type == "local"
+                           and cfg.window and T == min(cfg.window, S if S >= cfg.window else cfg.window))
+                if key in ("k", "v") and spec.attn_type == "local" and cfg.window:
+                    continue      # already a ring buffer of size window
+                buf = jnp.zeros(c[key].shape[:2] + (M,) + c[key].shape[3:],
+                                c[key].dtype)
+                c[key] = jax.lax.dynamic_update_slice_in_dim(
+                    buf, c[key], 0, axis=2)
+            out.append(c)
+        return tuple(out)
+
+    # -- generation ----------------------------------------------------------
+
+    def generate(self, prompts: jax.Array, max_new_tokens: int,
+                 frames: Optional[jax.Array] = None) -> jax.Array:
+        """prompts: [B, S] int32 -> [B, S + max_new_tokens]."""
+        B, S = prompts.shape
+        if self.is_encdec:
+            logits, cache = self._prefill(self.params, frames, prompts)
+        else:
+            logits, cache = self._prefill(self.params, prompts)
+        cache = self._grow_cache(cache, S)
+        key = jax.random.PRNGKey(self.scfg.seed)
+        toks = [self._sample(logits, key)]
+        pos = jnp.int32(S)
+        for i in range(max_new_tokens - 1):
+            logits, cache = self._decode(self.params, toks[-1], cache, pos)
+            key, sub = jax.random.split(key)
+            toks.append(self._sample(logits, sub))
+            pos = pos + 1
+        return jnp.concatenate([prompts, jnp.stack(toks, axis=1)], axis=1)
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)

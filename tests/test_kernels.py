@@ -1,0 +1,94 @@
+"""Pallas kernels vs pure-jnp oracles: exact integer equality across shape
+sweeps (interpret mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lut import pack_int4
+from repro.kernels.lutmul import ops, ref
+
+SHAPES = [(8, 32, 16), (16, 128, 128), (100, 256, 130), (128, 384, 256),
+          (1, 64, 48), (257, 128, 64)]
+
+
+def _rand_case(rng, M, K, N):
+    a = rng.integers(-8, 8, size=(M, K)).astype(np.int8)
+    w = rng.integers(-8, 8, size=(K, N)).astype(np.int8)
+    a_codes = jnp.asarray(a.astype(np.uint8) & 0xF)
+    w_packed = pack_int4(jnp.asarray(w).T).T
+    want = a.astype(np.int32) @ w.astype(np.int32)
+    return a, w, a_codes, w_packed, want
+
+
+@pytest.mark.parametrize("M,K,N", SHAPES)
+def test_lutmul_kernel_vs_oracle(M, K, N):
+    rng = np.random.default_rng(M * 1000 + N)
+    a, w, a_codes, w_packed, want = _rand_case(rng, M, K, N)
+    got_ref = ref.lutmul_ref(a_codes, w_packed, a_signed=True)
+    np.testing.assert_array_equal(np.asarray(got_ref), want)
+    got_kernel = ops.lutmul(a_codes, w_packed, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(got_kernel), want)
+
+
+@pytest.mark.parametrize("M,K,N", SHAPES)
+def test_int_matmul_kernel_vs_oracle(M, K, N):
+    rng = np.random.default_rng(M + N)
+    a = rng.integers(-128, 128, size=(M, K)).astype(np.int8)
+    w = rng.integers(-128, 128, size=(K, N)).astype(np.int8)
+    want = a.astype(np.int32) @ w.astype(np.int32)
+    got = ops.int_matmul(jnp.asarray(a), jnp.asarray(w), backend="interpret")
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@given(M=st.integers(1, 40), K=st.integers(2, 96).map(lambda k: k * 2),
+       N=st.integers(1, 40))
+@settings(max_examples=20, deadline=None)
+def test_lutmul_property_random_shapes(M, K, N):
+    rng = np.random.default_rng(M * 7 + K * 13 + N)
+    a, w, a_codes, w_packed, want = _rand_case(rng, M, K, N)
+    got = ops.lutmul(a_codes, w_packed, backend="ref")
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("mode", ["w4a4_lut", "w4a4_mxu", "w8a8"])
+def test_quantized_matmul_accuracy(mode):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (32, 128), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 64), jnp.float32)
+    y = ops.quantized_matmul(x, w, mode=mode, backend="ref",
+                             compute_dtype=jnp.float32)
+    rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+    # 4-bit dynamic quant of gaussian data: ~4.7% per-operand grid error
+    # compounding over both operands -> ~17% output error pre-QAT (QAT's job
+    # is to adapt the distributions; see benchmarks/qat_accuracy.py)
+    assert rel < (0.02 if mode == "w8a8" else 0.20), rel
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_quantized_matmul_lut_equals_mxu_int_math():
+    """The LUT path and the integer-dot path share quantizers -> identical."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 32), jnp.float32)
+    y1 = ops.quantized_matmul(x, w, mode="w4a4_lut", backend="ref",
+                              compute_dtype=jnp.float32)
+    y2 = ops.quantized_matmul(x, w, mode="w4a4_mxu", backend="ref",
+                              compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+@pytest.mark.slow
+def test_lutmul_interpret_dtype_sweep():
+    rng = np.random.default_rng(0)
+    for a_signed in (True, False):
+        M, K, N = 64, 128, 96
+        a_vals = rng.integers(-8, 8, (M, K)) if a_signed \
+            else rng.integers(0, 16, (M, K))
+        w = rng.integers(-8, 8, size=(K, N)).astype(np.int8)
+        a_codes = jnp.asarray(a_vals.astype(np.uint8) & 0xF)
+        w_packed = pack_int4(jnp.asarray(w).T).T
+        want = a_vals.astype(np.int32) @ w.astype(np.int32)
+        got = ops.lutmul(a_codes, w_packed, a_signed=a_signed,
+                         backend="interpret")
+        np.testing.assert_array_equal(np.asarray(got), want)

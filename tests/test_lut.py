@@ -1,0 +1,57 @@
+"""Bit-exact validation of the paper's LUT mechanism (Fig. 5, Eq. 3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lut
+
+
+def test_fig5_init_words_bit_exact():
+    """The four 64-bit INIT constants printed in the paper for weights
+    (+1, -3) must be reproduced exactly."""
+    words = lut.lut6_2_init_words(1, -3)
+    assert tuple(words) == tuple(lut.PAPER_FIG5_INIT_WORDS)
+
+
+def test_eq3_lut_cost():
+    # n=4: (2*4 * 2^4) / 2^6 = 2 LUTs per multiply — the headline number
+    assert lut.luts_per_multiply(4) == 2.0
+    assert lut.luts_per_multiply(8) == 64.0
+    assert lut.luts_per_multiply(2) == 0.25
+
+
+@given(w0=st.integers(-8, 7), w1=st.integers(-8, 7),
+       ws=st.integers(0, 1), a=st.integers(0, 15))
+@settings(max_examples=200, deadline=None)
+def test_lut6_functional_multiply(w0, w1, ws, a):
+    """Evaluating the generated LUT6_2 bank == integer multiplication."""
+    w = (w0, w1)[ws]
+    assert lut.multiply_via_lut6(w0, w1, ws, a) == w * a
+
+
+def test_product_table_exhaustive():
+    T = lut.product_table()           # signed w, unsigned a
+    for w in range(-8, 8):
+        for a in range(16):
+            assert T[(w + 16) % 16, a] == w * a
+    Ts = lut.product_table(a_signed=True)
+    for w in range(-8, 8):
+        for a in range(-8, 8):
+            assert Ts[(w + 16) % 16, (a + 16) % 16] == w * a
+
+
+@given(st.lists(st.integers(-8, 7), min_size=2, max_size=64)
+       .filter(lambda l: len(l) % 2 == 0))
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(vals):
+    import jax.numpy as jnp
+    x = jnp.asarray(vals, jnp.int8)
+    packed = lut.pack_int4(x)
+    assert packed.shape[-1] == len(vals) // 2
+    out = lut.unpack_int4(packed, signed=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_lut_general_multiplier_range():
+    lo, hi = lut.luts_per_multiply_general(4)
+    assert lo == 13 and hi == 28     # paper Sec. 3.5

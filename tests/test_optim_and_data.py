@@ -1,0 +1,91 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import pipeline
+from repro.optim import adamw, grad_compress, schedules
+
+
+def test_adamw_first_step_matches_reference():
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    st = adamw.init(p)
+    cfg = adamw.AdamWConfig(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                            grad_clip=1e9)
+    new_p, st2, gn = adamw.update(p, g, st, jnp.float32(0.01), cfg)
+    # bias-corrected first step: delta = lr * g/|g| elementwise -> lr*sign(g)
+    np.testing.assert_allclose(
+        np.asarray(new_p["w"]),
+        np.asarray(p["w"]) - 0.01 * np.sign(np.asarray(g["w"])), rtol=1e-4)
+    assert int(st2["step"]) == 1
+
+
+def test_grad_clip():
+    g = {"w": jnp.full((100,), 10.0)}
+    clipped, gn = adamw.clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(100.0)
+    assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_wsd_schedule_phases():
+    f = schedules.make("wsd", peak_lr=1.0, warmup=10, stable=80, decay=10)
+    assert float(f(jnp.asarray(0))) == 0.0
+    assert float(f(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(f(jnp.asarray(50))) == pytest.approx(1.0)
+    assert float(f(jnp.asarray(95))) < 1.0
+    assert float(f(jnp.asarray(200))) == pytest.approx(0.1)
+
+
+def test_compress_decompress_error_feedback():
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(256,)) * 1e-3,
+                    jnp.float32)
+    r = jnp.zeros_like(g)
+    scale = jnp.max(jnp.abs(g)) / 127.0
+    q, r_new = grad_compress.compress_decompress(g, r, scale)
+    # residual = quantization error; reconstruction + residual == original
+    np.testing.assert_allclose(
+        np.asarray(q.astype(jnp.float32) * scale + r_new), np.asarray(g),
+        rtol=1e-5, atol=1e-8)
+    assert q.dtype == jnp.int8
+
+
+def test_compressed_psum_single_axis():
+    """Under shard_map on 1 device the mean must be exact after EF."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    mesh = jax.make_mesh((1,), ("dp",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    g = {"w": jnp.asarray([0.5, -0.25, 0.125])}
+    r = grad_compress.init_residual(g)
+
+    def f(g, r):
+        return grad_compress.compressed_psum(g, r, "dp")
+
+    out, r2 = shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                        out_specs=(P(), P()))(g, r)
+    total = np.asarray(out["w"]) + np.asarray(r2["w"])
+    np.testing.assert_allclose(total, np.asarray(g["w"]), atol=1e-7)
+
+
+def test_data_determinism_and_sharding():
+    cfg = pipeline.DataConfig(seed=7, global_batch=8, n_shards=2, shard=0)
+    b1 = pipeline.lm_batch(cfg, 3)
+    b2 = pipeline.lm_batch(cfg, 3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    other = pipeline.lm_batch(
+        pipeline.DataConfig(seed=7, global_batch=8, n_shards=2, shard=1), 3)
+    assert not np.array_equal(b1["tokens"], other["tokens"])
+    assert b1["tokens"].shape == (4, 128)
+    # labels are the shifted stream
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_data_learnable_structure():
+    """The periodic stream is predictable: two consecutive batches from the
+    same shard+step agree, and the sequence has period structure."""
+    cfg = pipeline.DataConfig(seed=0, global_batch=2, noise_frac=0.0)
+    b = pipeline.lm_batch(cfg, 0)
+    t = b["tokens"][0]
+    # find the period by checking repeats
+    assert any(np.array_equal(t[:32], t[p:p + 32]) for p in range(2, 17))

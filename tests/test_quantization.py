@@ -1,0 +1,48 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (A4, W4, W8, QuantConfig, compute_scale,
+                                     dequantize, fake_quant, quant_error,
+                                     quantize)
+
+
+@given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=4, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_quantize_within_range(vals):
+    x = jnp.asarray(vals, jnp.float32).reshape(1, -1)
+    s = compute_scale(x, W4)
+    q = quantize(x, s, 0, W4)
+    assert int(q.min()) >= W4.qmin and int(q.max()) <= W4.qmax
+
+
+def test_dequantize_inverse_on_grid():
+    """Values already on the quant grid survive a round trip exactly."""
+    cfg = W4
+    s = jnp.float32(0.25)
+    grid = jnp.arange(cfg.qmin, cfg.qmax + 1, dtype=jnp.float32) * s
+    q = quantize(grid, s, 0, cfg)
+    back = dequantize(q, s, 0)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(grid), atol=1e-7)
+
+
+def test_fake_quant_straight_through_gradient():
+    x = jnp.linspace(-1.0, 1.0, 32)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, W4)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones(32), atol=1e-6)
+
+
+def test_quant_error_decreases_with_bits():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    errs = [float(quant_error(x, QuantConfig(bits=b))) for b in (2, 4, 8)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_per_channel_scale_shape():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    s = compute_scale(x, W4)          # channel_axis=-1
+    assert s.shape == (1, 8)
+    # each channel's max-abs maps to qmax
+    q = quantize(x, s, 0, W4)
+    assert int(jnp.max(jnp.abs(q))) == 7

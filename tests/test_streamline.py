@@ -1,0 +1,44 @@
+"""Streamlined integer-only stage == float reference, code-for-code."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.streamline import (StreamlinedStage, float_stage_reference,
+                                   integer_stage_forward, streamline_stage)
+from repro.core.thresholds import BNParams
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_integer_stage_matches_float_reference(seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    K, N, M = 16, 8, 12
+    w = jax.random.normal(ks[0], (K, N)) * 0.5
+    bn = BNParams(gamma=jax.random.uniform(ks[1], (N,), minval=0.2, maxval=2.0),
+                  beta=jax.random.normal(ks[2], (N,)) * 0.3,
+                  mean=jax.random.normal(ks[3], (N,)) * 0.2,
+                  var=jax.random.uniform(ks[4], (N,), minval=0.5, maxval=1.5))
+    act_scale_in = jnp.float32(0.1)
+    a_codes = jax.random.randint(ks[5], (M, K), 0, 16)
+
+    stage = streamline_stage(w, bn, act_scale_in)
+    got = integer_stage_forward(stage, a_codes, backend="ref")
+    want = float_stage_reference(w, bn, act_scale_in, a_codes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(got.min()) >= 0 and int(got.max()) <= 15
+
+
+def test_integer_stage_through_pallas_interpret():
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    K, N, M = 32, 16, 8
+    w = jax.random.normal(ks[0], (K, N)) * 0.3
+    bn = BNParams(gamma=jnp.ones((N,)), beta=jnp.zeros((N,)),
+                  mean=jnp.zeros((N,)), var=jnp.ones((N,)))
+    a_codes = jax.random.randint(ks[1], (M, K), 0, 16)
+    stage = streamline_stage(w, bn, jnp.float32(0.05))
+    ref = integer_stage_forward(stage, a_codes, backend="ref")
+    pal = integer_stage_forward(stage, a_codes, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))

@@ -1,0 +1,54 @@
+"""Pallas threshold-epilogue kernel vs oracle vs core/thresholds math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import A4
+from repro.core.thresholds import BNParams, apply_thresholds, make_thresholds
+from repro.kernels.thresholds import ops, ref
+
+
+@pytest.mark.parametrize("M,N", [(8, 8), (100, 24), (256, 128), (33, 7)])
+def test_threshold_kernel_vs_oracle(M, N):
+    rng = np.random.default_rng(M + N)
+    acc = jnp.asarray(rng.integers(-500, 500, (M, N)), jnp.int32)
+    thr = jnp.sort(jnp.asarray(rng.normal(0, 100, (N, 15)), jnp.float32), axis=1)
+    sign = jnp.asarray(rng.choice([-1.0, 1.0], N), jnp.float32)
+    want = ref.threshold_ref(acc, thr, sign)
+    got = ops.threshold(acc, thr, sign, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_threshold_kernel_matches_core_streamlining():
+    """Kernel output == core/thresholds.apply_thresholds (+ qmin offset) on a
+    real streamlined stage."""
+    key = jax.random.PRNGKey(0)
+    N = 16
+    bn = BNParams(gamma=jax.random.uniform(key, (N,), minval=0.2, maxval=2.0),
+                  beta=jnp.zeros((N,)), mean=jnp.zeros((N,)),
+                  var=jnp.ones((N,)))
+    t, sign = make_thresholds(jnp.full((N,), 0.02), bn, A4,
+                              jnp.full((N,), 0.1))
+    acc = jnp.asarray(np.random.default_rng(1).integers(-400, 400, (32, N)),
+                      jnp.int32)
+    core = apply_thresholds(acc, t, sign, A4)
+    kern = ops.threshold(acc, t, sign, backend="interpret") + A4.qmin
+    np.testing.assert_array_equal(np.asarray(core), np.asarray(kern))
+
+
+def test_fused_lutmul_threshold_stage():
+    from repro.core.lut import pack_int4
+    rng = np.random.default_rng(2)
+    M, K, N = 16, 32, 8
+    a = rng.integers(0, 16, (M, K))
+    w = rng.integers(-8, 8, (K, N)).astype(np.int8)
+    a_codes = jnp.asarray(a.astype(np.uint8))
+    w_packed = pack_int4(jnp.asarray(w).T).T
+    thr = jnp.sort(jnp.asarray(rng.normal(0, 200, (N, 15)), jnp.float32), 1)
+    sign = jnp.ones((N,), jnp.float32)
+    got = ops.lutmul_threshold_stage(a_codes, w_packed, thr, sign,
+                                     backend="interpret")
+    acc = a.astype(np.int32) @ w.astype(np.int32)
+    want = np.sum(acc[:, :, None] >= np.asarray(thr)[None], axis=-1)
+    np.testing.assert_array_equal(np.asarray(got), want)

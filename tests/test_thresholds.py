@@ -1,0 +1,59 @@
+"""Multi-threshold streamlining == float BN+quantize, exactly, on integer
+accumulators (the property FINN streamlining relies on)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import A4, A8
+from repro.core.thresholds import (BNParams, apply_thresholds,
+                                   float_reference, make_thresholds)
+
+
+def _check(gamma, beta, mean, var, acc_scale, out_scale, accs):
+    C = len(gamma)
+    bn = BNParams(gamma=jnp.asarray(gamma, jnp.float32),
+                  beta=jnp.asarray(beta, jnp.float32),
+                  mean=jnp.asarray(mean, jnp.float32),
+                  var=jnp.asarray(var, jnp.float32))
+    acc_scale = jnp.asarray(acc_scale, jnp.float32)
+    out_scale = jnp.asarray(out_scale, jnp.float32)
+    acc = jnp.asarray(accs, jnp.int32).reshape(-1, C)
+    t, sign = make_thresholds(acc_scale, bn, A4, out_scale)
+    got = apply_thresholds(acc, t, sign, A4)
+    want = float_reference(acc, acc_scale, bn, A4, out_scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    gamma=st.lists(st.floats(0.05, 4.0), min_size=3, max_size=3),
+    beta=st.lists(st.floats(-2, 2), min_size=3, max_size=3),
+    mean=st.lists(st.floats(-2, 2), min_size=3, max_size=3),
+    var=st.lists(st.floats(0.05, 4.0), min_size=3, max_size=3),
+    accs=st.lists(st.integers(-512, 512), min_size=12, max_size=12),
+)
+@settings(max_examples=100, deadline=None)
+def test_threshold_equivalence_positive_gamma(gamma, beta, mean, var, accs):
+    _check(gamma, beta, mean, var,
+           acc_scale=[0.01, 0.02, 0.05], out_scale=[0.1, 0.2, 0.05], accs=accs)
+
+
+@given(
+    gamma=st.lists(st.floats(-4.0, -0.05), min_size=2, max_size=2),
+    accs=st.lists(st.integers(-512, 512), min_size=8, max_size=8),
+)
+@settings(max_examples=50, deadline=None)
+def test_threshold_equivalence_negative_gamma(gamma, accs):
+    """Negative BN slope flips the comparisons; the sign channel handles it."""
+    _check(gamma, beta=[0.3, -0.4], mean=[0.1, 0.2], var=[1.0, 0.5],
+           acc_scale=[0.02, 0.03], out_scale=[0.1, 0.07], accs=accs)
+
+
+def test_thresholds_no_bn():
+    acc = jnp.arange(-100, 100, dtype=jnp.int32).reshape(-1, 1)
+    t, sign = make_thresholds(jnp.asarray([0.05]), None, A4,
+                              jnp.asarray([0.25]))
+    got = apply_thresholds(acc, t, sign, A4)
+    want = float_reference(acc, jnp.asarray([0.05]), None, A4,
+                           jnp.asarray([0.25]))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

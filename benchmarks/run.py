@@ -1,36 +1,77 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is the
+Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is the median
 wall-time of the benchmarked callable on this host (CPU); ``derived`` carries
 the paper-comparable quantity (GOPS, FPS, LUT counts, accuracy, ...).
+
+``--json PATH`` additionally writes a machine-readable record per row
+(op name, median ms, GOP/s when derivable, the derived string) so successive
+PRs can diff kernel baselines::
+
+    python -m benchmarks.run --only kernel_bench --json BENCH_kernels.json
 """
 from __future__ import annotations
 
+import argparse
+import json
+import re
+import statistics
 import sys
 import time
 
 
-def _timeit(fn, n=3):
+def _median_us(fn, n=5) -> float:
     fn()                       # warmup / compile
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(n):
+        t0 = time.perf_counter()
         fn()
-    return (time.perf_counter() - t0) / n * 1e6
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(ts)
 
 
-def main() -> None:
+def _gops(derived: str, us: float | None):
+    """GOP/s from a ``gop_per_call=X`` annotation + measured wall time."""
+    m = re.search(r"gop_per_call=([0-9.eE+-]+)", derived)
+    if not m or not us:
+        return None
+    return float(m.group(1)) / (us / 1e6)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write machine-readable results to this path")
+    ap.add_argument("--only", action="append", default=None,
+                    help="run only these benchmark modules (by name)")
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args(argv)
+
     from benchmarks import (fpga_roofline, kernel_bench, lut_cost, lut_init,
                             qat_accuracy, resource_breakdown, serving_bench,
                             throughput_table2)
     mods = [lut_init, lut_cost, fpga_roofline, throughput_table2,
             resource_breakdown, kernel_bench, qat_accuracy, serving_bench]
+    if args.only:
+        mods = [m for m in mods if m.__name__.split(".")[-1] in args.only]
+    records = []
     print("name,us_per_call,derived")
     for mod in mods:
         for row in mod.run():
             name, fn, derived = row
-            us = _timeit(fn) if callable(fn) else float(fn)
+            us = _median_us(fn, args.repeats) if callable(fn) else float(fn)
             print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
+            records.append({
+                "name": name,
+                "median_ms": round(us / 1e3, 4),
+                "gops": _gops(derived, us),
+                "derived": derived,
+            })
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": records}, f, indent=1)
+        print(f"wrote {args.json} ({len(records)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -25,7 +25,35 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+import zlib
+
+try:
+    import zstandard
+    _HAVE_ZSTD = True
+except ImportError:                   # gate: container without zstd bindings
+    zstandard = None
+    _HAVE_ZSTD = False
+
+
+def _compress(payload: bytes) -> tuple[bytes, str]:
+    """Returns (bytes, codec); codec is recorded in the manifest so restore
+    never has to guess the frame format."""
+    if _HAVE_ZSTD:
+        return zstandard.ZstdCompressor(level=3).compress(payload), "zstd"
+    return zlib.compress(payload, 3), "zlib"
+
+
+def _decompress(data: bytes, codec: str) -> bytes:
+    if codec == "zlib":
+        return zlib.decompress(data)
+    if codec == "zstd":
+        if not _HAVE_ZSTD:
+            raise RuntimeError(
+                "checkpoint was written with zstd but the zstandard module "
+                "is not installed in this environment")
+        return zstandard.ZstdDecompressor().decompress(data)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten_with_paths(tree):
@@ -45,19 +73,20 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
         tmp = final + ".tmp"
         os.makedirs(tmp, exist_ok=True)
+        payload = msgpack.packb([l.tobytes() for l in host_leaves])
+        blob, codec = _compress(payload)
         manifest = {
             "step": step,
             "paths": paths,
             "shapes": [list(l.shape) for l in host_leaves],
             "dtypes": [str(l.dtype) for l in host_leaves],
+            "codec": codec,
             "extra": extra or {},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
-        cctx = zstandard.ZstdCompressor(level=3)
-        payload = msgpack.packb([l.tobytes() for l in host_leaves])
         with open(os.path.join(tmp, "data.msgpack.zst"), "wb") as f:
-            f.write(cctx.compress(payload))
+            f.write(blob)
         with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
             f.write("ok")
         if os.path.exists(final):
@@ -98,9 +127,9 @@ def restore(ckpt_dir: str, target_tree: Any, step: Optional[int] = None,
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    dctx = zstandard.ZstdDecompressor()
     with open(os.path.join(d, "data.msgpack.zst"), "rb") as f:
-        payload = msgpack.unpackb(dctx.decompress(f.read()))
+        payload = msgpack.unpackb(
+            _decompress(f.read(), manifest.get("codec", "zstd")))
     paths, leaves, treedef = _flatten_with_paths(target_tree)
     if paths != manifest["paths"]:
         missing = set(manifest["paths"]) ^ set(paths)

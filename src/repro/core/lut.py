@@ -126,6 +126,21 @@ def flat_product_table(w_bits: int = 4, a_bits: int = 4, **kw) -> np.ndarray:
     return product_table(w_bits, a_bits, **kw).reshape(-1)
 
 
+def contraction_table(a_signed: bool = False) -> np.ndarray:
+    """[16, 16] product table laid out for the one-hot contraction kernel.
+
+    Row = weight code, column = activation code — so a [*, 16] one-hot of
+    weight codes right-multiplied by this table yields each position's
+    16-entry product row, and a one-hot of activation codes then selects
+    within it (kernels/lutmul/kernel.py).  All entries fit int8
+    ([-56, 64] for w4a4), which is what lets both contraction stages run as
+    int8 MXU dots.
+    """
+    t = product_table(w_signed=True, a_signed=a_signed)
+    assert t.min() >= -128 and t.max() <= 127, "table must fit int8"
+    return t
+
+
 # ---------------------------------------------------------------------------
 # Eq. (3) — LUT cost model
 # ---------------------------------------------------------------------------

@@ -1,0 +1,2 @@
+"""Distribution utilities: sharding rules, parameter partitioning specs,
+and straggler monitoring for multi-host training."""

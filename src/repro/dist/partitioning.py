@@ -1,0 +1,89 @@
+"""Param/opt-state PartitionSpec derivation from leaf *names*.
+
+``param_specs`` walks a param pytree (arrays or ShapeDtypeStructs) and assigns
+each leaf a PartitionSpec from its key path — the same regex-on-keystr idiom
+``serve.quantize`` uses for eligibility.  Projection weights get
+(fsdp, tensor-parallel) on their trailing (d_in, d_out) dims; leading stack
+dims (layer group, expert) are left unsharded unless named; everything
+unmatched is replicated (P()), which is always legal under pjit.
+
+``state_specs`` reuses the same leaf rule: optimizer moments live under
+``['opt']['mu']/...`` with identical path *suffixes*, so they inherit their
+parameter's layout for free.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import Rules
+
+# weights whose trailing dims are [d_in, d_out] with d_out the TP dim
+_COL_PARALLEL = re.compile(
+    r"\['(wq|wk|wv|wi|wg|wr|wu|in_proj)'\]\['(w|w_q)'\]$")
+# output projections: [tp_in, d_out] — TP on the contracting dim
+_ROW_PARALLEL = re.compile(r"\['(wo|out_proj)'\]\['(w|w_q)'\]$")
+# split-head 3D variants [d, H, dh] / [H, dh, d]
+_COL_3D = re.compile(r"\['(wq3|wk3|wv3)'\]\['w'\]$")
+_ROW_3D = re.compile(r"\['wo3'\]\['w'\]$")
+# MoE expert banks are raw leaves [E, d, ff] / [E, ff, d]
+_MOE_IN = re.compile(r"\['moe'\]\['w[ig]'\](\['w_q'\])?$")
+_MOE_OUT = re.compile(r"\['moe'\]\['wo'\](\['w_q'\])?$")
+_EMBED = re.compile(r"\['embed'\]\['emb'\]$")
+_HEAD = re.compile(r"\['lm_head'\]\['(w|w_q)'\]$")
+_SCALE = re.compile(r"\['w_scale'\]$")
+
+
+def _tail(ndim: int, *entries) -> P:
+    """Right-align ``entries`` onto an ndim-rank spec, None-padding the
+    leading (stack) dims; drops entries that don't fit small ranks."""
+    entries = entries[-ndim:] if len(entries) > ndim else entries
+    return P(*(((None,) * (ndim - len(entries))) + tuple(entries)))
+
+
+def leaf_spec(path: str, ndim: int, rules: Rules) -> P:
+    g = rules.get
+    tp_attn = g("heads")
+    tp_mlp = g("mlp")
+    tp = tp_attn if "['attn']" in path else tp_mlp
+    if ndim < 2:
+        return P()
+    if _MOE_IN.search(path):
+        return _tail(ndim, g("expert"), g("fsdp"), g("expert_mlp"))
+    if _MOE_OUT.search(path):
+        return _tail(ndim, g("expert"), g("expert_mlp"), g("fsdp"))
+    if _EMBED.search(path):
+        return _tail(ndim, g("vocab"), g("fsdp"))
+    if _HEAD.search(path):
+        return _tail(ndim, g("fsdp"), g("vocab"))
+    if _COL_3D.search(path):
+        return _tail(ndim, g("fsdp"), g("heads"), None)
+    if _ROW_3D.search(path):
+        return _tail(ndim, g("heads"), None, g("fsdp"))
+    if _COL_PARALLEL.search(path):
+        return _tail(ndim, g("fsdp"), tp)
+    if _ROW_PARALLEL.search(path):
+        return _tail(ndim, tp, g("fsdp"))
+    if _SCALE.search(path):
+        return _tail(ndim, None, tp)
+    return P()
+
+
+def _specs(tree, rules: Rules):
+    def leaf(path, x):
+        return leaf_spec(jax.tree_util.keystr(path), getattr(x, "ndim", 0),
+                         rules)
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def param_specs(params, rules: Rules):
+    """PartitionSpec tree for a param pytree (arrays or SDS leaves)."""
+    return _specs(params, rules)
+
+
+def state_specs(state, rules: Rules):
+    """PartitionSpec tree for a train state ({"params", "opt"}): optimizer
+    moments mirror their parameter specs via identical path suffixes."""
+    return _specs(state, rules)

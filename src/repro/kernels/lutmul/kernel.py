@@ -1,21 +1,49 @@
 """Pallas TPU kernels: LUT-based quantized matmul (paper Sec. 3.5, TPU-adapted).
 
-``lutmul``: the faithful adaptation — weights stationary in VMEM as packed
-int4 nibbles, multiplication performed by *gathering* from a 256-entry product
-table (the VMEM analogue of the paper's LUT6 constant multipliers), int32
-accumulation, K-innermost grid with output-block revisiting.
+``lutmul`` (one-hot/bitplane contraction, the default): the table lookup
+re-expressed as a tensor contraction so it runs on the MXU instead of scalar
+gathers — the LUT-GEMM / T-MAC move.  For codes ``a[m,k]`` (4-bit
+activations) and ``w[k,n]`` (4-bit weights) the accumulator is
+
+    acc[m,n] = sum_k T[w[k,n], a[m,k]]
+             = sum_{k,b} bit_b(a[m,k]) * TW[(k,b), n]            (b = 0..3)
+    TW[(k,b), n] = sum_{w'} onehot(w[k,n]==w') * T[w', 2^b]
+
+i.e. two ``dot_general`` calls per block: one-hot weight codes select their
+four power-of-two partial products ``T[w, 2^b]`` from the product table (a
+[bk*bn, 16] x [16, 4] dot — the activation-code-8 column carries the top
+bit's sign, so signed vs unsigned activations is purely a table-layout
+choice), then bitplaned activation nibbles select-and-reduce over K (a
+[bm, bk*4] x [bk*4, bn] dot with int32 accumulation).  Multiplication is
+still performed by *selection from the product table* — the faithful LUT
+semantics — but the selection is a contraction the MXU executes natively:
+on TPU both dots are int8 (every operand value fits int8).  The MAC count is
+4x an int8 matmul (the price of selection); the serial per-row gather loop
+it replaces is ~5-8x slower even in interpret mode and far worse on real
+hardware.
+
+``lutmul_gather``: the previous faithful-but-serial adaptation — a per-k
+``jnp.take`` loop over the 256-entry table — retained as the A/B baseline
+for ``benchmarks/kernel_bench.py``.
+
+``lutmul_fused`` / ``int_matmul_fused``: the same kernels with the dequant
+epilogue fused in — per-token activation scale [bm, 1] and per-channel weight
+scale [1, bn] applied to the int32 accumulator at the last K step, writing
+``out_dtype`` directly so callers never materialize a separate fp32 [M, N]
+intermediate.
 
 ``int_matmul``: the "DSP packing" baseline — int8 x int8 MXU dot with int32
 accumulation under identical tiling, so the bench comparison isolates the
 multiplication mechanism.
 
-Block shapes are MXU/VPU aligned: (bm, bk, bn) multiples of (8, 128, 128) —
-int8 operand tiles use (32, 128) native tiling on TPU; the defaults keep the
-per-block VMEM footprint under ~1.5 MB:
-  a tile   bm*bk          (uint8)
-  w tile   bk*bn/2        (uint8, packed)
-  out tile bm*bn*4        (int32)
-  table    256*4 = 1 KiB
+Block shapes are MXU/VPU aligned: (bm, bk, bn) multiples of (8, 128, 128);
+the defaults keep the per-block VMEM footprint under ~2 MB:
+  a tile      bm*bk            (uint8)
+  a one-hot   bm*bk*16         (int8)
+  w tile      bk*bn/2          (uint8, packed)
+  TW tile     bk*16*bn         (int8)
+  acc tile    bm*bn*4          (int32)
+  table       16*16 int8/int32
 """
 from __future__ import annotations
 
@@ -24,6 +52,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 DEFAULT_BM = 128
@@ -31,7 +60,57 @@ DEFAULT_BN = 128
 DEFAULT_BK = 128
 
 
-def _lutmul_body(a_ref, w_ref, t_ref, out_ref, *, unroll: int = 8):
+def _unpack_codes(wp: jax.Array) -> jax.Array:
+    """[bk//2, bn] packed nibbles -> [bk, bn] int32 codes (k-major)."""
+    w_lo = wp & 0xF
+    w_hi = (wp >> 4) & 0xF
+    return jnp.stack([w_lo, w_hi], axis=1).reshape(-1, wp.shape[1])
+
+
+def _onehot_contract(a: jax.Array, wp: jax.Array, t2: jax.Array,
+                     contract_dtype=jnp.float32) -> jax.Array:
+    """One block of the one-hot/bitplane LUT contraction (module docstring).
+
+    a: [bm, bk] int32 codes; wp: [bk//2, bn] packed codes; t2: [16, 16] int32
+    product table (row = weight code, col = activation code).  Returns the
+    int32 [bm, bn] partial accumulator.
+
+    ``contract_dtype``: int8 on the TPU path (both dots are MXU-native int8
+    with int32 accumulation — every value involved fits int8); float32 in
+    interpret mode, where XLA:CPU has no fast int8 GEMM.  f32 accumulation is
+    exact here: per-block partial sums are bounded by bk * 64 << 2^24.
+    """
+    bm, bk = a.shape
+    w = _unpack_codes(wp.astype(jnp.int32))                    # [bk, bn]
+    bn = w.shape[1]
+    # selection stage: one-hot weight codes pick their 4 power-of-two partial
+    # products T[w, 2^b] from the product table (T[w, 8] carries the sign of
+    # the activation top bit: -8w for signed codes, +8w for unsigned — the
+    # table layout, not the kernel, decides the signedness)
+    cols = jnp.stack([t2[:, 1], t2[:, 2], t2[:, 4], t2[:, 8]],
+                     axis=1).astype(contract_dtype)            # [16, 4]
+    codes = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 16), 2)
+    w_oh = (w[:, :, None] == codes).reshape(bk * bn, 16).astype(contract_dtype)
+    tw = jax.lax.dot_general(
+        w_oh, cols, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32
+        if contract_dtype == jnp.float32 else jnp.int32)       # [bk*bn, 4]
+    tw = tw.astype(contract_dtype).reshape(
+        bk, bn, 4).transpose(0, 2, 1).reshape(bk * 4, bn)
+    # accumulation stage: bitplane the activation nibbles and contract —
+    # the MXU only ever selects and sums table entries, never multiplies
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 4), 2)
+    a_bits = ((a[:, :, None] >> shifts) & 1).reshape(
+        bm, bk * 4).astype(contract_dtype)
+    acc = jax.lax.dot_general(
+        a_bits, tw, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32
+        if contract_dtype == jnp.float32 else jnp.int32)       # [bm, bn]
+    return acc.astype(jnp.int32)
+
+
+def _lutmul_onehot_body(a_ref, w_ref, t_ref, out_ref, *,
+                        contract_dtype=jnp.float32):
     """Grid: (M/bm, N/bn, K/bk); K is the innermost ('arbitrary') dimension."""
     k = pl.program_id(2)
 
@@ -39,17 +118,26 @@ def _lutmul_body(a_ref, w_ref, t_ref, out_ref, *, unroll: int = 8):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
+    out_ref[...] += _onehot_contract(a_ref[...].astype(jnp.int32),
+                                     w_ref[...], t_ref[...], contract_dtype)
+
+
+def _lutmul_gather_body(a_ref, w_ref, t_ref, out_ref, *, unroll: int = 8):
+    """The retained serial baseline: per-k row gathers from the flat table."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
     a = a_ref[...].astype(jnp.int32)                 # [bm, bk] 4-bit codes
-    wp = w_ref[...].astype(jnp.int32)                # [bk//2, bn] packed
-    w_lo = wp & 0xF
-    w_hi = (wp >> 4) & 0xF
-    w = jnp.stack([w_lo, w_hi], axis=1).reshape(-1, wp.shape[1])  # [bk, bn]
-    table = t_ref[...]                               # [256] int32
+    w = _unpack_codes(w_ref[...].astype(jnp.int32))  # [bk, bn]
+    table = t_ref[...].reshape(-1)                   # [256] int32
 
     bk = a.shape[1]
 
     def body(i, acc):
-        # The LUT6 analogue: product via table gather, not multiplication.
+        # the LUT6 analogue, literally: product via table gather per row
         idx = (w[i, :][None, :] << 4) | a[:, i][:, None]          # [bm, bn]
         return acc + jnp.take(table, idx, axis=0)
 
@@ -61,21 +149,26 @@ def _lutmul_body(a_ref, w_ref, t_ref, out_ref, *, unroll: int = 8):
 
 def lutmul_pallas(a_codes: jax.Array, w_packed: jax.Array, table: jax.Array,
                   *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
-                  bk: int = DEFAULT_BK, interpret: bool = True) -> jax.Array:
-    """a_codes: [M, K] uint8; w_packed: [K//2, N] uint8; table: [256] int32.
+                  bk: int = DEFAULT_BK, impl: str = "onehot",
+                  interpret: bool = True) -> jax.Array:
+    """a_codes: [M, K] uint8; w_packed: [K//2, N] uint8; table: [16, 16] int32.
 
     Shapes must be pre-padded to block multiples (ops.py handles padding).
+    ``impl``: "onehot" (MXU contraction) | "gather" (serial A/B baseline).
     """
     M, K = a_codes.shape
     N = w_packed.shape[1]
     grid = (M // bm, N // bn, K // bk)
+    cd = jnp.float32 if interpret else jnp.int8
+    body = (functools.partial(_lutmul_onehot_body, contract_dtype=cd)
+            if impl == "onehot" else _lutmul_gather_body)
     return pl.pallas_call(
-        _lutmul_body,
+        body,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((256,), lambda i, j, k: (0,)),
+            pl.BlockSpec((16, 16), lambda i, j, k: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
@@ -115,3 +208,109 @@ def int_matmul_pallas(a: jax.Array, w: jax.Array, *, bm: int = DEFAULT_BM,
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
         interpret=interpret,
     )(a, w)
+
+
+# ---------------------------------------------------------------------------
+# fused dequant epilogue variants: int32 accumulate in VMEM scratch, rescale
+# by per-token (a_scale [M, 1]) and per-channel (w_scale [1, N]) factors at
+# the last K step, write out_dtype directly — no fp32 [M, N] intermediate
+# ---------------------------------------------------------------------------
+
+
+def _epilogue(acc, as_blk, ws_blk, out_dtype):
+    return (acc.astype(jnp.float32) * as_blk * ws_blk).astype(out_dtype)
+
+
+def _lutmul_fused_body(a_ref, w_ref, t_ref, as_ref, ws_ref, out_ref, acc_ref,
+                       *, nk: int, out_dtype, contract_dtype=jnp.float32):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _onehot_contract(a_ref[...].astype(jnp.int32),
+                                     w_ref[...], t_ref[...], contract_dtype)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        out_ref[...] = _epilogue(acc_ref[...], as_ref[...], ws_ref[...],
+                                 out_dtype)
+
+
+def lutmul_fused_pallas(a_codes: jax.Array, w_packed: jax.Array,
+                        table: jax.Array, a_scale: jax.Array,
+                        w_scale: jax.Array, *, bm: int = DEFAULT_BM,
+                        bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                        out_dtype=jnp.bfloat16,
+                        interpret: bool = True) -> jax.Array:
+    """One-hot LUT matmul + fused dequant.  a_scale: [M, 1] f32 per-token,
+    w_scale: [1, N] f32 per-channel; returns [M, N] ``out_dtype``."""
+    M, K = a_codes.shape
+    N = w_packed.shape[1]
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    body = functools.partial(_lutmul_fused_body, nk=nk, out_dtype=out_dtype,
+                             contract_dtype=jnp.float32 if interpret
+                             else jnp.int8)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((16, 16), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a_codes, w_packed, table, a_scale, w_scale)
+
+
+def _int_matmul_fused_body(a_ref, w_ref, as_ref, ws_ref, out_ref, acc_ref,
+                           *, nk: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        out_ref[...] = _epilogue(acc_ref[...], as_ref[...], ws_ref[...],
+                                 out_dtype)
+
+
+def int_matmul_fused_pallas(a: jax.Array, w: jax.Array, a_scale: jax.Array,
+                            w_scale: jax.Array, *, bm: int = DEFAULT_BM,
+                            bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                            out_dtype=jnp.bfloat16,
+                            interpret: bool = True) -> jax.Array:
+    """int8 matmul + fused dequant (w4a4_mxu / w8a8 serving path)."""
+    M, K = a.shape
+    N = w.shape[1]
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    body = functools.partial(_int_matmul_fused_body, nk=nk,
+                             out_dtype=out_dtype)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a, w, a_scale, w_scale)

@@ -8,20 +8,35 @@ Backend selection:
                   identical FLOP/byte structure at the roofline level)
 Default: "ref" on CPU, "pallas" on TPU; override with
 ``repro.kernels.lutmul.ops.set_backend(...)`` or REPRO_KERNEL_BACKEND.
+
+Kernel implementation selection (``impl``): "onehot" (MXU contraction,
+default) or "gather" (the serial per-row table-gather baseline, kept for
+A/B benchmarking — see kernel.py).
+
+Block sizes come from :func:`pick_blocks`: a per-(op, M, K, N, backend)
+cached choice.  The default is the aligned heuristic; with autotuning
+enabled (``set_autotune(True)`` or REPRO_LUTMUL_AUTOTUNE=1) the first call
+per shape times a small candidate sweep and caches the winner — intended
+for the TPU backend (ROADMAP: hardware validation pending).
 """
 from __future__ import annotations
 
 import functools
 import os
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.lut import flat_product_table, pack_int4
+from repro.core.lut import contraction_table, pack_int4
 from repro.kernels.lutmul import kernel, ref
 
 _BACKEND: Optional[str] = None
+
+# incremented on every *weight* quantization/packing event (the thing a
+# cached QuantizedLinear must do once, not per forward call — tested)
+WEIGHT_QUANT_COUNT = 0
 
 
 def set_backend(name: Optional[str]) -> None:
@@ -46,26 +61,145 @@ def _pad_to(x: jax.Array, m0: int, m1: int, value=0) -> jax.Array:
     return x
 
 
-_TABLE_SS = jnp.asarray(flat_product_table(a_signed=True), jnp.int32)
-_TABLE_SU = jnp.asarray(flat_product_table(a_signed=False), jnp.int32)
+# tables are lazily built + device-transferred on first kernel use (module
+# import used to eagerly push both tables to device — satellite fix)
+_TABLE_CACHE: dict[bool, jax.Array] = {}
 
+
+def _get_table(a_signed: bool) -> jax.Array:
+    """[16, 16] int32 product table (row = weight code, col = act code)."""
+    t = _TABLE_CACHE.get(a_signed)
+    if t is None:
+        t = jnp.asarray(contraction_table(a_signed=a_signed), jnp.int32)
+        # under a jit trace the constant is a tracer — never cache those
+        if not isinstance(t, jax.core.Tracer):
+            _TABLE_CACHE[a_signed] = t
+    return t
+
+
+# ---------------------------------------------------------------------------
+# block-size selection (+ optional autotune sweep)
+# ---------------------------------------------------------------------------
+
+_AUTOTUNE: Optional[bool] = None
+_BLOCK_CACHE: dict[tuple, tuple[int, int, int]] = {}
+
+# (bm, bn, bk) candidates, all (8, 128, 128)-aligned; the first entry is the
+# heuristic default so a disabled autotuner is a zero-cost lookup
+_CANDIDATES = ((128, 128, 128), (256, 256, 256), (256, 128, 128),
+               (128, 256, 128), (64, 128, 128))
+
+
+def set_autotune(enabled: Optional[bool]) -> None:
+    global _AUTOTUNE
+    _AUTOTUNE = enabled
+
+
+def autotune_enabled() -> bool:
+    if _AUTOTUNE is not None:
+        return _AUTOTUNE
+    return os.environ.get("REPRO_LUTMUL_AUTOTUNE", "0") == "1"
+
+
+def _clip_blocks(M: int, K: int, N: int, bm: int, bn: int,
+                 bk: int) -> tuple[int, int, int]:
+    """Shrink blocks to the (padded) problem so tiny shapes don't over-pad."""
+    bm = min(bm, max(8, 8 * (-(-M // 8))))
+    bn = min(bn, max(128, 128 * (-(-N // 128))))
+    bk = min(bk, max(128, 128 * (-(-K // 128))))
+    return bm, bn, bk
+
+
+def pick_blocks(op: str, M: int, K: int, N: int, backend: str,
+                bench_fn=None) -> tuple[int, int, int]:
+    """Cached (bm, bn, bk) per shape; times a candidate sweep when autotuning
+    is on and a ``bench_fn(bm, bn, bk) -> callable`` is supplied."""
+    key = (op, M, K, N, backend)
+    hit = _BLOCK_CACHE.get(key)
+    if hit is not None:
+        return hit
+    default = _clip_blocks(M, K, N, *_CANDIDATES[0])
+    if not autotune_enabled():
+        _BLOCK_CACHE[key] = default
+        return default
+    if bench_fn is None:      # tracing: can't time; don't poison the cache
+        return default
+    best, best_t = default, float("inf")
+    seen = set()
+    for cand in _CANDIDATES:
+        blocks = _clip_blocks(M, K, N, *cand)
+        if blocks in seen:
+            continue
+        seen.add(blocks)
+        try:
+            run = bench_fn(*blocks)
+            run()                                   # compile
+            run()                                   # warm caches / frequency
+            reps = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                run()
+                reps.append(time.perf_counter() - t0)
+            dt = sorted(reps)[len(reps) // 2]       # median
+        except Exception:                           # infeasible candidate
+            continue
+        if dt < best_t:
+            best, best_t = blocks, dt
+    _BLOCK_CACHE[key] = best
+    return best
+
+
+def _check_lut_shapes(a_codes: jax.Array, w_packed: jax.Array) -> None:
+    K = a_codes.shape[1]
+    if K % 2:
+        raise ValueError(f"lutmul requires even K for packed weights, got {K}")
+    if w_packed.shape[0] * 2 != K:
+        raise ValueError(
+            f"w_packed rows ({w_packed.shape[0]}) must be K//2 = {K // 2}")
+
+
+# ---------------------------------------------------------------------------
+# raw integer matmuls (int32 out, no scales)
+# ---------------------------------------------------------------------------
 
 def lutmul(a_codes: jax.Array, w_packed: jax.Array, *, a_signed: bool = True,
-           backend: Optional[str] = None) -> jax.Array:
+           backend: Optional[str] = None, impl: str = "onehot") -> jax.Array:
     """LUT-based matmul on 4-bit codes. a_codes: [M,K] u8; w_packed: [K//2,N] u8."""
+    _check_lut_shapes(a_codes, w_packed)
     be = backend or get_backend()
     M, K = a_codes.shape
     N = w_packed.shape[1]
     if be == "ref":
         return ref.lutmul_ref(a_codes, w_packed, a_signed)
-    table = _TABLE_SS if a_signed else _TABLE_SU
-    bm, bn, bk = kernel.DEFAULT_BM, kernel.DEFAULT_BN, kernel.DEFAULT_BK
-    bm = min(bm, max(8, 8 * (-(-M // 8))))
+    table = _get_table(a_signed)
+    interpret = be != "pallas"
+
+    def bench(bm, bn, bk):
+        a_p = _pad_to(a_codes, bm, bk)
+        w_p = _pad_to(w_packed, bk // 2, bn)
+        f = jax.jit(functools.partial(
+            kernel.lutmul_pallas, a_p, w_p, table, bm=bm, bn=bn, bk=bk,
+            impl=impl, interpret=interpret))
+        return lambda: f().block_until_ready()
+
+    # a sweep can only time concrete arrays — under a jit trace fall back to
+    # the cache (populated by a prior eager call) or the heuristic
+    if isinstance(a_codes, jax.core.Tracer):
+        bench = None
+    bm, bn, bk = pick_blocks(f"lutmul_{impl}", M, K, N, be, bench)
     a_p = _pad_to(a_codes, bm, bk)
     w_p = _pad_to(w_packed, bk // 2, bn)
     out = kernel.lutmul_pallas(a_p, w_p, table, bm=bm, bn=bn, bk=bk,
-                               interpret=(be != "pallas"))
+                               impl=impl, interpret=interpret)
     return out[:M, :N]
+
+
+def lutmul_gather(a_codes: jax.Array, w_packed: jax.Array, *,
+                  a_signed: bool = True,
+                  backend: Optional[str] = None) -> jax.Array:
+    """The retained serial-gather kernel (A/B baseline for the benches)."""
+    return lutmul(a_codes, w_packed, a_signed=a_signed, backend=backend,
+                  impl="gather")
 
 
 def int_matmul(a: jax.Array, w: jax.Array,
@@ -76,13 +210,93 @@ def int_matmul(a: jax.Array, w: jax.Array,
         return ref.int_matmul_ref(a, w)
     M, K = a.shape
     N = w.shape[1]
-    bm, bn, bk = kernel.DEFAULT_BM, kernel.DEFAULT_BN, kernel.DEFAULT_BK
-    bm = min(bm, max(8, 8 * (-(-M // 8))))
+    interpret = be != "pallas"
+
+    def bench(bm, bn, bk):
+        a_p = _pad_to(a, bm, bk)
+        w_p = _pad_to(w, bk, bn)
+        f = jax.jit(functools.partial(
+            kernel.int_matmul_pallas, a_p, w_p, bm=bm, bn=bn, bk=bk,
+            interpret=interpret))
+        return lambda: f().block_until_ready()
+
+    if isinstance(a, jax.core.Tracer):
+        bench = None
+    bm, bn, bk = pick_blocks("int_matmul", M, K, N, be, bench)
     a_p = _pad_to(a, bm, bk)
     w_p = _pad_to(w, bk, bn)
     out = kernel.int_matmul_pallas(a_p, w_p, bm=bm, bn=bn, bk=bk,
-                                   interpret=(be != "pallas"))
+                                   interpret=interpret)
     return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# fused-epilogue dispatch (kernel backends): int32 accumulate + in-kernel
+# rescale, so no fp32 [M, N] intermediate is materialized
+# ---------------------------------------------------------------------------
+
+def _fused_lut(a_codes, w_packed, a_scale, w_scale, *, a_signed: bool,
+               be: str, out_dtype) -> jax.Array:
+    _check_lut_shapes(a_codes, w_packed)
+    M, K = a_codes.shape
+    N = w_packed.shape[1]
+    table = _get_table(a_signed)
+    interpret = be != "pallas"
+    bm, bn, bk = pick_blocks("lutmul_fused", M, K, N, be)
+    a_p = _pad_to(a_codes, bm, bk)
+    w_p = _pad_to(w_packed, bk // 2, bn)
+    as_p = _pad_to(a_scale.astype(jnp.float32), bm, 1)
+    ws_p = _pad_to(w_scale.astype(jnp.float32), 1, bn)
+    out = kernel.lutmul_fused_pallas(a_p, w_p, table, as_p, ws_p, bm=bm,
+                                     bn=bn, bk=bk, out_dtype=out_dtype,
+                                     interpret=interpret)
+    return out[:M, :N]
+
+
+def _fused_int(a_q, w_int, a_scale, w_scale, *, be: str,
+               out_dtype) -> jax.Array:
+    M, K = a_q.shape
+    N = w_int.shape[1]
+    interpret = be != "pallas"
+    bm, bn, bk = pick_blocks("int_matmul_fused", M, K, N, be)
+    a_p = _pad_to(a_q, bm, bk)
+    w_p = _pad_to(w_int, bk, bn)
+    as_p = _pad_to(a_scale.astype(jnp.float32), bm, 1)
+    ws_p = _pad_to(w_scale.astype(jnp.float32), 1, bn)
+    out = kernel.int_matmul_fused_pallas(a_p, w_p, as_p, ws_p, bm=bm, bn=bn,
+                                         bk=bk, out_dtype=out_dtype,
+                                         interpret=interpret)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# quantizers
+# ---------------------------------------------------------------------------
+
+def quantize_activations(x2: jax.Array, bits: int):
+    """Per-token symmetric quant: [M, K] f32 -> (int8 codes, [M, 1] scale)."""
+    qmax = 2 ** (bits - 1) - 1
+    a_scale = jnp.maximum(jnp.max(jnp.abs(x2), axis=1, keepdims=True),
+                          1e-8) / qmax
+    a_q = jnp.clip(jnp.round(x2 / a_scale), -qmax - 1, qmax).astype(jnp.int8)
+    return a_q, a_scale
+
+
+def quantize_weights(wf: jax.Array, bits: int, pack: bool = False):
+    """Per-output-channel symmetric quant: [K, N] f32 -> (codes, [1, N] scale).
+
+    Counted by ``WEIGHT_QUANT_COUNT`` — cached layers must hit this once at
+    load, never per forward call.
+    """
+    global WEIGHT_QUANT_COUNT
+    WEIGHT_QUANT_COUNT += 1
+    qmax = 2 ** (bits - 1) - 1
+    w_scale = jnp.max(jnp.abs(wf), axis=0, keepdims=True) / qmax   # [1, N]
+    w_scale = jnp.maximum(w_scale, 1e-8)
+    w_q = jnp.clip(jnp.round(wf / w_scale), -qmax - 1, qmax).astype(jnp.int8)
+    if pack:
+        w_q = pack_int4(w_q.T).T                                   # pack K
+    return w_q, w_scale
 
 
 # ---------------------------------------------------------------------------
@@ -95,21 +309,39 @@ def prequant_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
     """x: [..., K] float; w_q: packed-int4 uint8 [K//2, N] or int8 [K, N].
 
     Weight bytes on HBM are the integer codes (4x/2x smaller than bf16) —
-    the serving embodiment of the paper's weights-live-in-LUTs idea.
+    the serving embodiment of the paper's weights-live-in-LUTs idea.  On the
+    kernel backends the dequant epilogue is fused: the int32 accumulator is
+    rescaled in-kernel and written as ``compute_dtype`` directly.
     """
     lead = x.shape[:-1]
     K = x.shape[-1]
     N = w_q.shape[-1]
     packed = w_q.dtype == jnp.uint8
+    if packed:                 # both fused and unfused dispatch need this
+        _check_lut_shapes(x.reshape(-1, K), w_q)
     bits = 4 if packed else 8
-    qmax = 2 ** (bits - 1) - 1
     x2 = x.reshape(-1, K).astype(jnp.float32)
-    a_scale = jnp.maximum(jnp.max(jnp.abs(x2), axis=1, keepdims=True), 1e-8) \
-        / qmax
-    a_q = jnp.clip(jnp.round(x2 / a_scale), -qmax - 1, qmax).astype(jnp.int8)
+    a_q, a_scale = quantize_activations(x2, bits)
+    be = backend or get_backend()
+    ws_row = w_scale.reshape(1, N)
+    if be != "ref":
+        if packed and mode == "w4a4_lut":
+            y = _fused_lut(a_q.astype(jnp.uint8) & 0xF, w_q, a_scale, ws_row,
+                           a_signed=True, be=be, out_dtype=compute_dtype)
+        else:
+            if packed:
+                from repro.core.lut import unpack_int4
+                w_int = jnp.swapaxes(
+                    unpack_int4(jnp.swapaxes(w_q, -1, -2), signed=True),
+                    -1, -2)
+            else:
+                w_int = w_q
+            y = _fused_int(a_q, w_int, a_scale, ws_row, be=be,
+                           out_dtype=compute_dtype)
+        return y.reshape(*lead, N)
     if packed and mode == "w4a4_lut":
         acc = lutmul((a_q.astype(jnp.uint8)) & 0xF, w_q, a_signed=True,
-                     backend=backend)
+                     backend=be)
     else:
         if packed:
             from repro.core.lut import unpack_int4
@@ -117,8 +349,8 @@ def prequant_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
                 unpack_int4(jnp.swapaxes(w_q, -1, -2), signed=True), -1, -2)
         else:
             w_int = w_q
-        acc = int_matmul(a_q, w_int, backend=backend)
-    y = acc.astype(jnp.float32) * a_scale * w_scale.reshape(1, N)
+        acc = int_matmul(a_q, w_int, backend=be)
+    y = acc.astype(jnp.float32) * a_scale * ws_row
     return y.reshape(*lead, N).astype(compute_dtype)
 
 
@@ -135,6 +367,10 @@ def quantized_matmul(x: jax.Array, w: jax.Array, mode: str = "w4a4_mxu",
     symmetric per-token int4/int8 (transformer hidden states are signed — the
     unsigned-uint4+threshold path of the paper applies to post-ReLU CNNs and
     is exercised by the MobileNetV2 model).
+
+    NOTE: this path re-quantizes ``w`` on every call — models that own their
+    weights should quantize once via ``models.layers.QuantizedLinear`` (or
+    ``serve.quantize``) and go through :func:`prequant_matmul`.
     """
     lead = x.shape[:-1]
     K = x.shape[-1]
@@ -143,18 +379,22 @@ def quantized_matmul(x: jax.Array, w: jax.Array, mode: str = "w4a4_mxu",
     wf = w.astype(jnp.float32)
 
     bits = 4 if mode.startswith("w4") else 8
-    qmax = 2 ** (bits - 1) - 1
-    w_scale = jnp.max(jnp.abs(wf), axis=0, keepdims=True) / qmax   # [1,N]
-    w_q = jnp.clip(jnp.round(wf / w_scale), -qmax - 1, qmax).astype(jnp.int8)
-    a_scale = jnp.max(jnp.abs(x2), axis=1, keepdims=True) / qmax   # [M,1]
-    a_scale = jnp.maximum(a_scale, 1e-8)
-    a_q = jnp.clip(jnp.round(x2 / a_scale), -qmax - 1, qmax).astype(jnp.int8)
+    a_q, a_scale = quantize_activations(x2, bits)
+    w_q, w_scale = quantize_weights(wf, bits, pack=(mode == "w4a4_lut"))
+    be = backend or get_backend()
 
+    if be != "ref":
+        if mode == "w4a4_lut":
+            y = _fused_lut(a_q.astype(jnp.uint8) & 0xF, w_q, a_scale, w_scale,
+                           a_signed=True, be=be, out_dtype=compute_dtype)
+        else:
+            y = _fused_int(a_q, w_q, a_scale, w_scale, be=be,
+                           out_dtype=compute_dtype)
+        return y.reshape(*lead, N)
     if mode == "w4a4_lut":
-        a_codes = (a_q.astype(jnp.uint8)) & 0xF
-        w_packed = pack_int4(w_q.T).T                  # pack along K
-        acc = lutmul(a_codes, w_packed, a_signed=True, backend=backend)
+        acc = lutmul((a_q.astype(jnp.uint8)) & 0xF, w_q, a_signed=True,
+                     backend=be)
     else:  # w4a4_mxu / w8a8 — integer dot (MXU path)
-        acc = int_matmul(a_q, w_q, backend=backend)
+        acc = int_matmul(a_q, w_q, backend=be)
     y = acc.astype(jnp.float32) * a_scale * w_scale
     return y.reshape(*lead, N).astype(compute_dtype)

@@ -35,3 +35,16 @@ def lutmul_ref(a_codes: jnp.ndarray, w_packed: jnp.ndarray,
 def int_matmul_ref(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """int8 x int8 -> int32 matmul oracle (the 'DSP packing' analogue)."""
     return jnp.matmul(a.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def scaled_lutmul_ref(a_codes: jnp.ndarray, w_packed: jnp.ndarray,
+                      a_scale: jnp.ndarray, w_scale: jnp.ndarray,
+                      a_signed: bool = True,
+                      out_dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle for the fused-dequant kernels: int32 LUT accumulator rescaled
+    by per-token ([M, 1]) and per-channel ([1, N]) factors in f32 — the exact
+    epilogue order ``kernel._epilogue`` applies, so the fused kernels must
+    match this bitwise."""
+    acc = lutmul_ref(a_codes, w_packed, a_signed)
+    return (acc.astype(jnp.float32) * a_scale.astype(jnp.float32)
+            * w_scale.astype(jnp.float32)).astype(out_dtype)

@@ -8,20 +8,18 @@ from __future__ import annotations
 
 import jax
 
-from repro.dist.sharding import Rules, production_rules
+from repro.dist.sharding import Rules, make_mesh, production_rules
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for subprocess integration tests (8 fake devices)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n_data, n_model), ("data", "model"))
 
 
 # Archs whose bf16 weights exceed comfortable TP-only residency -> shard

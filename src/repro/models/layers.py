@@ -200,3 +200,45 @@ def mlp(p: Params, x: jax.Array, kind: str = "swiglu", quant: str = "none",
 def softcap(x: jax.Array, cap: float) -> jax.Array:
     """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
     return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# weight-code caching
+# ---------------------------------------------------------------------------
+
+class QuantizedLinear:
+    """A linear layer that quantizes + packs its weight codes ONCE.
+
+    ``quantized_matmul`` re-derives integer codes from the float weight on
+    every call — fine for QAT experiments, wasteful for inference, where the
+    weight never changes.  This wrapper converts the param leaf to the
+    serving layout ({"w_q", "w_scale"}) at construction; every forward call
+    then takes the pre-quantized path (``prequant_matmul``) and performs no
+    weight quantization or packing (the invariant
+    ``tests`` assert via ``ops.WEIGHT_QUANT_COUNT``).
+
+    >>> qlin = QuantizedLinear(p, mode="w4a4_lut")   # quantize + pack once
+    >>> y = qlin(x)                                  # codes reused
+    """
+
+    def __init__(self, p: Params, mode: str = "w4a4_mxu"):
+        if mode not in ("w4a4_lut", "w4a4_mxu", "w8a8"):
+            raise ValueError(f"unsupported quant mode {mode!r}")
+        self.mode = mode
+        if "w_q" in p:                       # already serving codes
+            self.p = dict(p)
+        else:
+            from repro.serve.quantize import quantize_leaf
+            bits = 4 if mode.startswith("w4") else 8
+            self.p = quantize_leaf(p["w"], bits)
+            if "b" in p:
+                self.p["b"] = p["b"]
+
+    @property
+    def params(self) -> Params:
+        """The cached serving leaf ({"w_q", "w_scale"[, "b"]})."""
+        return self.p
+
+    def __call__(self, x: jax.Array,
+                 compute_dtype=jnp.bfloat16) -> jax.Array:
+        return linear(self.p, x, quant=self.mode, compute_dtype=compute_dtype)

@@ -109,6 +109,8 @@ def parse_collectives(hlo_text: str) -> list[Collective]:
 
 def roofline_terms(cost: dict, hlo_text: str) -> dict:
     """Returns the three terms (seconds) + supporting detail."""
+    if isinstance(cost, (list, tuple)):   # jax<0.5 returns [dict] per program
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     hbm_bytes = float(cost.get("bytes accessed", 0.0))
     colls = parse_collectives(hlo_text)

@@ -22,11 +22,17 @@ class ServeConfig:
     max_len: int = 512
     temperature: float = 0.0
     seed: int = 0
+    quant: Optional[str] = None   # convert weights to serving codes at load
 
 
 class Engine:
     def __init__(self, cfg, params, scfg: ServeConfig = ServeConfig()):
         self.cfg = cfg
+        if scfg.quant:
+            # quantize + pack weight codes ONCE at engine construction (the
+            # weight-code cache); every decode step then reads integer codes
+            from repro.serve.quantize import quantize_params_for_serving
+            params = quantize_params_for_serving(params, mode=scfg.quant)
         self.params = params
         self.scfg = scfg
         self.is_encdec = getattr(cfg, "enc_dec", False)
@@ -56,12 +62,19 @@ class Engine:
                 if key not in c:
                     continue
                 T = c[key].shape[2]
-                is_ring = (key in ("k", "v") and spec.attn_type == "local"
-                           and cfg.window and T == min(cfg.window, S if S >= cfg.window else cfg.window))
-                if key in ("k", "v") and spec.attn_type == "local" and cfg.window:
-                    continue      # already a ring buffer of size window
-                buf = jnp.zeros(c[key].shape[:2] + (M,) + c[key].shape[3:],
-                                c[key].dtype)
+                # local/SWA k/v buffers are rings of at most `window` slots
+                # (decode addresses slot pos % T); everything else grows to
+                # max_len.  Prefill emits a window-size ring only when the
+                # prompt exceeds the window — a shorter prompt's cache (T=S,
+                # slot i == abs pos i == i % target) still needs growing.
+                is_local_kv = (key in ("k", "v")
+                               and spec.attn_type == "local"
+                               and bool(cfg.window))
+                target = min(M, cfg.window) if is_local_kv else M
+                if T == target:
+                    continue
+                buf = jnp.zeros(c[key].shape[:2] + (target,)
+                                + c[key].shape[3:], c[key].dtype)
                 c[key] = jax.lax.dynamic_update_slice_in_dim(
                     buf, c[key], 0, axis=2)
             out.append(c)

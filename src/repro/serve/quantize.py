@@ -28,7 +28,16 @@ _MOE_W = re.compile(r"\['moe'\]\['w[igo]'\]$")
 _HEAD_W = re.compile(r"\['lm_head'\]\['w'\]$")
 
 
-def _quantize_leaf(w: jax.Array, bits: int):
+def quantize_leaf(w: jax.Array, bits: int):
+    """Float weight [..., K, N] -> {"w_q", "w_scale"} serving codes.
+
+    Every weight-quantization event in the codebase funnels through here or
+    ``kernels.lutmul.ops.quantize_weights`` — both bump
+    ``ops.WEIGHT_QUANT_COUNT`` so tests can assert that cached layers
+    quantize once at load, never per forward call.
+    """
+    from repro.kernels.lutmul import ops as lut_ops
+    lut_ops.WEIGHT_QUANT_COUNT += 1
     qmax = 2 ** (bits - 1) - 1
     scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True) \
         / qmax
@@ -37,6 +46,9 @@ def _quantize_leaf(w: jax.Array, bits: int):
     if bits == 4:
         q = jnp.swapaxes(pack_int4(jnp.swapaxes(q, -1, -2)), -1, -2)
     return {"w_q": q, "w_scale": scale.astype(jnp.float32)}
+
+
+_quantize_leaf = quantize_leaf          # backwards-compat alias
 
 
 def quantize_params_for_serving(params, mode: str = "w4a4_mxu"):

@@ -6,6 +6,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import pytest
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:          # container without hypothesis: use the shim
+    import _hypothesis_stub
+    _hypothesis_stub.install(sys.modules)
+
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration tests")

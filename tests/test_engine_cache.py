@@ -1,0 +1,78 @@
+"""Engine cache stitching (serve/engine._grow_cache) + quantize-at-load.
+
+The ring-buffer predicate regression: a short prompt (S < window) produces a
+full-size (non-ring) prefill cache that MUST be grown to min(max_len, window)
+— the old code skipped every local layer whenever a window was configured,
+leaving an S-slot buffer whose modular addressing dropped in-window tokens.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve.engine import Engine, ServeConfig
+
+
+def _gemma_engine(max_len=24, dtype="float32"):
+    cfg = configs.get_config("gemma2-2b", smoke=True)
+    cfg = dataclasses.replace(cfg, compute_dtype=dtype)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params, Engine(cfg, params, ServeConfig(max_len=max_len))
+
+
+def test_grow_cache_local_layers_grow_to_window():
+    cfg, params, eng = _gemma_engine(max_len=24)
+    S = 4                                       # shorter than window (8)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0, cfg.vocab)
+    _, cache = eng._prefill(params, prompts)
+    grown = eng._grow_cache(cache, S)
+    for spec, c in zip(cfg.pattern, grown):
+        T_dim = c["k"].shape[2]
+        if spec.attn_type == "local":
+            assert T_dim == min(24, cfg.window) == 8
+        else:
+            assert T_dim == 24
+
+
+def test_grow_cache_ring_buffers_untouched():
+    cfg, params, eng = _gemma_engine(max_len=24)
+    S = 12                                      # longer than window: ring
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0, cfg.vocab)
+    _, cache = eng._prefill(params, prompts)
+    for spec, c in zip(cfg.pattern, cache):
+        if spec.attn_type == "local":
+            assert c["k"].shape[2] == cfg.window     # prefill emitted a ring
+    grown = eng._grow_cache(cache, S)
+    for spec, (c0, c1) in zip(cfg.pattern, zip(cache, grown)):
+        if spec.attn_type == "local":
+            np.testing.assert_array_equal(np.asarray(c0["k"]),
+                                          np.asarray(c1["k"]))
+
+
+@pytest.mark.parametrize("S", [4, 12])
+def test_engine_swa_greedy_matches_forward(S):
+    """Greedy decode through the ring caches must match teacher-forced
+    argmax on its own outputs — for prompts shorter AND longer than the
+    window (the short case is the regression the predicate fix covers)."""
+    cfg, params, eng = _gemma_engine(max_len=32)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0, cfg.vocab)
+    out = eng.generate(prompts, max_new_tokens=6)
+    assert out.shape == (2, S + 6)
+    logits, _ = T.forward(params, cfg, out[:, :-1])
+    want = jnp.argmax(logits[:, S - 1:], axis=-1)
+    np.testing.assert_array_equal(np.asarray(out[:, S:]), np.asarray(want))
+
+
+def test_engine_quantize_at_load():
+    cfg = configs.get_config("qwen2-7b", smoke=True, quant="w4a4_mxu")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, ServeConfig(max_len=16, quant="w4a4_mxu"))
+    # weights were converted to integer codes once, at construction
+    assert "w_q" in eng.params["blocks"][0]["attn"]["wq"]
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 0, cfg.vocab)
+    out = eng.generate(prompts, max_new_tokens=3)
+    assert out.shape == (2, 8)

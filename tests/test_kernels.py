@@ -92,3 +92,115 @@ def test_lutmul_interpret_dtype_sweep():
         got = ops.lutmul(a_codes, w_packed, a_signed=a_signed,
                          backend="interpret")
         np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ---------------------------------------------------------------------------
+# padding edge cases + impl agreement (onehot contraction vs gather vs ref)
+# ---------------------------------------------------------------------------
+
+PAD_SHAPES = [(5, 18, 7),       # everything under one block
+              (3, 130, 5),      # K just over a block
+              (129, 126, 129),  # M/N just over, K just under
+              (7, 2, 1),        # M < 8, minimal K/N
+              (1, 64, 48)]      # single row
+
+
+@pytest.mark.parametrize("M,K,N", PAD_SHAPES)
+def test_lutmul_padding_all_impls_agree(M, K, N):
+    rng = np.random.default_rng(M * 31 + K * 7 + N)
+    a, w, a_codes, w_packed, want = _rand_case(rng, M, K, N)
+    got_ref = np.asarray(ref.lutmul_ref(a_codes, w_packed, a_signed=True))
+    got_onehot = np.asarray(ops.lutmul(a_codes, w_packed,
+                                       backend="interpret", impl="onehot"))
+    got_gather = np.asarray(ops.lutmul(a_codes, w_packed,
+                                       backend="interpret", impl="gather"))
+    np.testing.assert_array_equal(got_ref, want)
+    np.testing.assert_array_equal(got_onehot, want)
+    np.testing.assert_array_equal(got_gather, want)
+
+
+def test_lutmul_odd_k_rejected():
+    a_codes = jnp.zeros((4, 7), jnp.uint8)          # odd K
+    w_packed = jnp.zeros((3, 8), jnp.uint8)
+    with pytest.raises(ValueError, match="even K"):
+        ops.lutmul(a_codes, w_packed)
+    # packed rows must be exactly K // 2
+    with pytest.raises(ValueError, match="K//2"):
+        ops.lutmul(jnp.zeros((4, 8), jnp.uint8), jnp.zeros((3, 8), jnp.uint8))
+
+
+def test_quantized_matmul_padding_shapes():
+    for (M, K, N) in [(5, 30, 7), (1, 128, 3), (100, 130, 70)]:
+        x = jax.random.normal(jax.random.PRNGKey(M), (M, K), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(N), (K, N), jnp.float32)
+        for mode in ("w4a4_lut", "w4a4_mxu", "w8a8"):
+            y_ref = ops.quantized_matmul(x, w, mode=mode, backend="ref",
+                                         compute_dtype=jnp.float32)
+            y_int = ops.quantized_matmul(x, w, mode=mode, backend="interpret",
+                                         compute_dtype=jnp.float32)
+            # same integer accumulator, same epilogue -> bitwise identical
+            np.testing.assert_array_equal(np.asarray(y_ref),
+                                          np.asarray(y_int))
+
+
+def test_prequant_fused_epilogue_matches_ref():
+    from repro.serve.quantize import quantize_leaf
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 34), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (34, 20), jnp.float32)
+    leaf = quantize_leaf(w, 4)
+    for mode in ("w4a4_lut", "w4a4_mxu"):
+        y_ref = ops.prequant_matmul(x, leaf["w_q"], leaf["w_scale"],
+                                    mode=mode, compute_dtype=jnp.float32,
+                                    backend="ref")
+        y_int = ops.prequant_matmul(x, leaf["w_q"], leaf["w_scale"],
+                                    mode=mode, compute_dtype=jnp.float32,
+                                    backend="interpret")
+        np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_int))
+
+
+def test_block_autotuner_caches_winner():
+    rng = np.random.default_rng(0)
+    a, w, a_codes, w_packed, want = _rand_case(rng, 16, 128, 128)
+    ops.set_autotune(True)
+    try:
+        ops._BLOCK_CACHE.clear()
+        got = ops.lutmul(a_codes, w_packed, backend="interpret")
+        key = ("lutmul_onehot", 16, 128, 128, "interpret")
+        assert key in ops._BLOCK_CACHE
+        bm, bn, bk = ops._BLOCK_CACHE[key]
+        assert bm % 8 == 0 and bn % 128 == 0 and bk % 128 == 0
+        np.testing.assert_array_equal(np.asarray(got), want)
+        # second call is a pure cache hit (no sweep) and stays exact
+        got2 = ops.lutmul(a_codes, w_packed, backend="interpret")
+        np.testing.assert_array_equal(np.asarray(got2), want)
+    finally:
+        ops.set_autotune(None)
+        ops._BLOCK_CACHE.clear()
+
+
+def test_fused_kernel_matches_scaled_oracle():
+    rng = np.random.default_rng(3)
+    M, K, N = 10, 64, 33
+    a, w, a_codes, w_packed, _ = _rand_case(rng, M, K, N)
+    a_scale = jnp.asarray(rng.uniform(0.01, 1.0, (M, 1)), jnp.float32)
+    w_scale = jnp.asarray(rng.uniform(0.01, 1.0, (1, N)), jnp.float32)
+    want = ref.scaled_lutmul_ref(a_codes, w_packed, a_scale, w_scale)
+    from repro.kernels.lutmul import kernel, ops as _ops
+    a_p = _ops._pad_to(a_codes, 8, 128)
+    w_p = _ops._pad_to(w_packed, 64, 128)
+    as_p = _ops._pad_to(a_scale, 8, 1)
+    ws_p = _ops._pad_to(w_scale, 1, 128)
+    got = kernel.lutmul_fused_pallas(
+        a_p, w_p, _ops._get_table(True), as_p, ws_p, bm=16, bn=128, bk=128,
+        out_dtype=jnp.float32, interpret=True)[:M, :N]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_prequant_malformed_packed_rejected_on_all_backends():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8), jnp.float32)
+    bad_wq = jnp.zeros((3, 8), jnp.uint8)           # rows != K//2
+    w_scale = jnp.ones((1, 8), jnp.float32)
+    for backend in ("ref", "interpret"):
+        with pytest.raises(ValueError, match="K//2"):
+            ops.prequant_matmul(x, bad_wq, w_scale, mode="w4a4_lut",
+                                backend=backend)

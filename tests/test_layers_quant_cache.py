@@ -1,0 +1,45 @@
+"""QuantizedLinear weight-code caching: quantize + pack once at load, never
+per forward call (counted via ops.WEIGHT_QUANT_COUNT, which every weight
+quantization event in the codebase funnels through)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.lutmul import ops
+from repro.models.layers import QuantizedLinear, init_linear, linear
+
+
+def test_quantized_linear_packs_once():
+    p = init_linear(jax.random.PRNGKey(0), 32, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32), jnp.float32)
+
+    before = ops.WEIGHT_QUANT_COUNT
+    qlin = QuantizedLinear(p, mode="w4a4_lut")
+    assert ops.WEIGHT_QUANT_COUNT == before + 1      # once, at construction
+    assert qlin.params["w_q"].dtype == jnp.uint8     # packed int4 codes
+
+    ys = [qlin(x, compute_dtype=jnp.float32) for _ in range(3)]
+    assert ops.WEIGHT_QUANT_COUNT == before + 1      # forwards: zero repacks
+
+    # the uncached functional path re-quantizes on every call
+    uncached = ops.WEIGHT_QUANT_COUNT
+    for _ in range(3):
+        y_un = linear(p, x, quant="w4a4_lut", compute_dtype=jnp.float32)
+    assert ops.WEIGHT_QUANT_COUNT == uncached + 3
+
+    # same quantizer grid -> the cached path reproduces the uncached output
+    np.testing.assert_array_equal(np.asarray(ys[0]), np.asarray(y_un))
+    np.testing.assert_array_equal(np.asarray(ys[0]), np.asarray(ys[-1]))
+
+
+def test_quantized_linear_accepts_prequantized_leaf():
+    from repro.serve.quantize import quantize_leaf
+    p = init_linear(jax.random.PRNGKey(0), 16, 8, bias=True)
+    leaf = quantize_leaf(p["w"], 8)
+    leaf["b"] = p["b"]
+    before = ops.WEIGHT_QUANT_COUNT
+    qlin = QuantizedLinear(leaf, mode="w8a8")
+    assert ops.WEIGHT_QUANT_COUNT == before          # no re-quantization
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16), jnp.float32)
+    y = qlin(x, compute_dtype=jnp.float32)
+    assert y.shape == (2, 8) and np.isfinite(np.asarray(y)).all()

@@ -54,8 +54,8 @@ def test_compressed_psum_single_axis():
     """Under shard_map on 1 device the mean must be exact after EF."""
     from jax.sharding import Mesh, PartitionSpec as P
     from jax.experimental.shard_map import shard_map
-    mesh = jax.make_mesh((1,), ("dp",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.dist.sharding import make_mesh
+    mesh = make_mesh((1,), ("dp",))
     g = {"w": jnp.asarray([0.5, -0.25, 0.125])}
     r = grad_compress.init_residual(g)
 

@@ -90,8 +90,8 @@ def test_small_mesh_dryrun_subprocess():
         from repro.launch.specs import build_cell
         from repro.roofline import analysis
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.dist.sharding import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         orig = configs.get_config
         configs.get_config = lambda a, quant="none", **kw: orig(
             a, smoke=True, quant=quant)
@@ -139,8 +139,8 @@ def test_compressed_psum_multidevice_subprocess():
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
         from repro.optim import grad_compress
-        mesh = jax.make_mesh((8,), ("dp",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.dist.sharding import make_mesh
+        mesh = make_mesh((8,), ("dp",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
         r = jnp.zeros((8, 64))
         def f(g, r):

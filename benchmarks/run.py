@@ -9,6 +9,12 @@ the paper-comparable quantity (GOPS, FPS, LUT counts, accuracy, ...).
 PRs can diff kernel baselines::
 
     python -m benchmarks.run --only kernel_bench --json BENCH_kernels.json
+
+``--diff BASELINE.json`` prints per-benchmark deltas of this run against a
+committed baseline (median ms and GOP/s, with new/missing rows flagged) so
+later PRs can check regressions mechanically::
+
+    python -m benchmarks.run --only kernel_bench --diff BENCH_kernels.json
 """
 from __future__ import annotations
 
@@ -38,10 +44,37 @@ def _gops(derived: str, us: float | None):
     return float(m.group(1)) / (us / 1e6)
 
 
+def diff_records(records: list[dict], baseline_path: str) -> None:
+    """Per-benchmark deltas vs a committed ``--json`` baseline."""
+    with open(baseline_path) as f:
+        base = {r["name"]: r for r in json.load(f)["rows"]}
+    print(f"\ndiff vs {baseline_path}", file=sys.stderr)
+    print("name,base_ms,new_ms,delta_ms_pct,base_gops,new_gops,delta_gops_pct")
+    seen = set()
+    for r in records:
+        seen.add(r["name"])
+        b = base.get(r["name"])
+        if b is None:
+            print(f"{r['name']},NEW,{r['median_ms']},,,{r['gops'] or ''},")
+            continue
+        dms = (r["median_ms"] / b["median_ms"] - 1) * 100 \
+            if b["median_ms"] else float("nan")
+        dg = ""
+        if r.get("gops") and b.get("gops"):
+            dg = f"{(r['gops'] / b['gops'] - 1) * 100:+.1f}"
+        print(f"{r['name']},{b['median_ms']},{r['median_ms']},{dms:+.1f},"
+              f"{b.get('gops') or ''},{r.get('gops') or ''},{dg}")
+    for name in base:
+        if name not in seen:
+            print(f"{name},MISSING (in baseline, not in this run),,,,,")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,
                     help="write machine-readable results to this path")
+    ap.add_argument("--diff", default=None, metavar="BASELINE.json",
+                    help="print per-benchmark deltas vs a committed baseline")
     ap.add_argument("--only", action="append", default=None,
                     help="run only these benchmark modules (by name)")
     ap.add_argument("--repeats", type=int, default=5)
@@ -72,6 +105,8 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump({"rows": records}, f, indent=1)
         print(f"wrote {args.json} ({len(records)} rows)", file=sys.stderr)
+    if args.diff:
+        diff_records(records, args.diff)
 
 
 if __name__ == "__main__":

@@ -210,6 +210,40 @@ def attention(p: Params, x: jax.Array, positions: jax.Array, *,
     return y
 
 
+def _pos_vec(pos: jax.Array, B: int) -> jax.Array:
+    """Normalize a decode position argument to per-sequence [B] int32.
+
+    Scalar positions (the legacy lock-step schedule) broadcast; [B] vectors
+    (continuous batching: every slot at its own depth) pass through.  Negative
+    positions are the free-slot sentinel — their keys never unmask.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(jnp.atleast_1d(pos), (B,))
+
+
+def _write_kv_slot(cache: jax.Array, new: jax.Array,
+                   slot: jax.Array) -> jax.Array:
+    """Per-sequence cache write: cache [B,T,...], new [B,1,...], slot [B]."""
+    return jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
+    )(cache, new.astype(cache.dtype), slot)
+
+
+def decode_kv_positions(pos: jax.Array, T: int, rolling: bool) -> jax.Array:
+    """Absolute positions of cache slots for per-sequence decode.
+
+    pos: [B] int32 (position being written this step).  Returns [B, T] with
+    the negative sentinel on unwritten / out-of-ring slots.
+    """
+    idx = jnp.arange(T)[None]                                  # [1, T]
+    posb = pos[:, None]
+    if rolling:
+        # slot i holds absolute position: the largest p <= pos with p % T == i
+        k_pos = posb - ((posb - idx) % T)
+        return jnp.where(k_pos < 0, -(10 ** 9), k_pos)
+    return jnp.where((idx <= posb) & (posb >= 0), idx, -(10 ** 9))
+
+
 def decode_attention(p: Params, x: jax.Array, cache_k: jax.Array,
                      cache_v: jax.Array, pos: jax.Array, *,
                      n_heads: int, n_kv: int, head_dim: int,
@@ -219,18 +253,22 @@ def decode_attention(p: Params, x: jax.Array, cache_k: jax.Array,
                      mrope_sections: tuple[int, ...] = (),
                      rolling: bool = False,
                      quant: str = "none", compute_dtype=jnp.bfloat16):
-    """One decode step. x: [B, 1, d]; cache: [B, T, Hkv, D]; pos: scalar int32.
+    """One decode step. x: [B, 1, d]; cache: [B, T, Hkv, D]; pos: scalar or
+    per-sequence [B] int32 (continuous batching: slots at different depths).
 
     Returns (y, new_cache_k, new_cache_v).  With ``rolling=True`` the cache is
     a ring buffer of size ``window`` (SWA serving — bounded memory, the
-    Mistral/Mixtral rolling cache).
+    Mistral/Mixtral rolling cache); slot addressing is per-sequence
+    ``pos[b] % T``.  A negative ``pos[b]`` marks a free slot: its write lands
+    inside its own (free) row and every key stays masked.
     """
     B = x.shape[0]
     T = cache_k.shape[1]
     q = _proj_qkv(p, "wq", x, B, 1, n_heads, head_dim, quant, compute_dtype)
     k = _proj_qkv(p, "wk", x, B, 1, n_kv, head_dim, quant, compute_dtype)
     v = _proj_qkv(p, "wv", x, B, 1, n_kv, head_dim, quant, compute_dtype)
-    posb = jnp.broadcast_to(pos[None], (B,))[:, None]          # [B,1]
+    posv = _pos_vec(pos, B)
+    posb = posv[:, None]                                       # [B,1]
     if rope_mode == "mrope":
         mpos = jnp.broadcast_to(posb[..., None], (B, 1, 3))
         q = apply_mrope(q, mpos, mrope_sections, rope_theta)
@@ -238,18 +276,10 @@ def decode_attention(p: Params, x: jax.Array, cache_k: jax.Array,
     elif rope_mode == "rope":
         q = apply_rope(q, posb, rope_theta)
         k = apply_rope(k, posb, rope_theta)
-    slot = jnp.where(jnp.asarray(rolling), pos % T, jnp.minimum(pos, T - 1))
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
-    # absolute positions of cache slots
-    idx = jnp.arange(T)
-    if rolling:
-        # slot i holds absolute position: the largest p <= pos with p % T == i
-        k_pos = pos - ((pos - idx) % T)
-        k_pos = jnp.where(k_pos < 0, -(10 ** 9), k_pos)
-    else:
-        k_pos = jnp.where(idx <= pos, idx, -(10 ** 9))
-    k_pos = jnp.broadcast_to(k_pos[None], (B, T))
+    slot = posv % T if rolling else jnp.clip(posv, 0, T - 1)
+    cache_k = _write_kv_slot(cache_k, k, slot)
+    cache_v = _write_kv_slot(cache_v, v, slot)
+    k_pos = decode_kv_positions(posv, T, rolling)
     out = full_attention(q, cache_k, cache_v, posb, k_pos, causal=True,
                          window=window, logit_softcap=logit_softcap)
     y = _proj_out(p, out.astype(compute_dtype), B, 1, n_heads, head_dim,
@@ -320,14 +350,15 @@ def decode_attention_int8(p: Params, x: jax.Array, cache: dict,
     """One decode step over an int8-quantized cache.
 
     cache: {"k": s8[B,T,Hkv,D], "v": s8, "k_scale": f32[B,T,Hkv],
-            "v_scale": f32[B,T,Hkv]}.
+            "v_scale": f32[B,T,Hkv]}.  pos: scalar or per-sequence [B].
     """
     B = x.shape[0]
     T = cache["k"].shape[1]
     q = _proj_qkv(p, "wq", x, B, 1, n_heads, head_dim, quant, compute_dtype)
     k = _proj_qkv(p, "wk", x, B, 1, n_kv, head_dim, quant, compute_dtype)
     v = _proj_qkv(p, "wv", x, B, 1, n_kv, head_dim, quant, compute_dtype)
-    posb = jnp.broadcast_to(pos[None], (B,))[:, None]
+    posv = _pos_vec(pos, B)
+    posb = posv[:, None]
     if rope_mode == "rope":
         q = apply_rope(q, posb, rope_theta)
         k = apply_rope(k, posb, rope_theta)
@@ -337,17 +368,13 @@ def decode_attention_int8(p: Params, x: jax.Array, cache: dict,
         k = apply_mrope(k, mpos, mrope_sections, rope_theta)
     k_new, ks_new = quantize_kv(k)
     v_new, vs_new = quantize_kv(v)
-    slot = jnp.minimum(pos, T - 1)
+    slot = jnp.clip(posv, 0, T - 1)
     cache = dict(cache)
-    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, 1)
-    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, 1)
-    cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_scale"], ks_new, slot, 1)
-    cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["v_scale"], vs_new, slot, 1)
-    idx = jnp.arange(T)
-    k_pos = jnp.broadcast_to(jnp.where(idx <= pos, idx, -(10 ** 9))[None],
-                             (B, T))
+    cache["k"] = _write_kv_slot(cache["k"], k_new, slot)
+    cache["v"] = _write_kv_slot(cache["v"], v_new, slot)
+    cache["k_scale"] = _write_kv_slot(cache["k_scale"], ks_new, slot)
+    cache["v_scale"] = _write_kv_slot(cache["v_scale"], vs_new, slot)
+    k_pos = decode_kv_positions(posv, T, rolling=False)
     out = int8_kv_attention(q, cache["k"], cache["k_scale"], cache["v"],
                             cache["v_scale"], posb, k_pos, window=window,
                             logit_softcap=logit_softcap)

@@ -201,14 +201,16 @@ def precompute_cross_kv(params: dict, cfg: ModelConfig, enc_out: jax.Array,
 
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 cache: dict, pos: jax.Array):
-    """token: [B]; returns (logits [B, V], cache)."""
+    """token: [B]; pos: scalar or per-sequence [B] int32.
+    Returns (logits [B, V], cache)."""
     cd = cfg.cdtype
     B = token.shape[0]
     x = params["embed"]["emb"].astype(cd)[token][:, None, :]
     T = cache["k"].shape[2]
-    pe = jax.lax.dynamic_slice_in_dim(sinusoids(T, cfg.d_model).astype(cd),
-                                      jnp.minimum(pos, T - 1), 1, axis=0)
-    x = x + pe[None, 0:1]
+    posv = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (B,))
+    pe = jnp.take(sinusoids(T, cfg.d_model).astype(cd),
+                  jnp.clip(posv, 0, T - 1), axis=0)       # [B, d]
+    x = x + pe[:, None, :]
     q = cfg.quant
 
     def body(carry, scanned):
@@ -216,7 +218,7 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
         bp, ck, cv, xk, xv = scanned
         h = layer_norm(bp["ln1"], x)
         y, ck, cv = attn_lib.decode_attention(
-            bp["self_attn"], h, ck, cv, pos, n_heads=cfg.n_heads,
+            bp["self_attn"], h, ck, cv, posv, n_heads=cfg.n_heads,
             n_kv=cfg.n_kv, head_dim=cfg.head_dim, rope_mode="none",
             quant=q, compute_dtype=cd)
         x = x + y

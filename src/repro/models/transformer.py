@@ -349,8 +349,15 @@ def _roll_local(k: jax.Array, S: int, W: int) -> jax.Array:
 
 
 def _block_prefill(bp, cache_tmpl, spec: BlockSpec, cfg: ModelConfig,
-                   x, positions, shared_p, mrope_positions=None):
-    """Like _block_fwd but also emits the cache entry for decode handoff."""
+                   x, positions, shared_p, mrope_positions=None,
+                   full_kv: bool = False):
+    """Like _block_fwd but also emits the cache entry for decode handoff.
+
+    ``full_kv=True`` keeps local/SWA layers' K/V at full sequence length
+    instead of rolling them into a window-size ring — the serving scheduler
+    stitches the ring itself from the true (traced) prompt length, so padded
+    prompt buckets never leak junk into ring slots.
+    """
     cd = cfg.cdtype
     q = _infer_quant(cfg)
     S = x.shape[1]
@@ -379,7 +386,8 @@ def _block_prefill(bp, cache_tmpl, spec: BlockSpec, cfg: ModelConfig,
         if cfg.gemma_norms:
             y = _norm(bp["post_attn_ln"], y, cfg)
         x = x + y
-        if spec.attn_type == "local" and cfg.window and cfg.window < S:
+        if (spec.attn_type == "local" and cfg.window and cfg.window < S
+                and not full_kv):
             cache["k"] = _roll_local(k.astype(cd), S, cfg.window)
             cache["v"] = _roll_local(v.astype(cd), S, cfg.window)
         else:
@@ -418,12 +426,20 @@ def _block_prefill(bp, cache_tmpl, spec: BlockSpec, cfg: ModelConfig,
 
 def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
             embeddings: Optional[jax.Array] = None,
-            mrope_positions: Optional[jax.Array] = None):
+            mrope_positions: Optional[jax.Array] = None,
+            full_kv: bool = False, length: Optional[jax.Array] = None):
     """Full-sequence forward that also returns the decode cache.
 
     Returns (last_token_logits [B, V], cache) — cache layout matches
     ``init_cache`` per pattern position (attn K/V sized S, or window for
     local/rolling layers; SSM/RWKV final states).
+
+    ``full_kv=True`` keeps local-layer K/V at full length (the serving
+    scheduler arranges the ring at stitch time).  ``length`` ([B] or scalar
+    int32) selects the logits position for right-padded prompt buckets:
+    logits are taken at ``length - 1`` instead of the last position (pad
+    tokens sit after the prompt, so causal masking keeps them out of every
+    real token's attention).
     """
     cd = cfg.cdtype
     if embeddings is not None:
@@ -442,7 +458,7 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
         caches = []
         for bp, spec in zip(group_params, cfg.pattern):
             x, c = _block_prefill(bp, None, spec, cfg, x, positions, shared_p,
-                                  mrope_positions)
+                                  mrope_positions, full_kv=full_kv)
             caches.append(c)
         return x, tuple(caches)
 
@@ -452,7 +468,14 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
                               prevent_cse=False)
     x, cache = maybe_scan(body, x, params["blocks"], cfg.unroll_groups)
     x = _norm(params["final_norm"], x, cfg)
-    logits = _lm_head(params, cfg, x[:, -1].astype(cd)).astype(jnp.float32)
+    if length is None:
+        xl = x[:, -1]
+    else:
+        last = jnp.clip(jnp.broadcast_to(
+            jnp.atleast_1d(jnp.asarray(length, jnp.int32)), (B,)) - 1,
+            0, S - 1)
+        xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    logits = _lm_head(params, cfg, xl.astype(cd)).astype(jnp.float32)
     if cfg.final_softcap:
         logits = softcap(logits, cfg.final_softcap)
     return logits, cache
@@ -594,7 +617,9 @@ def _finish_block_decode(bp, cache, spec, cfg, x, q, cd):
 
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 cache: tuple, pos: jax.Array) -> tuple[jax.Array, tuple]:
-    """One token for the whole batch. token: [B] int32; pos: scalar int32."""
+    """One token for the whole batch. token: [B] int32; pos: scalar int32 or
+    per-sequence [B] int32 (continuous batching — each slot at its own depth;
+    negative marks a free slot whose keys stay masked)."""
     cd = cfg.cdtype
     x = params["embed"]["emb"].astype(cd)[token][:, None, :]    # [B,1,d]
     if cfg.embed_scale:

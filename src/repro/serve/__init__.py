@@ -1,0 +1,36 @@
+"""Serving subsystem: continuous batching over static-shape decode buffers.
+
+Architecture (one compiled graph per box, arrows are host-side control)::
+
+    Request ──▶ Scheduler (FIFO queue, slot map) ──▶ Engine (batch executor)
+                   │  admit: admit_batch = ONE dispatch — batched
+                   │         [slots, bucket] prefill + masked cache-stitch
+                   │         + first-token sampling + slot-state merge
+                   └─ rounds: decode_chunk (lax.scan over `chunk` tokens,
+                              on-device sampling, per-sequence positions)
+
+Static-shape invariants:
+  * live caches are allocated once at ``[G, slots, max_len, ...]``; admission
+    and decode never reshape them — the stitch writes the masked slot rows
+    with traced true prompt lengths, and local/SWA layers' window rings are
+    arranged at stitch time from the true length (padded prompt buckets
+    never leak junk into ring slots; SSM/RWKV models, whose recurrent states
+    are not pad-invariant, admit at exact length in equal-length groups);
+  * decode positions are per-sequence ``pos: [slots]`` int32 — every slot at
+    its own depth; a negative position is the free-slot sentinel (all keys of
+    that row stay masked, its writes land inside its own row);
+  * after warmup there is NO ``jax.jit`` retrace: prefill/stitch compile once
+    per prompt bucket and ``decode_chunk`` exactly once — slot index, length,
+    token/position/done vectors, EOS ids, and sampling parameters are all
+    traced values.
+
+``Engine.generate`` keeps the static-batch path (all sequences in lock-step)
+as the bit-exactness oracle: at temperature 0 the scheduler emits the same
+tokens per request as one-shot static batching.
+"""
+from repro.serve.engine import Engine, ServeConfig, sample_logits
+from repro.serve.request import Request, RequestStatus
+from repro.serve.scheduler import Scheduler
+
+__all__ = ["Engine", "ServeConfig", "Request", "RequestStatus", "Scheduler",
+           "sample_logits"]

@@ -1,10 +1,23 @@
-"""Batched serving engine: prefill -> synchronized decode with typed caches.
+"""Batched serving engine: the batch-step executor under the scheduler.
 
-Static-batch continuous serving (all sequences advance together — the
-TPU-friendly schedule); greedy or temperature sampling.  The engine stitches
-the prefill cache (sized to the prompt) into max_len decode buffers, matching
-``decode_attention``'s addressing, including ring buffers for local/SWA
-layers.
+Two entry paths share the same compiled decode graph:
+
+  * ``generate`` — static batch: all sequences prefill together and advance
+    in lock-step (the legacy demo path, kept as the bit-exactness oracle for
+    the scheduler).
+  * the continuous-batching path driven by ``serve.scheduler.Scheduler`` —
+    ``admit_batch`` (ONE dispatch per admission round: batched ``[slots,
+    bucket]`` full-KV prefill, cache-stitch into the masked slots of the
+    live batch buffers, first-token sampling, slot-state merge; static
+    shapes, no retrace) and ``decode_chunk`` (a ``lax.scan`` over ``chunk``
+    tokens with on-device sampling).
+
+Positions are per-sequence (``pos: [B]`` int32) everywhere in decode; a
+negative position is the free-slot sentinel — the attention mask drops every
+key of that row, and its cache writes land inside its own (free) row.
+Sampling is on-device with per-slot temperature / top-k / top-p and a
+fold-in PRNG (key folded with the global step index), so a chunk of tokens
+needs exactly one host round-trip.
 """
 from __future__ import annotations
 
@@ -14,15 +27,97 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.models import attention as attn_lib
 from repro.models import encdec, transformer
+
+NEG_INF = -1e30
 
 
 @dataclasses.dataclass
 class ServeConfig:
     max_len: int = 512
     temperature: float = 0.0
+    top_k: int = 0                # 0 disables top-k filtering
+    top_p: float = 1.0            # 1.0 disables nucleus filtering
     seed: int = 0
     quant: Optional[str] = None   # convert weights to serving codes at load
+
+
+def sample_logits(logits: jax.Array, key, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Per-row sampling: argmax where temperature <= 0 (exact greedy),
+    otherwise temperature softmax restricted by top-k and/or top-p.
+
+    logits: [B, V] float; temperature/top_k/top_p: scalars or [B].  Python
+    scalars short-circuit: all-greedy skips everything but the argmax, and
+    unfiltered sampling skips the vocab sort — the general (traced-vector)
+    path computes both and selects per row.
+    """
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    static = all(isinstance(x, (int, float))
+                 for x in (temperature, top_k, top_p))
+    if static and temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if static and top_k == 0 and top_p >= 1.0:
+        return jax.random.categorical(
+            key, logits / max(temperature, 1e-6), axis=-1).astype(jnp.int32)
+    temperature = jnp.broadcast_to(
+        jnp.atleast_1d(jnp.asarray(temperature, jnp.float32)), (B,))
+    top_k = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(top_k, jnp.int32)),
+                             (B,))
+    top_p = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(top_p, jnp.float32)),
+                             (B,))
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    sorted_l = -jnp.sort(-logits, axis=-1)               # descending
+    kth = jnp.take_along_axis(sorted_l, (jnp.clip(top_k, 1, V) - 1)[:, None],
+                              axis=-1)
+    keep = jnp.where((top_k > 0)[:, None], logits >= kth, True)
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    probs = jax.nn.softmax(sorted_l / t, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    # nucleus: smallest prefix whose mass reaches top_p (first token always in)
+    n_keep = jnp.maximum(jnp.sum((csum - probs) < top_p[:, None], axis=-1), 1)
+    cutoff = jnp.take_along_axis(sorted_l, (n_keep - 1)[:, None], axis=-1)
+    keep &= jnp.where((top_p < 1.0)[:, None], logits >= cutoff, True)
+    sampled = jax.random.categorical(
+        key, jnp.where(keep, logits, NEG_INF) / t, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+def _write_rows(live: jax.Array, part: jax.Array,
+                mask: jax.Array) -> jax.Array:
+    """Masked multi-slot write: replace batch rows where ``mask`` is set.
+
+    live: [G, B, ...]; part: [G, B, ...] with a possibly shorter time axis
+    (axis 2, P <= M) — only the leading P time slots of masked rows are
+    written (the tail stays masked by the position sentinel until decode
+    overwrites it).  mask: [B] bool.  One static-shape op for the whole
+    admission round, regardless of how many slots fill.
+    """
+    m = mask.reshape((1, -1) + (1,) * (live.ndim - 2))
+    if live.ndim >= 3 and part.shape[2] < live.shape[2]:
+        P = part.shape[2]
+        head = jnp.where(m, part.astype(live.dtype), live[:, :, :P])
+        return live.at[:, :, :P].set(head)
+    return jnp.where(m, part.astype(live.dtype), live)
+
+
+def _ring_from_full(kv_full: jax.Array, lengths: jax.Array,
+                    T: int) -> jax.Array:
+    """Arrange full-length K/V [G, B, P, H, D] into per-row T-slot rings
+    where slot i holds the token with the largest position p < lengths[b],
+    p % T == i — exactly ``decode_attention``'s rolling addressing.  Slots
+    with no valid token (length < T) are zeroed; their positions stay
+    masked."""
+    P = kv_full.shape[2]
+    i = jnp.arange(T)[None]                       # [1, T]
+    L = lengths[:, None]                          # [B, 1]
+    p = (L - 1) - ((L - 1 - i) % T)               # [B, T]
+    vals = jnp.take_along_axis(
+        kv_full, jnp.clip(p, 0, P - 1)[None, :, :, None, None], axis=2)
+    return jnp.where((p >= 0)[None, :, :, None, None], vals,
+                     jnp.zeros((), kv_full.dtype))
 
 
 class Engine:
@@ -37,12 +132,153 @@ class Engine:
         self.scfg = scfg
         self.is_encdec = getattr(cfg, "enc_dec", False)
         mod = encdec if self.is_encdec else transformer
+        self._mod = mod
         self._prefill = jax.jit(lambda p, *a: mod.prefill(p, cfg, *a))
         # donate the cache: decode updates it in place (halves residency)
         self._decode = jax.jit(lambda p, t, c, pos: mod.decode_step(
             p, cfg, t, c, pos), donate_argnums=2)
+        self._admit_fn = jax.jit(self._admit_impl, donate_argnums=1)
+        self._scan_fns: dict[int, callable] = {}
+        # attention KV tolerates right-padded prompt buckets (pad keys stay
+        # position-masked until decode overwrites them); SSM/RWKV recurrent
+        # states do NOT — the recurrence integrates pad embeddings — so the
+        # scheduler must prefill those models at exact prompt length
+        self.has_recurrent_state = (not self.is_encdec and any(
+            spec.kind != "attn" for spec in cfg.pattern))
 
-    # -- cache stitching -----------------------------------------------------
+    # -- scheduler-facing API ------------------------------------------------
+
+    def init_cache(self, batch: int):
+        """Zero decode buffers for ``batch`` slots at max_len (static shapes)."""
+        return self._mod.init_cache(self.cfg, batch, self.scfg.max_len)
+
+    def _stitch_impl(self, cache, pcache, lengths, mask):
+        """Cache-stitch-at-slot: write freshly prefilled rows into the masked
+        batch slots of the live buffers.  pcache rows are slot-aligned: row b
+        fills slot b where ``mask[b]``; other rows are untouched.  Static
+        shapes throughout (lengths and mask are traced vectors)."""
+        cfg = self.cfg
+        out = []
+        for spec, live, part in zip(cfg.pattern, cache, pcache):
+            c = dict(live)
+            if spec.kind == "attn":
+                is_local = spec.attn_type == "local" and bool(cfg.window)
+                T = live["k"].shape[2]
+                for key in ("k", "v"):
+                    piece = part[key]
+                    if is_local:
+                        piece = _ring_from_full(piece, lengths, T)
+                    if "k_scale" in live:            # int8 KV live buffers
+                        q, s = attn_lib.quantize_kv(piece)
+                        c[key] = _write_rows(live[key], q, mask)
+                        c[key + "_scale"] = _write_rows(live[key + "_scale"],
+                                                        s, mask)
+                    else:
+                        c[key] = _write_rows(live[key], piece, mask)
+            elif spec.kind == "mamba2":
+                c["h"] = _write_rows(live["h"], part["h"], mask)
+                c["conv"] = _write_rows(live["conv"], part["conv"], mask)
+            elif spec.kind == "rwkv6":
+                for key in ("S", "xt"):
+                    c[key] = _write_rows(live[key], part[key], mask)
+                if "xc" in live:
+                    # prefill tracks the channel-mix state under "xc" only for
+                    # rwkv_cm patterns; default to zeros otherwise
+                    c["xc"] = _write_rows(live["xc"],
+                                          part.get("xc",
+                                                   jnp.zeros_like(live["xc"])),
+                                          mask)
+            for key in ("shared_k", "shared_v"):
+                if key in live:
+                    c[key] = _write_rows(live[key], part[key], mask)
+            out.append(c)
+        return tuple(out)
+
+    def admit_batch(self, cache, prompts, lengths, mask, budget_one, eos,
+                    temperature, top_k, top_p, tok, pos, done, step0: int):
+        """Admission as ONE dispatch: batched prefill of the admitted
+        prompts, cache-stitch into the masked slots, first-token sampling,
+        and the slot-state merge.
+
+        prompts: [slots, P] int32 right-padded to the bucket (dummy rows for
+        slots that stay empty); lengths/mask/budget_one: per-slot vectors
+        (budget_one marks requests whose whole budget is the first token).
+        Returns (cache, tok, pos, done, tok0, done0) — tok0/done0 are the
+        per-slot first tokens and immediately-finished flags the scheduler
+        reads back for bookkeeping.  Compiles once per prompt bucket.
+        """
+        if self.is_encdec:
+            raise NotImplementedError(
+                "continuous batching serves decoder-only LMs; enc-dec uses "
+                "Engine.generate")
+        key = jax.random.PRNGKey(self.scfg.seed)
+        return self._admit_fn(
+            self.params, cache, jnp.asarray(prompts, jnp.int32),
+            jnp.asarray(lengths, jnp.int32), jnp.asarray(mask, bool),
+            jnp.asarray(budget_one, bool), eos, temperature, top_k, top_p,
+            tok, pos, done, key, jnp.int32(step0))
+
+    def _admit_impl(self, params, cache, prompts, lengths, mask, budget_one,
+                    eos, temperature, top_k, top_p, tok, pos, done, key,
+                    step0):
+        logits, pcache = self._mod.prefill(params, self.cfg, prompts,
+                                           full_kv=True, length=lengths)
+        cache = self._stitch_impl(cache, pcache, lengths, mask)
+        tok0 = sample_logits(logits, jax.random.fold_in(key, step0),
+                             temperature, top_k, top_p)
+        done0 = ((eos >= 0) & (tok0 == eos)) | budget_one
+        active = mask & ~done0
+        tok = jnp.where(mask, tok0, tok)
+        pos = jnp.where(mask, jnp.where(active, lengths, -1), pos)
+        done = jnp.where(mask, ~active, done)
+        return cache, tok, pos, done, tok0, done0
+
+    def decode_chunk(self, cache, tok, pos, done, eos, temperature, top_k,
+                     top_p, step0: int, chunk: int, greedy: bool = False):
+        """Advance every slot ``chunk`` tokens in one dispatch (lax.scan with
+        on-device sampling).  Finished/free slots (done=True) hold their token
+        and position — their cache writes are idempotent.  ``greedy=True``
+        (every slot at temperature 0, no filtering — the caller knows this
+        statically) compiles an argmax-only variant that skips the per-token
+        vocab sort; its tokens are bit-identical to the general path's.
+
+        Returns (cache, tok, pos, done, tokens [B, chunk], dones [B, chunk]).
+        """
+        fn = self._scan_fns.get((chunk, greedy))
+        if fn is None:
+            fn = jax.jit(self._make_decode_scan(chunk, greedy),
+                         donate_argnums=1)
+            self._scan_fns[(chunk, greedy)] = fn
+        key = jax.random.PRNGKey(self.scfg.seed)
+        return fn(self.params, cache, tok, pos, done, eos, temperature,
+                  top_k, top_p, key, jnp.int32(step0))
+
+    def _make_decode_scan(self, chunk: int, greedy: bool):
+        mod, cfg = self._mod, self.cfg
+
+        def run(params, cache, tok, pos, done, eos, temperature, top_k,
+                top_p, key, step0):
+            def step(carry, i):
+                cache, tok, pos, done = carry
+                logits, cache = mod.decode_step(params, cfg, tok, cache, pos)
+                key_i = jax.random.fold_in(key, step0 + i)
+                if greedy:
+                    nxt = sample_logits(logits, key_i, 0.0, 0, 1.0)
+                else:
+                    nxt = sample_logits(logits, key_i, temperature, top_k,
+                                        top_p)
+                nxt = jnp.where(done, tok, nxt)
+                pos = jnp.where(done, pos, pos + 1)
+                done = done | ((nxt == eos) & (eos >= 0))
+                return (cache, nxt, pos, done), (nxt, done)
+
+            (cache, tok, pos, done), (toks, dones) = jax.lax.scan(
+                step, (cache, tok, pos, done), jnp.arange(chunk))
+            return cache, tok, pos, done, toks.T, dones.T
+
+        return run
+
+    # -- cache stitching (static-batch path) ---------------------------------
 
     def _grow_cache(self, cache, prompt_len: int):
         """Pad prefill caches (sized S or window) into max_len buffers."""
@@ -83,8 +319,14 @@ class Engine:
     # -- generation ----------------------------------------------------------
 
     def generate(self, prompts: jax.Array, max_new_tokens: int,
-                 frames: Optional[jax.Array] = None) -> jax.Array:
-        """prompts: [B, S] int32 -> [B, S + max_new_tokens]."""
+                 frames: Optional[jax.Array] = None,
+                 use_scan: bool = True) -> jax.Array:
+        """prompts: [B, S] int32 -> [B, S + max_new_tokens].
+
+        ``use_scan=False`` runs the per-token Python loop (the reference the
+        scanned decode is tested bit-exact against); both paths draw token i
+        with ``fold_in(key, i)``, so they agree at any temperature.
+        """
         B, S = prompts.shape
         if self.is_encdec:
             logits, cache = self._prefill(self.params, frames, prompts)
@@ -92,17 +334,37 @@ class Engine:
             logits, cache = self._prefill(self.params, prompts)
         cache = self._grow_cache(cache, S)
         key = jax.random.PRNGKey(self.scfg.seed)
-        toks = [self._sample(logits, key)]
-        pos = jnp.int32(S)
-        for i in range(max_new_tokens - 1):
-            logits, cache = self._decode(self.params, toks[-1], cache, pos)
-            key, sub = jax.random.split(key)
-            toks.append(self._sample(logits, sub))
-            pos = pos + 1
-        return jnp.concatenate([prompts, jnp.stack(toks, axis=1)], axis=1)
+        sc = self.scfg
+        greedy = sc.temperature <= 0.0 and sc.top_k == 0 and sc.top_p >= 1.0
+        tok = sample_logits(logits, jax.random.fold_in(key, 0),
+                            sc.temperature, sc.top_k, sc.top_p)
+        pos = jnp.full((B,), S, jnp.int32)
+        if max_new_tokens <= 1:
+            return jnp.concatenate([prompts, tok[:, None]], axis=1)
+        if use_scan:
+            done = jnp.zeros((B,), bool)
+            eos = jnp.full((B,), -1, jnp.int32)
+            temp = jnp.full((B,), sc.temperature, jnp.float32)
+            top_k = jnp.full((B,), sc.top_k, jnp.int32)
+            top_p = jnp.full((B,), sc.top_p, jnp.float32)
+            *_, ys, _ = self.decode_chunk(cache, tok, pos, done, eos, temp,
+                                          top_k, top_p, 1,
+                                          max_new_tokens - 1, greedy=greedy)
+            out = jnp.concatenate([tok[:, None], ys], axis=1)
+        else:
+            toks = [tok]
+            for i in range(1, max_new_tokens):
+                logits, cache = self._decode(self.params, tok, cache, pos)
+                tok = sample_logits(logits, jax.random.fold_in(key, i),
+                                    sc.temperature, sc.top_k, sc.top_p)
+                toks.append(tok)
+                pos = pos + 1
+            out = jnp.stack(toks, axis=1)
+        return jnp.concatenate([prompts, out], axis=1)
 
     def _sample(self, logits: jax.Array, key) -> jax.Array:
-        if self.scfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+        """Sample one token per row under the engine-wide ServeConfig
+        (argmax when temperature <= 0, exactly as before; top-k / top-p via
+        :func:`sample_logits`)."""
+        sc = self.scfg
+        return sample_logits(logits, key, sc.temperature, sc.top_k, sc.top_p)

@@ -55,8 +55,16 @@ def quantize_params_for_serving(params, mode: str = "w4a4_mxu"):
     """Replace eligible projection weights with integer codes + scales.
 
     mode: w4a4_lut | w4a4_mxu -> int4 inner, int8 head; w8a8 -> int8 all.
+
+    Every eligible leaf is converted through ``models.layers.QuantizedLinear``
+    — THE weight-code cache: quantize + pack exactly once here, zero
+    weight-quantization events afterwards (serving decode and the QAT eval
+    path in ``train.loop`` both ride this invariant).
     """
-    inner_bits = 4 if mode.startswith("w4") else 8
+    from repro.models.layers import QuantizedLinear
+
+    def codes(leaf: dict, leaf_mode: str) -> dict:
+        return QuantizedLinear(leaf, mode=leaf_mode).params
 
     def walk(tree, path=""):
         if isinstance(tree, dict):
@@ -65,18 +73,12 @@ def quantize_params_for_serving(params, mode: str = "w4a4_mxu"):
                 sub = f"{path}['{k}']"
                 if isinstance(v, dict) and "w" in v and _INNER_W.search(
                         sub + "['w']") and v["w"].ndim >= 2:
-                    q = _quantize_leaf(v["w"], inner_bits)
-                    if "b" in v:
-                        q["b"] = v["b"]
-                    out[k] = q
+                    out[k] = codes(v, mode)
                 elif _MOE_W.search(sub) and not isinstance(v, dict):
-                    out[k] = _quantize_leaf(v, inner_bits)
+                    out[k] = codes({"w": v}, mode)
                 elif isinstance(v, dict) and "w" in v and _HEAD_W.search(
                         sub + "['w']"):
-                    q = _quantize_leaf(v["w"], 8)     # paper: last layer 8-bit
-                    if "b" in v:
-                        q["b"] = v["b"]
-                    out[k] = q
+                    out[k] = codes(v, "w8a8")     # paper: last layer 8-bit
                 else:
                     out[k] = walk(v, sub)
             return out

@@ -1,0 +1,66 @@
+"""Request: the unit of work the continuous-batching scheduler admits.
+
+A request carries everything needed to run one sequence independently of its
+batch neighbours: the prompt, a decode budget, an optional EOS id, per-request
+sampling knobs, and an optional streaming callback invoked as tokens are
+emitted.  Status moves QUEUED -> RUNNING -> FINISHED; ``finish_reason``
+records why decode stopped ("eos" | "length").
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, List, Optional, Sequence
+
+
+class RequestStatus(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # per-request sampling (defaults to the engine ServeConfig when None)
+    temperature: Optional[float] = None
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
+    # streaming: called with (request, token) for every emitted token
+    on_token: Optional[Callable[["Request", int], None]] = None
+
+    # -- scheduler-managed state --------------------------------------------
+    status: RequestStatus = RequestStatus.QUEUED
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None
+    slot: Optional[int] = None            # decode slot while RUNNING
+    arrival_time: Optional[float] = None  # set by the scheduler on submit
+    finish_time: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(self.prompt) < 1:
+            raise ValueError("prompt must be non-empty")
+
+    @property
+    def done(self) -> bool:
+        return self.status == RequestStatus.FINISHED
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.tokens)
+
+    def emit(self, token: int) -> None:
+        """Record one generated token (and stream it)."""
+        self.tokens.append(int(token))
+        if self.on_token is not None:
+            self.on_token(self, int(token))
+
+    def finish(self, reason: str, now: Optional[float] = None) -> None:
+        self.status = RequestStatus.FINISHED
+        self.finish_reason = reason
+        self.finish_time = now
+        self.slot = None

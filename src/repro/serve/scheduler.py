@@ -1,0 +1,250 @@
+"""Continuous-batching scheduler: slot-based request engine.
+
+A fixed pool of ``slots`` decode lanes over one set of live cache buffers
+(static shapes, allocated once).  Requests queue FIFO; whenever slots are
+free the queue head is admitted in ONE batched prefill dispatch (prompts
+padded right to a shared bucket, dummy rows for slots that stay empty), the
+fresh caches are stitched into their slots with one masked write, and decode
+resumes — sequences at different depths advance together through
+per-sequence positions.  Decode runs in ``chunk``-token scan dispatches;
+between chunks the scheduler drains emitted tokens, retires finished
+sequences (EOS or budget), frees their slots, and admits from the queue.
+Batch slots are never idle while work is queued — the request-level
+analogue of keeping the LUT fabric saturated.
+
+Static-shape invariants (TPU-friendly, no retrace after warmup):
+  * live caches are ``[G, slots, max_len, ...]`` — admission writes slot
+    rows via ``Engine.admit_batch`` (traced per-slot lengths + admit mask);
+  * admission prefills a fixed ``[slots, bucket]`` batch, so prefill and
+    stitch compile once per prompt bucket, not per prompt length or per
+    number of admitted requests;
+  * the chunked decode compiles exactly once — slot state (token, position,
+    done, EOS id, sampling params) are all traced ``[slots]`` vectors; free
+    slots carry the negative-position sentinel, which keeps every one of
+    their keys masked.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Deque, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import Engine
+from repro.serve.request import Request, RequestStatus
+
+
+def _bucket_len(L: int, mode) -> int:
+    """Pad target for a length-L prompt: "exact", "pow2", or a fixed multiple."""
+    if mode == "exact":
+        return L
+    if mode == "pow2":
+        P = 8
+        while P < L:
+            P *= 2
+        return P
+    return -(-L // int(mode)) * int(mode)
+
+
+class Scheduler:
+    """FIFO admission over a fixed slot map; ``Engine`` executes the batch."""
+
+    def __init__(self, engine: Engine, slots: int = 4, chunk: int = 8,
+                 prompt_bucket="pow2"):
+        if engine.is_encdec:
+            raise NotImplementedError(
+                "continuous batching serves decoder-only LMs")
+        self.engine = engine
+        self.n_slots = slots
+        self.chunk = chunk
+        # recurrent (SSM/RWKV) states are not pad-invariant: the recurrence
+        # integrates pad-token embeddings, so those models prefill at exact
+        # prompt length and admission groups equal-length requests (trades a
+        # prefill retrace per distinct length for correctness)
+        if engine.has_recurrent_state:
+            prompt_bucket = "exact"
+        self.prompt_bucket = prompt_bucket
+        scfg = engine.scfg
+        self.cache = engine.init_cache(slots)
+        # per-slot device state ([slots] vectors; free slot: pos=-1, done)
+        self.tok = jnp.zeros((slots,), jnp.int32)
+        self.pos = jnp.full((slots,), -1, jnp.int32)
+        self.done = jnp.ones((slots,), bool)
+        # per-slot sampling state is mirrored host-side so admission can
+        # rebuild the vectors without device reads
+        self._eos_h = [-1] * slots
+        self._temp_h = [scfg.temperature] * slots
+        self._topk_h = [scfg.top_k] * slots
+        self._topp_h = [scfg.top_p] * slots
+        self._push_sampling_state()
+        self._step = 0                      # global token step (PRNG fold-in)
+        self.queue: Deque[Request] = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * slots
+        self.finished: List[Request] = []
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, request: Request, now=None) -> Request:
+        """Queue a request.  ``now`` (here and in ``step``/``run``) may be a
+        timestamp or a zero-arg clock callable — the callable is read at the
+        bookkeeping moment, so finish times stamp after the decode chunk
+        that produced the final token."""
+        L = len(request.prompt)
+        max_len = self.engine.scfg.max_len
+        if L + request.max_new_tokens > max_len:
+            raise ValueError(
+                f"prompt ({L}) + max_new_tokens ({request.max_new_tokens}) "
+                f"exceeds max_len ({max_len})")
+        request.arrival_time = now() if callable(now) else now
+        request.status = RequestStatus.QUEUED
+        self.queue.append(request)
+        return request
+
+    def _sampling_for(self, req: Request):
+        scfg = self.engine.scfg
+        temp = scfg.temperature if req.temperature is None else req.temperature
+        top_k = scfg.top_k if req.top_k is None else req.top_k
+        top_p = scfg.top_p if req.top_p is None else req.top_p
+        return float(temp), int(top_k), float(top_p)
+
+    def _reset_slot_sampling(self, slot: int) -> None:
+        """Freed slots fall back to the engine defaults so a past sampling
+        request doesn't keep the greedy decode fast path disabled."""
+        scfg = self.engine.scfg
+        self._eos_h[slot] = -1
+        (self._temp_h[slot], self._topk_h[slot],
+         self._topp_h[slot]) = (scfg.temperature, scfg.top_k, scfg.top_p)
+
+    def _admit(self, now=None) -> int:
+        """Fill free slots from the queue head in ONE fused dispatch
+        (batched prefill + masked stitch + first-token sampling + slot-state
+        merge); returns #admissions."""
+        free = [s for s in range(self.n_slots) if self.slots[s] is None]
+        take = [self.queue.popleft()
+                for _ in range(min(len(free), len(self.queue)))]
+        if self.engine.has_recurrent_state and take:
+            # recurrent states must prefill unpadded: admit only the leading
+            # run of equal-length requests, requeue the rest (FIFO order)
+            L0 = len(take[0].prompt)
+            for i, r in enumerate(take):
+                if len(r.prompt) != L0:
+                    for r2 in reversed(take[i:]):
+                        self.queue.appendleft(r2)
+                    take = take[:i]
+                    break
+        admitted = list(zip(free, take))
+        if not admitted:
+            return 0
+        R = self.n_slots
+        # the bucket never exceeds max_len: submit() guarantees every prompt
+        # fits, and the live buffers are max_len slots long
+        P = min(max(_bucket_len(len(r.prompt), self.prompt_bucket)
+                    for _, r in admitted), self.engine.scfg.max_len)
+        prompts = np.zeros((R, P), np.int32)
+        lengths = np.ones((R,), np.int32)
+        mask = np.zeros((R,), bool)
+        budget_one = np.zeros((R,), bool)
+        for slot, req in admitted:
+            L = len(req.prompt)
+            prompts[slot, :L] = req.prompt
+            lengths[slot] = L
+            mask[slot] = True
+            budget_one[slot] = req.max_new_tokens == 1
+            (self._temp_h[slot], self._topk_h[slot],
+             self._topp_h[slot]) = self._sampling_for(req)
+            self._eos_h[slot] = -1 if req.eos_id is None else int(req.eos_id)
+        self._push_sampling_state()
+        (self.cache, self.tok, self.pos, self.done, tok0,
+         done0) = self.engine.admit_batch(
+            self.cache, prompts, lengths, mask, budget_one, self.eos,
+            self.temperature, self.top_k, self.top_p, self.tok, self.pos,
+            self.done, self._step)
+        self._step += 1
+        tok0_h, done0_h = np.asarray(tok0), np.asarray(done0)
+        if callable(now):
+            now = now()
+        for slot, req in admitted:
+            req.status = RequestStatus.RUNNING
+            req.slot = slot
+            req.emit(int(tok0_h[slot]))
+            if done0_h[slot]:
+                eos = self._eos_h[slot]
+                req.finish("eos" if eos >= 0 and req.tokens[-1] == eos
+                           else "length", now)
+                self.finished.append(req)
+                self._reset_slot_sampling(slot)
+            else:
+                self.slots[slot] = req
+        return len(admitted)
+
+    def _push_sampling_state(self) -> None:
+        self.eos = jnp.asarray(self._eos_h, jnp.int32)
+        self.temperature = jnp.asarray(self._temp_h, jnp.float32)
+        self.top_k = jnp.asarray(self._topk_h, jnp.int32)
+        self.top_p = jnp.asarray(self._topp_h, jnp.float32)
+
+    # -- the scheduling loop -------------------------------------------------
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+    def step(self, now=None) -> int:
+        """One scheduling round: admit into free slots, decode one chunk,
+        retire finished sequences.  Returns the number of useful tokens
+        emitted this round."""
+        self._admit(now)
+        if not any(r is not None for r in self.slots):
+            return 0
+        # host mirrors let us pick the argmax-only decode variant statically
+        greedy = all(t <= 0.0 and k == 0 and p >= 1.0 for t, k, p in
+                     zip(self._temp_h, self._topk_h, self._topp_h))
+        (self.cache, self.tok, self.pos, self.done, toks,
+         dones) = self.engine.decode_chunk(
+            self.cache, self.tok, self.pos, self.done, self.eos,
+            self.temperature, self.top_k, self.top_p, self._step, self.chunk,
+            greedy=greedy)
+        self._step += self.chunk
+        toks_h, dones_h = np.asarray(toks), np.asarray(dones)
+        if callable(now):      # stamp finish times after the chunk completed
+            now = now()
+        emitted, freed = 0, []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            for j in range(self.chunk):
+                req.emit(int(toks_h[slot, j]))
+                emitted += 1
+                if dones_h[slot, j]:
+                    req.finish("eos", now)
+                    break
+                if req.remaining == 0:
+                    req.finish("length", now)
+                    break
+            if req.done:
+                self.finished.append(req)
+                self.slots[slot] = None
+                self._reset_slot_sampling(slot)
+                freed.append(slot)
+        if freed:
+            fm = np.zeros((self.n_slots,), bool)
+            fm[freed] = True
+            fm = jnp.asarray(fm)
+            self.done = self.done | fm
+            self.pos = jnp.where(fm, -1, self.pos)
+        return emitted
+
+    def run(self, requests: Sequence[Request] = (), now=None,
+            max_rounds: int = 100_000) -> List[Request]:
+        """Submit ``requests`` and drive rounds until everything finishes."""
+        for r in requests:
+            self.submit(r, now)
+        rounds = 0
+        while self.has_work:
+            self.step(now)
+            rounds += 1
+            if rounds > max_rounds:
+                raise RuntimeError("scheduler failed to drain "
+                                   f"({len(self.queue)} queued)")
+        return self.finished

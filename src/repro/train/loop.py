@@ -19,7 +19,8 @@ import numpy as np
 from repro.ckpt import checkpoint
 from repro.data import pipeline
 from repro.dist.straggler import StragglerMonitor
-from repro.train.step import TrainConfig, init_state, make_train_step
+from repro.train.step import (TrainConfig, init_state, loss_for,
+                              make_train_step)
 
 
 class SimulatedFailure(RuntimeError):
@@ -35,6 +36,32 @@ class RunConfig:
     fail_at_step: Optional[int] = None     # inject exactly one failure
     max_restarts: int = 3
     log_every: int = 1
+    # QAT eval: periodically evaluate the *deployed* (integer-code) model
+    eval_every: int = 0                    # 0 disables
+    eval_batches: int = 2
+    eval_quant: str = "w4a4_mxu"
+
+
+def make_eval_fn(model_cfg, eval_quant: str = "w4a4_mxu"):
+    """QAT eval through the weight-code cache.
+
+    Evaluating the deployed model means running the integer-code path the
+    serving engine runs.  Weights are quantized + packed ONCE per evaluation
+    (``models.layers.QuantizedLinear`` under ``serve.quantize``); every eval
+    batch then reads the cached codes through ``prequant_matmul`` — zero
+    weight-quantization events per batch, which tests assert via
+    ``kernels.lutmul.ops.WEIGHT_QUANT_COUNT``.
+    """
+    ecfg = dataclasses.replace(model_cfg, quant=eval_quant)
+    eval_step = jax.jit(loss_for(ecfg))
+
+    def evaluate(params, batches) -> float:
+        from repro.serve.quantize import quantize_params_for_serving
+        coded = quantize_params_for_serving(params, mode=eval_quant)
+        losses = [float(eval_step(coded, b)) for b in batches]
+        return sum(losses) / len(losses)
+
+    return evaluate
 
 
 def run(model_cfg, init_params_fn: Callable, dcfg: pipeline.DataConfig,
@@ -42,6 +69,8 @@ def run(model_cfg, init_params_fn: Callable, dcfg: pipeline.DataConfig,
         batch_kind: str = "lm") -> dict:
     """Returns {"history": [metrics...], "restarts": n, "straggler": report}."""
     step_fn = jax.jit(make_train_step(model_cfg, tcfg))
+    eval_fn = make_eval_fn(model_cfg, rcfg.eval_quant) if rcfg.eval_every \
+        else None
     monitor = StragglerMonitor()
     history: list[dict] = []
     restarts = 0
@@ -74,6 +103,14 @@ def run(model_cfg, init_params_fn: Callable, dcfg: pipeline.DataConfig,
             dt = time.time() - t0
             monitor.record("host0", dt)
             metrics.update(step=step, wall_s=dt)
+            if eval_fn is not None and (step + 1) % rcfg.eval_every == 0:
+                # eval batches come from a disjoint step range (held-out
+                # shards of the synthetic stream)
+                ebatches = [
+                    pipeline.lm_batch(dcfg, 10 ** 6 + i) if batch_kind == "lm"
+                    else pipeline.image_batch(dcfg, 10 ** 6 + i)
+                    for i in range(rcfg.eval_batches)]
+                metrics["eval_loss"] = eval_fn(state["params"], ebatches)
             history.append(metrics)
             step += 1
             if step % rcfg.ckpt_every == 0:

@@ -99,6 +99,42 @@ def test_elastic_restore_reshards(tmp_path):
     assert g2.shape == g4.shape == (8, 128)
 
 
+def test_qat_eval_weight_code_cache():
+    """Eval of the deployed (integer-code) model quantizes + packs weights
+    ONCE per evaluation — never per eval batch (the QuantizedLinear
+    weight-code cache, asserted via ops.WEIGHT_QUANT_COUNT)."""
+    from repro.kernels.lutmul import ops
+    cfg = configs.get_config("minicpm-2b", smoke=True)
+    dcfg = pipeline.DataConfig(seed=3, vocab=cfg.vocab, seq_len=16,
+                               global_batch=4)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    evaluate = loop.make_eval_fn(cfg, "w4a4_mxu")
+    b1 = [pipeline.lm_batch(dcfg, 10 ** 6)]
+    b3 = [pipeline.lm_batch(dcfg, 10 ** 6 + i) for i in range(3)]
+    c0 = ops.WEIGHT_QUANT_COUNT
+    l1 = evaluate(params, b1)
+    d1 = ops.WEIGHT_QUANT_COUNT - c0
+    c0 = ops.WEIGHT_QUANT_COUNT
+    l3 = evaluate(params, b3)
+    d3 = ops.WEIGHT_QUANT_COUNT - c0
+    assert d1 == d3 > 0          # quantization events independent of #batches
+    assert np.isfinite([l1, l3]).all()
+
+
+def test_loop_runs_periodic_qat_eval(tmp_path):
+    cfg = configs.get_config("minicpm-2b", smoke=True)
+    dcfg = pipeline.DataConfig(seed=3, vocab=cfg.vocab, seq_len=16,
+                               global_batch=4)
+    r = loop.run(cfg, lambda: T.init_params(jax.random.PRNGKey(0), cfg), dcfg,
+                 TrainConfig(total_steps=4, warmup=1),
+                 loop.RunConfig(steps=4, ckpt_every=10,
+                                ckpt_dir=str(tmp_path), eval_every=2,
+                                eval_batches=1))
+    evs = [m.get("eval_loss") for m in r["history"]]
+    assert evs[1] is not None and evs[3] is not None
+    assert evs[0] is None and evs[2] is None
+
+
 def test_straggler_monitor():
     from repro.dist.straggler import StragglerConfig, StragglerMonitor
     mon = StragglerMonitor(StragglerConfig(threshold=1.5, patience=2))

@@ -1,0 +1,282 @@
+"""Continuous-batching scheduler: equivalence with static batching, EOS
+slot-freeing, per-sequence-position ring addressing, scanned-decode
+bit-exactness, no-retrace static shapes, and top-k/top-p sampling."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import attention as A
+from repro.models import transformer as T
+from repro.serve import Engine, Request, Scheduler, ServeConfig, sample_logits
+
+
+def _engine(arch="qwen2-7b", max_len=32, **scfg):
+    cfg = dataclasses.replace(configs.get_config(arch, smoke=True),
+                              compute_dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params, Engine(cfg, params, ServeConfig(max_len=max_len,
+                                                        **scfg))
+
+
+# ---------------------------------------------------------------------------
+# scheduler == static batching (temperature 0)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,S", [("qwen2-7b", 6), ("gemma2-2b", 4),
+                                    ("gemma2-2b", 12)])
+def test_staggered_continuous_matches_static(arch, S):
+    """Continuous batching with staggered admission emits the same tokens
+    per request as one-shot static batching — including through gemma's
+    SWA ring caches for prompts shorter AND longer than the window."""
+    cfg, params, eng = _engine(arch)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, S), 0, cfg.vocab)
+    want = eng.generate(prompts, max_new_tokens=5)[:, S:]
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    reqs = [Request(prompt=np.asarray(prompts[i]).tolist(), max_new_tokens=5)
+            for i in range(4)]
+    sched.submit(reqs[0])
+    sched.submit(reqs[1])
+    sched.step()                     # first two requests mid-flight...
+    sched.submit(reqs[2])            # ...then more arrive
+    sched.submit(reqs[3])
+    while sched.has_work:
+        sched.step()
+    for i, r in enumerate(reqs):
+        assert r.tokens == np.asarray(want[i]).tolist(), i
+        assert r.done and r.finish_reason == "length"
+
+
+def test_padded_prompt_bucket_matches_static():
+    """Right-padding prompts to a bucket (len 6 -> bucket 8) must not change
+    any emitted token (pad K/V stays masked until decode overwrites it)."""
+    cfg, params, eng = _engine()
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
+    want = eng.generate(prompts, max_new_tokens=5)[:, 6:]
+    sched = Scheduler(eng, slots=2, chunk=4, prompt_bucket="pow2")
+    reqs = [Request(prompt=np.asarray(prompts[i]).tolist(), max_new_tokens=5)
+            for i in range(2)]
+    sched.run(reqs)
+    for i, r in enumerate(reqs):
+        assert r.tokens == np.asarray(want[i]).tolist()
+
+
+# ---------------------------------------------------------------------------
+# EOS early-exit frees the slot
+# ---------------------------------------------------------------------------
+
+def test_eos_early_exit_frees_slot():
+    cfg, params, eng = _engine()
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
+    want = np.asarray(eng.generate(prompts, max_new_tokens=6)[:, 6:])
+    eos = int(want[0, 2])            # req0's greedy stream hits this early
+    hit = int(np.argmax(want[0] == eos))       # first occurrence
+    sched = Scheduler(eng, slots=1, chunk=2, prompt_bucket="exact")
+    r0 = Request(prompt=np.asarray(prompts[0]).tolist(), max_new_tokens=6,
+                 eos_id=eos)
+    r1 = Request(prompt=np.asarray(prompts[1]).tolist(), max_new_tokens=6)
+    sched.run([r0, r1])
+    # r0 stopped at (and including) the first EOS token, under budget
+    assert r0.finish_reason == "eos"
+    assert r0.tokens == want[0, :hit + 1].tolist() and r0.tokens[-1] == eos
+    # the freed slot served r1, whose stream matches static batching
+    assert r1.finish_reason == "length"
+    assert r1.tokens == want[1].tolist()
+    assert all(s is None for s in sched.slots) and not sched.queue
+
+
+# ---------------------------------------------------------------------------
+# per-sequence positions
+# ---------------------------------------------------------------------------
+
+def test_decode_attention_per_sequence_ring_positions():
+    """SWA ring addressing with a [B] position vector must match per-row
+    scalar-position calls (each sequence at its own depth)."""
+    B, W, H, D = 3, 8, 2, 16
+    key = jax.random.PRNGKey(0)
+    p = A.init_attention(key, H * D, H, H, D, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, H * D), jnp.float32)
+    ck = jax.random.normal(jax.random.PRNGKey(2), (B, W, H, D), jnp.float32)
+    cv = jax.random.normal(jax.random.PRNGKey(3), (B, W, H, D), jnp.float32)
+    pos = jnp.asarray([3, 7, 12], jnp.int32)
+    y, nk, nv = A.decode_attention(p, x, ck, cv, pos, n_heads=H, n_kv=H,
+                                   head_dim=D, window=W, rolling=True,
+                                   compute_dtype=jnp.float32)
+    for b in range(B):
+        yb, nkb, nvb = A.decode_attention(
+            p, x[b:b + 1], ck[b:b + 1], cv[b:b + 1], jnp.int32(int(pos[b])),
+            n_heads=H, n_kv=H, head_dim=D, window=W, rolling=True,
+            compute_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(y[b:b + 1]), np.asarray(yb))
+        np.testing.assert_array_equal(np.asarray(nk[b:b + 1]), np.asarray(nkb))
+        np.testing.assert_array_equal(np.asarray(nv[b:b + 1]), np.asarray(nvb))
+
+
+def test_negative_position_is_free_slot_sentinel():
+    """A negative per-sequence position masks every key of that row and
+    writes only inside its own row — active neighbours are untouched."""
+    B, Tlen, H, D = 2, 6, 2, 8
+    p = A.init_attention(jax.random.PRNGKey(0), H * D, H, H, D,
+                         dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, H * D), jnp.float32)
+    ck = jax.random.normal(jax.random.PRNGKey(2), (B, Tlen, H, D), jnp.float32)
+    cv = jax.random.normal(jax.random.PRNGKey(3), (B, Tlen, H, D), jnp.float32)
+    pos = jnp.asarray([2, -1], jnp.int32)      # row 1 is a free slot
+    y, nk, nv = A.decode_attention(p, x, ck, cv, pos, n_heads=H, n_kv=H,
+                                   head_dim=D, compute_dtype=jnp.float32)
+    y0, nk0, nv0 = A.decode_attention(p, x[:1], ck[:1], cv[:1], jnp.int32(2),
+                                      n_heads=H, n_kv=H, head_dim=D,
+                                      compute_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y[:1]), np.asarray(y0))
+    np.testing.assert_array_equal(np.asarray(nk[:1]), np.asarray(nk0))
+    assert np.isfinite(np.asarray(y)).all()    # free row: garbage but finite
+
+
+# ---------------------------------------------------------------------------
+# scanned decode == python-loop decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_scanned_decode_matches_python_loop(temperature):
+    cfg, params, eng = _engine(temperature=temperature)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 0, cfg.vocab)
+    a = eng.generate(prompts, max_new_tokens=6, use_scan=True)
+    b = eng.generate(prompts, max_new_tokens=6, use_scan=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# static shapes: no retrace after warmup
+# ---------------------------------------------------------------------------
+
+def test_no_retrace_across_staggered_admissions():
+    cfg, params, eng = _engine(max_len=48)
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="pow2")
+    sched.submit(Request(prompt=[1, 2, 3, 4, 5, 6], max_new_tokens=6))
+    sched.step()
+    sched.step()                     # warmup: bucket-8 admission + chunk
+    sizes = (eng._admit_fn._cache_size(),
+             eng._scan_fns[(2, True)]._cache_size())
+    assert sizes == (1, 1)
+    for p in ([7, 7, 7], [5, 4, 3, 2, 1], [1, 2, 3, 4, 5, 6, 7, 8]):
+        sched.submit(Request(prompt=p, max_new_tokens=5))
+    while sched.has_work:
+        sched.step()
+    assert (eng._admit_fn._cache_size(),
+            eng._scan_fns[(2, True)]._cache_size()) == sizes
+
+
+# ---------------------------------------------------------------------------
+# sampling: top-k / top-p
+# ---------------------------------------------------------------------------
+
+def test_sample_logits_temperature_zero_is_argmax():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    got = sample_logits(logits, jax.random.PRNGKey(1), 0.0, 0, 1.0)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_sample_logits_topk1_and_tiny_topp_are_greedy():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    greedy = np.asarray(jnp.argmax(logits, -1))
+    for key in range(3):
+        k1 = sample_logits(logits, jax.random.PRNGKey(key), 1.0, 1, 1.0)
+        np.testing.assert_array_equal(np.asarray(k1), greedy)
+        p0 = sample_logits(logits, jax.random.PRNGKey(key), 1.0, 0, 1e-6)
+        np.testing.assert_array_equal(np.asarray(p0), greedy)
+
+
+def test_sample_logits_topk_support():
+    """Sampled tokens always come from the k highest logits."""
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 32))
+    top5 = np.asarray(jnp.argsort(-logits, axis=-1)[:, :5])
+    for key in range(8):
+        got = np.asarray(sample_logits(logits, jax.random.PRNGKey(key),
+                                       1.5, 5, 1.0))
+        for b in range(2):
+            assert got[b] in top5[b]
+
+
+def test_sample_logits_per_row_mix():
+    """Per-slot sampling params: greedy rows stay exact argmax while
+    sampled rows draw from their own filtered distribution."""
+    logits = jax.random.normal(jax.random.PRNGKey(0), (3, 32))
+    temp = jnp.asarray([0.0, 1.0, 0.0])
+    got = np.asarray(sample_logits(logits, jax.random.PRNGKey(7), temp,
+                                   jnp.asarray([0, 1, 0]), 1.0))
+    greedy = np.asarray(jnp.argmax(logits, -1))
+    np.testing.assert_array_equal(got, greedy)  # row 1 top_k=1 -> also argmax
+
+
+def test_scheduler_per_request_sampling_flags():
+    """A temperature>0 top-k request runs alongside greedy requests; its
+    tokens stay inside the model's top-k support at every step."""
+    cfg, params, eng = _engine(max_len=32)
+    g_req = Request(prompt=[1, 2, 3, 4], max_new_tokens=4)
+    s_req = Request(prompt=[5, 6, 7, 8], max_new_tokens=4, temperature=1.0,
+                    top_k=3)
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched.run([g_req, s_req])
+    want = np.asarray(eng.generate(jnp.asarray([[1, 2, 3, 4]]), 4)[:, 4:])
+    assert g_req.tokens == want[0].tolist()      # greedy row unaffected
+    assert len(s_req.tokens) == 4
+
+
+def test_recurrent_state_mixed_length_admission_matches_static():
+    """SSM/RWKV recurrent states are not pad-invariant: mixed-length
+    requests must still decode exactly as their own static runs (the
+    scheduler admits them unpadded, in equal-length groups)."""
+    cfg = configs.get_config("rwkv6-1.6b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, ServeConfig(max_len=24))
+    assert eng.has_recurrent_state
+    p5 = jax.random.randint(jax.random.PRNGKey(1), (1, 5), 0, cfg.vocab)
+    p7 = jax.random.randint(jax.random.PRNGKey(2), (1, 7), 0, cfg.vocab)
+    want5 = np.asarray(eng.generate(p5, max_new_tokens=4)[:, 5:])
+    want7 = np.asarray(eng.generate(p7, max_new_tokens=4)[:, 7:])
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="pow2")
+    assert sched.prompt_bucket == "exact"      # forced for recurrent models
+    r5 = Request(prompt=np.asarray(p5[0]).tolist(), max_new_tokens=4)
+    r7 = Request(prompt=np.asarray(p7[0]).tolist(), max_new_tokens=4)
+    sched.run([r5, r7])
+    assert r5.tokens == want5[0].tolist()
+    assert r7.tokens == want7[0].tolist()
+
+
+def test_prompt_bucket_clamped_to_max_len():
+    """A pow2 bucket larger than max_len must not crash the stitch."""
+    cfg, params, eng = _engine(max_len=48)
+    prompt = list(range(1, 34))                # len 33 -> pow2 bucket 64 > 48
+    want = np.asarray(eng.generate(jnp.asarray([prompt]), 6)[:, 33:])
+    req = Request(prompt=prompt, max_new_tokens=6)
+    Scheduler(eng, slots=2, chunk=3, prompt_bucket="pow2").run([req])
+    assert req.tokens == want[0].tolist()
+
+
+def test_freed_slot_restores_greedy_fast_path():
+    """A finished sampling request must not leave its slot's sampling
+    mirrors behind — later all-greedy rounds take the argmax-only decode
+    variant again."""
+    cfg, params, eng = _engine(max_len=32)
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched.run([Request(prompt=[1, 2, 3, 4], max_new_tokens=3,
+                       temperature=0.9, top_k=4)])
+    assert all(t <= 0.0 and k == 0 and p >= 1.0 for t, k, p in
+               zip(sched._temp_h, sched._topk_h, sched._topp_h))
+    want = np.asarray(eng.generate(jnp.asarray([[5, 6, 7, 8]]), 4)[:, 4:])
+    req = Request(prompt=[5, 6, 7, 8], max_new_tokens=4)
+    sched.run([req])
+    assert req.tokens == want[0].tolist()
+
+
+def test_request_streaming_callback():
+    cfg, params, eng = _engine()
+    seen = []
+    req = Request(prompt=[1, 2, 3, 4], max_new_tokens=4,
+                  on_token=lambda r, t: seen.append(t))
+    Scheduler(eng, slots=1, chunk=2, prompt_bucket="exact").run([req])
+    assert seen == req.tokens and len(seen) == 4

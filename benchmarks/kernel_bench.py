@@ -8,6 +8,8 @@ comparison (contraction must be >= 5x at M=K=N=256, bit-exact vs the
 oracle).  The TPU-side roofline for these kernels comes from the dry-run
 (§Roofline).
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -56,7 +58,12 @@ def run():
     # (both impls sweep the same candidate set, so the A/B stays fair).  The
     # sweep needs concrete arrays, so run each op eagerly once to populate
     # the per-shape block cache before the jitted timing loops.
-    ops.set_autotune(True)
+    # REPRO_LUTMUL_AUTOTUNE=0 pins the heuristic default blocks instead: the
+    # timed sweep picks different winners run-to-run on noisy hosts, which
+    # would make the CI --fail-on-regress gate compare different kernels.
+    autotune = os.environ.get("REPRO_LUTMUL_AUTOTUNE", "1") != "0"
+    if autotune:
+        ops.set_autotune(True)
     ops.lutmul(ab_codes, wb_packed, backend="interpret", impl="onehot")
     ops.lutmul(ab_codes, wb_packed, backend="interpret", impl="gather")
     onehot = jax.jit(lambda a, w: ops.lutmul(a, w, backend="interpret",
@@ -86,7 +93,8 @@ def run():
                       .block_until_ready())
     t_ga = _median_ms(lambda: gather(ab_codes, wb_packed)
                       .block_until_ready())
-    ops.set_autotune(None)
+    if autotune:
+        ops.set_autotune(None)
     yield ("kernel_lutmul_onehot_interpret_256", t_oh * 1e3,
            f"gop_per_call={ab_gops:.3f}")
     yield ("kernel_lutmul_gather_interpret_256", t_ga * 1e3,

@@ -1,7 +1,6 @@
 """Eq. 3 / Fig. 2 — LUTs per multiply vs bit-width, and the quantization-error
 side of the trade-off that led the paper to choose 4-bit."""
 import jax
-import jax.numpy as jnp
 
 from repro.core import lut
 from repro.core.quantization import QuantConfig, quant_error
@@ -18,7 +17,7 @@ def run():
     def calc():
         return [lut.luts_per_multiply(b) for b in (1, 2, 3, 4, 5, 6, 8)]
 
-    derived = ";".join(f"b{b}:luts={l:.2f}:mse={e:.4f}" for b, l, e in rows)
+    derived = ";".join(f"b{b}:luts={c:.2f}:mse={e:.4f}" for b, c, e in rows)
     yield ("eq3_luts_per_multiply_vs_bits", calc, derived)
     # the paper's pick: 4-bit = 2 LUTs, general multiplier 13-28
     lo, hi = lut.luts_per_multiply_general(4)

@@ -1,6 +1,6 @@
 """Serving throughput on this host (smoke config).
 
-Two sections:
+Three sections:
 
   * static-batch quant sweep (unquantized vs W8A8 vs the W4A4 LUT path) —
     the end-to-end embodiment of the paper's technique on the LM pool.  The
@@ -12,6 +12,13 @@ Two sections:
     by the slot Scheduler (admit-on-free-slot) vs grouped static batches
     that wait for their stragglers and pad every member to the group's max
     budget.  Useful-token throughput and request latency per policy.
+  * sharded-engine scaling (``--mesh DxM``, or automatic when the process
+    sees >1 device): the SAME fixed workload through ``ShardedEngine`` on
+    each requested (data, model) mesh — the scaling curve for the
+    tensor-parallel LUT matmul x data-parallel slot pool.  On a CPU host::
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+            python -m benchmarks.serving_bench --mesh 1x1 --mesh 2x2 --mesh 1x8
 
 TPU-projected numbers live in EXPERIMENTS.md §Roofline."""
 import random
@@ -88,7 +95,8 @@ def _poisson_rows():
     reqs = [Request(prompt=p, max_new_tokens=b)
             for p, b in zip(prompts, budgets)]
     idx, t0 = 0, time.perf_counter()
-    clock = lambda: time.perf_counter() - t0     # finish times stamp
+    def clock():                                 # finish times stamp
+        return time.perf_counter() - t0
     while idx < N or sched.has_work:             # post-chunk via the callable
         now = clock()
         while idx < N and arrivals[idx] <= now:
@@ -129,5 +137,91 @@ def _poisson_rows():
     ]
 
 
+def _sharded_workload(engine, slots: int, chunk: int, prompts, budgets):
+    """Drain one fixed request set through a fresh Scheduler; makespan (s)."""
+    sched = Scheduler(engine, slots=slots, chunk=chunk, prompt_bucket="pow2")
+    reqs = [Request(prompt=p, max_new_tokens=b)
+            for p, b in zip(prompts, budgets)]
+    t0 = time.perf_counter()
+    sched.run(reqs)
+    return time.perf_counter() - t0
+
+
+def _sharded_rows(meshes=None):
+    """tokens/s of the sharded engine per (data, model) mesh.
+
+    One fixed seeded workload (same prompts/budgets for every mesh) so the
+    rows form a scaling curve.  Meshes that need more devices than the
+    process has are skipped — run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get the full
+    curve into BENCH_serving.json.
+    """
+    from repro.launch.mesh import make_serving_mesh, parse_mesh
+    from repro.serve import ShardedEngine
+
+    explicit = meshes is not None
+    if meshes is None:
+        meshes = ["1x1", "2x2", "1x8", "8x1"]
+    SLOTS, CHUNK, S, N = 8, 8, 8, 24
+    rng = random.Random(0)
+    cfg = configs.get_config("qwen2-7b", smoke=True, quant="w4a4_lut")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [[rng.randrange(cfg.vocab) for _ in range(S)] for _ in range(N)]
+    budgets = [40 if rng.random() < 0.15 else rng.randint(2, 8)
+               for _ in range(N)]
+    tokens = sum(budgets)
+    rows = []
+    for spec in meshes:
+        nd, nm = parse_mesh(spec)
+        if SLOTS % nd:
+            if explicit:
+                raise ValueError(f"mesh {spec}: data axis must divide "
+                                 f"slots={SLOTS}")
+            continue
+        if nd * nm > jax.device_count():
+            if explicit:
+                make_serving_mesh(spec)      # raises with the XLA_FLAGS recipe
+            continue
+        eng = ShardedEngine(cfg, params,
+                            ServeConfig(max_len=64, quant="w4a4_lut"),
+                            mesh=make_serving_mesh(spec))
+        _sharded_workload(eng, SLOTS, CHUNK, prompts, budgets)   # warmup
+        dt = _sharded_workload(eng, SLOTS, CHUNK, prompts, budgets)
+        rows.append((f"serve_sharded_{spec}", dt * 1e6,
+                     f"tokens_per_s={tokens / dt:.1f};mesh={spec};"
+                     f"slots={SLOTS};chunk={CHUNK};requests={N};"
+                     f"tp_leaves={eng.n_tp_leaves}"))
+    return rows
+
+
 def run():
-    return _quant_sweep() + _poisson_rows()
+    rows = _quant_sweep() + _poisson_rows()
+    if jax.device_count() > 1:
+        rows += _sharded_rows()
+    else:
+        # the committed BENCH_serving.json carries serve_sharded_* rows; a
+        # single-device diff would report them missing (and fail a gate),
+        # so say why they are absent
+        import sys
+        print("serving_bench: 1 device visible — serve_sharded_* rows "
+              "skipped; set XLA_FLAGS=--xla_force_host_platform_device_"
+              "count=8 to produce (and diff) the full scaling curve",
+              file=sys.stderr)
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="sharded-serving scaling curve (see module docstring)")
+    ap.add_argument("--mesh", action="append", metavar="DxM",
+                    help="(data, model) mesh to benchmark; repeatable. "
+                         "Default: the full curve that fits this host.")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for name, us, derived in _sharded_rows(args.mesh):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

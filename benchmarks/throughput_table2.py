@@ -15,7 +15,7 @@ PAPER_LUTS = 529_242
 
 def run():
     layers = fpga_layer_table(MobileNetConfig())
-    total_ops = sum(l.ops for l in layers)
+    total_ops = sum(lyr.ops for lyr in layers)
 
     def model():
         return F.balance_folding(layers, lut_budget=PAPER_LUTS,

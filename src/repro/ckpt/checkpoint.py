@@ -59,7 +59,7 @@ def _decompress(data: bytes, codec: str) -> bytes:
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = [jax.tree_util.keystr(p) for p, _ in flat]
-    leaves = [l for _, l in flat]
+    leaves = [leaf for _, leaf in flat]
     return paths, leaves, treedef
 
 
@@ -67,19 +67,19 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
          async_save: bool = False) -> threading.Thread | None:
     """Serialize ``tree`` (gathered to host) atomically under ``ckpt_dir``."""
     paths, leaves, _ = _flatten_with_paths(tree)
-    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+    host_leaves = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
 
     def _write():
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
         tmp = final + ".tmp"
         os.makedirs(tmp, exist_ok=True)
-        payload = msgpack.packb([l.tobytes() for l in host_leaves])
+        payload = msgpack.packb([leaf.tobytes() for leaf in host_leaves])
         blob, codec = _compress(payload)
         manifest = {
             "step": step,
             "paths": paths,
-            "shapes": [list(l.shape) for l in host_leaves],
-            "dtypes": [str(l.dtype) for l in host_leaves],
+            "shapes": [list(leaf.shape) for leaf in host_leaves],
+            "dtypes": [str(leaf.dtype) for leaf in host_leaves],
             "codec": codec,
             "extra": extra or {},
         }

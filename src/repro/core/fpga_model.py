@@ -133,7 +133,7 @@ def layer_luts(layer: ConvLayer, fold: int, lut_overhead: float = 2.0) -> float:
 
 def pipeline_fps(layers: list[ConvLayer], folds: list[int], freq_hz: float) -> float:
     """Dataflow throughput = f / max_layer_cycles (steady-state, II-limited)."""
-    bottleneck = max(layer_cycles(l, f) for l, f in zip(layers, folds))
+    bottleneck = max(layer_cycles(lyr, f) for lyr, f in zip(layers, folds))
     return freq_hz / bottleneck
 
 
@@ -150,14 +150,15 @@ def balance_folding(layers: list[ConvLayer], lut_budget: float,
     """
     def cost_at(target_cycles: float) -> tuple[float, list[int]]:
         folds = []
-        for i, l in enumerate(layers):
+        for i, lyr in enumerate(layers):
             if i < full_parallel_prefix:
                 folds.append(1)
                 continue
-            pixels = l.h_out * l.w_out
-            fold = max(1, min(l.mults, math.ceil(target_cycles / pixels)))
+            pixels = lyr.h_out * lyr.w_out
+            fold = max(1, min(lyr.mults, math.ceil(target_cycles / pixels)))
             folds.append(fold)
-        total = sum(layer_luts(l, f, lut_overhead) for l, f in zip(layers, folds))
+        total = sum(layer_luts(lyr, f, lut_overhead)
+                    for lyr, f in zip(layers, folds))
         return total, folds
 
     lo, hi = 1.0, 1e9
@@ -177,5 +178,6 @@ def balance_folding(layers: list[ConvLayer], lut_budget: float,
         "folds": folds,
         "total_luts": total,
         "fps": pipeline_fps(layers, folds, freq_hz),
-        "bottleneck_cycles": max(layer_cycles(l, f) for l, f in zip(layers, folds)),
+        "bottleneck_cycles": max(layer_cycles(lyr, f)
+                                 for lyr, f in zip(layers, folds)),
     }

@@ -111,7 +111,7 @@ def project_params(params, spec) -> object:
             return leaf
         return fake_quant(leaf, cfg)
     return jax.tree_util.tree_map(_proj, params, spec,
-                                  is_leaf=lambda l: l is None)
+                                  is_leaf=lambda x: x is None)
 
 
 def quant_error(x: jax.Array, cfg: QuantConfig) -> jax.Array:

@@ -1,0 +1,174 @@
+"""Tensor-parallel plumbing for the quantized/LUT matmul layers.
+
+The paper's scale-out story — fan the multiplication across ~100x more cheap
+LUT multipliers instead of making one DSP faster — maps onto devices here:
+the integer weight codes of every projection are split across the ``model``
+mesh axis and each device runs its share of the LUT contraction.
+
+Two layouts (classic Megatron, adapted to integer codes):
+
+  * **column-parallel** (``tp_col``): the weight keeps full K rows; codes and
+    per-channel scales are split along N.  Every device computes its output
+    columns with *exactly* the math the single-device kernel runs, then an
+    ``all_gather`` rebuilds the full activation.
+  * **row-parallel** (``tp_row``): codes split along K.  The activation
+    quantization scale is taken over the FULL (replicated) activation vector
+    — identical to the single-device scale — each device contracts its K
+    slice into an int32 partial accumulator, and a ``psum`` adds the
+    partials.  int32 addition is associative and exact, so the accumulated
+    value (and the fp32 dequant epilogue applied to it) is bit-identical to
+    the unsharded kernel.  This is why only *integer-code* layers are
+    sharded: a float row-parallel matmul would reassociate an fp32 reduction
+    and drift.
+
+Leaves are tagged structurally: :func:`mark_tp_params` inserts a zero-size
+``tp_col``/``tp_row`` marker array into each sharded leaf dict.  Key presence
+is static pytree structure, so ``models.layers.linear`` can read the layout
+under ``jit``/``shard_map`` tracing with no runtime cost, and the markers
+scan/stitch like any other (empty) leaf.
+
+The context (:func:`tp_context`) is installed by the sharded engine around
+its ``shard_map`` bodies at trace time; outside it every hook here is the
+identity, so single-device code pays nothing.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# parent-key names whose quantized leaves are output projections: codes split
+# along the contracting dim (K) with an exact int32 psum.  Everything else
+# eligible defaults to column-parallel (split N, gather), which is correct
+# for any projection.
+_ROW_PARALLEL_NAMES = frozenset({"wo", "out_proj"})
+# leaves under these parent keys never shard (embeddings are a table lookup;
+# MoE banks are 3D expert stacks routed by moe_ffn, out of scope here)
+_SKIP_NAMES = frozenset({"embed", "moe"})
+
+_CTX: list[tuple[str, int, Optional[str]]] = []
+
+
+@contextlib.contextmanager
+def tp_context(model_axis: str, model_size: int,
+               data_axis: Optional[str] = None):
+    """Activate tensor-parallel dispatch for code traced inside this block
+    (the sharded engine wraps its ``shard_map`` bodies with it)."""
+    _CTX.append((model_axis, model_size, data_axis))
+    try:
+        yield
+    finally:
+        _CTX.pop()
+
+
+def model_axis() -> Optional[str]:
+    return _CTX[-1][0] if _CTX else None
+
+
+def model_size() -> int:
+    return _CTX[-1][1] if _CTX else 1
+
+
+def fold_in_data(key: jax.Array) -> jax.Array:
+    """Give each data shard its own sampling stream (identity outside the
+    context or when no data axis is configured).  Greedy decode never reads
+    the key, so temperature-0 bit-identity is unaffected."""
+    if not _CTX or _CTX[-1][2] is None:
+        return key
+    return jax.random.fold_in(key, jax.lax.axis_index(_CTX[-1][2]))
+
+
+def leaf_tp_mode(p: dict) -> Optional[str]:
+    """Static layout of a (possibly marked) param leaf dict."""
+    if "tp_col" in p:
+        return "col"
+    if "tp_row" in p:
+        return "row"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# parameter marking + spec derivation
+# ---------------------------------------------------------------------------
+
+def _divisible(leaf: dict, mode: str, n_model: int) -> bool:
+    w_q = leaf["w_q"]
+    if w_q.ndim < 2:
+        return False
+    if mode == "row":
+        # packed int4 rows are K//2: splitting rows evenly keeps every
+        # shard's K slice even, so nibble pairs never straddle a boundary
+        return w_q.shape[-2] % n_model == 0
+    return w_q.shape[-1] % n_model == 0
+
+
+def _leaf_specs(leaf: dict, mode: str, axis: str) -> dict:
+    """PartitionSpec per array of one sharded leaf ({"w_q","w_scale"[,"b"]}).
+
+    Specs are right-aligned so stacked (leading-G) block leaves shard the
+    same trailing dims as unstacked ones.  Biases stay replicated: they are
+    added after the gather/psum on the full output.
+    """
+    def tail(ndim: int, *entries) -> P:
+        entries = entries[-ndim:]
+        return P(*(((None,) * (ndim - len(entries))) + tuple(entries)))
+
+    specs = {}
+    for k, v in leaf.items():
+        nd = getattr(v, "ndim", 0)
+        if k == "w_q":
+            specs[k] = tail(nd, axis, None) if mode == "row" \
+                else tail(nd, None, axis)
+        elif k == "w_scale" and mode == "col":
+            specs[k] = tail(nd, None, axis)
+        else:
+            specs[k] = P()
+    return specs
+
+
+def mark_tp_params(params, n_model: int, model_axis: str = "model"):
+    """Tag every shardable quantized leaf and derive its PartitionSpecs.
+
+    Walks the param tree for serving-code leaves (``{"w_q", "w_scale"}``,
+    produced by ``serve.quantize``) whose parent key names a projection.
+    Output projections (``wo``/``out_proj``) become row-parallel, everything
+    else column-parallel; leaves whose sharded dim is not divisible by
+    ``n_model`` stay replicated (correct, just not distributed).
+
+    Returns ``(marked_params, specs, n_sharded)`` — ``specs`` is a pytree of
+    PartitionSpec with the same structure as ``marked_params`` (replicated
+    ``P()`` everywhere that isn't a sharded code/scale).  Markers are
+    zero-size int8 arrays shaped ``leading_stack_dims + (0,)`` so they scan
+    over stacked block params like any other leaf.
+    """
+    n_sharded = 0
+
+    def walk(tree, skip=False):
+        nonlocal n_sharded
+        if isinstance(tree, dict):
+            out, spec = {}, {}
+            for k, v in tree.items():
+                if (not skip and isinstance(v, dict) and "w_q" in v
+                        and k not in _SKIP_NAMES):
+                    mode = "row" if k in _ROW_PARALLEL_NAMES else "col"
+                    if n_model > 1 and _divisible(v, mode, n_model):
+                        leaf = dict(v)
+                        leaf["tp_" + mode] = jnp.zeros(
+                            v["w_q"].shape[:-2] + (0,), jnp.int8)
+                        out[k] = leaf
+                        spec[k] = _leaf_specs(leaf, mode, model_axis)
+                        n_sharded += 1
+                        continue
+                out[k], spec[k] = walk(v, skip or k in _SKIP_NAMES)
+            return out, spec
+        if isinstance(tree, (tuple, list)):
+            pairs = [walk(v, skip) for v in tree]
+            return (type(tree)(p[0] for p in pairs),
+                    type(tree)(p[1] for p in pairs))
+        return tree, P()
+
+    marked, specs = walk(params)
+    return marked, specs, n_sharded

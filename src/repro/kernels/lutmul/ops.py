@@ -303,16 +303,74 @@ def quantize_weights(wf: jax.Array, bits: int, pack: bool = False):
 # pre-quantized (serving) matmul: weights already integer codes on HBM
 # ---------------------------------------------------------------------------
 
+def _unpack_w(w_q: jax.Array) -> jax.Array:
+    """Packed-int4 uint8 [..., K//2, N] -> int8 [..., K, N]."""
+    from repro.core.lut import unpack_int4
+    return jnp.swapaxes(
+        unpack_int4(jnp.swapaxes(w_q, -1, -2), signed=True), -1, -2)
+
+
+def _row_parallel_prequant(x, w_q, w_scale, mode, compute_dtype, be,
+                           axis: str, size: int) -> jax.Array:
+    """Row-parallel (K-sharded) pre-quantized matmul under ``shard_map``.
+
+    ``x`` is the full replicated activation; ``w_q`` is this device's K
+    slice of the codes.  The activation scale comes from the FULL K vector
+    (identical to the single-device scale), each shard contracts its slice
+    into an int32 partial, and ``psum`` adds the partials — int32 addition
+    is exact, so the dequant epilogue sees bit-identical accumulators to the
+    unsharded kernel.  The epilogue is deliberately unfused here: fusion
+    would rescale *partial* sums per shard and break that exactness.
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w_q.shape[-1]
+    packed = w_q.dtype == jnp.uint8
+    bits = 4 if packed else 8
+    rows = w_q.shape[-2]
+    Kl = K // size
+    if (2 * rows if packed else rows) != Kl:
+        raise ValueError(
+            f"row-parallel codes hold {2 * rows if packed else rows} K rows "
+            f"per shard; expected {K}/{size} = {Kl}")
+    x2 = x.reshape(-1, K).astype(jnp.float32)
+    a_q, a_scale = quantize_activations(x2, bits)
+    a_l = jax.lax.dynamic_slice_in_dim(
+        a_q, jax.lax.axis_index(axis) * Kl, Kl, axis=1)
+    if packed and mode == "w4a4_lut":
+        acc = lutmul(a_l.astype(jnp.uint8) & 0xF, w_q, a_signed=True,
+                     backend=be)
+    else:
+        acc = int_matmul(a_l, _unpack_w(w_q) if packed else w_q, backend=be)
+    acc = jax.lax.psum(acc, axis)
+    y = acc.astype(jnp.float32) * a_scale * w_scale.reshape(1, N)
+    return y.reshape(*lead, N).astype(compute_dtype)
+
+
 def prequant_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
                     mode: str = "", compute_dtype=jnp.bfloat16,
-                    backend: Optional[str] = None) -> jax.Array:
+                    backend: Optional[str] = None,
+                    tp: Optional[str] = None) -> jax.Array:
     """x: [..., K] float; w_q: packed-int4 uint8 [K//2, N] or int8 [K, N].
 
     Weight bytes on HBM are the integer codes (4x/2x smaller than bf16) —
     the serving embodiment of the paper's weights-live-in-LUTs idea.  On the
     kernel backends the dequant epilogue is fused: the int32 accumulator is
     rescaled in-kernel and written as ``compute_dtype`` directly.
+
+    ``tp`` ("col" | "row" | None) is the tensor-parallel layout of ``w_q``
+    when tracing inside an active ``dist.tp.tp_context`` (the sharded
+    serving engine): column-parallel computes the local N columns with the
+    unsharded math and all-gathers; row-parallel contracts a K slice and
+    psums the exact int32 accumulator (see ``_row_parallel_prequant``).
+    Outside the context ``tp`` is ignored.
     """
+    from repro.dist import tp as tp_lib
+    axis = tp_lib.model_axis() if tp else None
+    if axis is not None and tp == "row":
+        return _row_parallel_prequant(x, w_q, w_scale, mode, compute_dtype,
+                                      backend or get_backend(), axis,
+                                      tp_lib.model_size())
     lead = x.shape[:-1]
     K = x.shape[-1]
     N = w_q.shape[-1]
@@ -329,29 +387,21 @@ def prequant_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
             y = _fused_lut(a_q.astype(jnp.uint8) & 0xF, w_q, a_scale, ws_row,
                            a_signed=True, be=be, out_dtype=compute_dtype)
         else:
-            if packed:
-                from repro.core.lut import unpack_int4
-                w_int = jnp.swapaxes(
-                    unpack_int4(jnp.swapaxes(w_q, -1, -2), signed=True),
-                    -1, -2)
-            else:
-                w_int = w_q
-            y = _fused_int(a_q, w_int, a_scale, ws_row, be=be,
-                           out_dtype=compute_dtype)
-        return y.reshape(*lead, N)
-    if packed and mode == "w4a4_lut":
-        acc = lutmul((a_q.astype(jnp.uint8)) & 0xF, w_q, a_signed=True,
-                     backend=be)
+            y = _fused_int(a_q, _unpack_w(w_q) if packed else w_q, a_scale,
+                           ws_row, be=be, out_dtype=compute_dtype)
+        y = y.reshape(*lead, N)
     else:
-        if packed:
-            from repro.core.lut import unpack_int4
-            w_int = jnp.swapaxes(
-                unpack_int4(jnp.swapaxes(w_q, -1, -2), signed=True), -1, -2)
+        if packed and mode == "w4a4_lut":
+            acc = lutmul((a_q.astype(jnp.uint8)) & 0xF, w_q, a_signed=True,
+                         backend=be)
         else:
-            w_int = w_q
-        acc = int_matmul(a_q, w_int, backend=be)
-    y = acc.astype(jnp.float32) * a_scale * ws_row
-    return y.reshape(*lead, N).astype(compute_dtype)
+            acc = int_matmul(a_q, _unpack_w(w_q) if packed else w_q,
+                             backend=be)
+        y = (acc.astype(jnp.float32) * a_scale * ws_row) \
+            .reshape(*lead, N).astype(compute_dtype)
+    if axis is not None:                     # column-parallel: N is local
+        y = jax.lax.all_gather(y, axis, axis=-1, tiled=True)
+    return y
 
 
 # ---------------------------------------------------------------------------

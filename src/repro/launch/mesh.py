@@ -22,6 +22,32 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     return make_mesh((n_data, n_model), ("data", "model"))
 
 
+def parse_mesh(spec: str) -> tuple[int, int]:
+    """``"DxM"`` -> (data, model) axis sizes (e.g. ``"2x4"`` -> (2, 4))."""
+    try:
+        d, m = spec.lower().split("x")
+        d, m = int(d), int(m)
+    except ValueError:
+        raise ValueError(f"mesh spec must look like '2x4', got {spec!r}")
+    if d < 1 or m < 1:
+        raise ValueError(f"mesh axes must be positive, got {spec!r}")
+    return d, m
+
+
+def make_serving_mesh(spec: str):
+    """(data, model) mesh for ``serve.sharded.ShardedEngine`` from a "DxM"
+    string.  Works on CPU hosts via the CI recipe
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    n_data, n_model = parse_mesh(spec)
+    need = n_data * n_model
+    if need > jax.device_count():
+        raise ValueError(
+            f"mesh {spec} needs {need} devices but only "
+            f"{jax.device_count()} are visible; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    return make_mesh((n_data, n_model), ("data", "model"))
+
+
 # Archs whose bf16 weights exceed comfortable TP-only residency -> shard
 # params over "data" too when serving (FSDP-style serving).
 FSDP_SERVE_ARCHS = {"mixtral-8x22b", "qwen2-vl-72b", "phi3-medium-14b"}

@@ -6,9 +6,8 @@ Nothing here allocates device memory — params/state/caches are eval_shape'd
 """
 from __future__ import annotations
 
-import functools
 import re
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.dist import partitioning
-from repro.dist.sharding import Rules, spec_for
+from repro.dist.sharding import Rules
 from repro.models import encdec, transformer
 from repro.train.step import TrainConfig, init_state, make_train_step
 

@@ -9,7 +9,7 @@ Pallas flash kernel is a beyond-paper optimization tracked in EXPERIMENTS.md).
 from __future__ import annotations
 
 import math
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,15 +8,14 @@ decoder is causal self-attention + cross-attention to the encoder output.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import constrain
 from repro.models import attention as attn_lib
-from repro.models.layers import (init_embedding, init_linear, init_mlp,
-                                 init_norm, layer_norm, linear, mlp)
+from repro.models.layers import (init_embedding, init_mlp, layer_norm,
+                                 linear, mlp)
 from repro.models.transformer import ModelConfig
 
 
@@ -42,8 +41,9 @@ def _init_enc_block(key, cfg: ModelConfig) -> dict:
 
 def _init_dec_block(key, cfg: ModelConfig) -> dict:
     k1, k2, k3 = jax.random.split(key, 3)
-    ln = lambda: {"scale": jnp.ones((cfg.d_model,), cfg.pdtype),
-                  "bias": jnp.zeros((cfg.d_model,), cfg.pdtype)}
+    def ln():
+        return {"scale": jnp.ones((cfg.d_model,), cfg.pdtype),
+                "bias": jnp.zeros((cfg.d_model,), cfg.pdtype)}
     return {
         "ln1": ln(),
         "self_attn": attn_lib.init_attention(k1, cfg.d_model, cfg.n_heads,
@@ -63,10 +63,12 @@ def init_params(key, cfg: ModelConfig) -> dict:
     keys = jax.random.split(key, nE + nD + 3)
     enc = [ _init_enc_block(keys[i], cfg) for i in range(nE) ]
     dec = [ _init_dec_block(keys[nE + i], cfg) for i in range(nD) ]
-    stack = lambda blocks: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
-                                                  *blocks)
-    ln = lambda: {"scale": jnp.ones((cfg.d_model,), cfg.pdtype),
-                  "bias": jnp.zeros((cfg.d_model,), cfg.pdtype)}
+    def stack(blocks):
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+
+    def ln():
+        return {"scale": jnp.ones((cfg.d_model,), cfg.pdtype),
+                "bias": jnp.zeros((cfg.d_model,), cfg.pdtype)}
     return {
         "enc_blocks": stack(enc),
         "dec_blocks": stack(dec),

@@ -22,8 +22,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import (A4, A8, W4, W8, QuantConfig, compute_scale,
-                                     dequantize, fake_quant, quantize)
+from repro.core.quantization import A4, W4, fake_quant
 
 Params = dict[str, Any]
 
@@ -62,9 +61,11 @@ def linear(p: Params, x: jax.Array, quant: str = "none",
     regardless of ``quant`` — weights are read from HBM as codes.
     """
     if "w_q" in p:
+        from repro.dist.tp import leaf_tp_mode
         from repro.kernels.lutmul import ops as lut_ops
         y = lut_ops.prequant_matmul(x, p["w_q"], p["w_scale"], mode=quant,
-                                    compute_dtype=compute_dtype)
+                                    compute_dtype=compute_dtype,
+                                    tp=leaf_tp_mode(p))
         if "b" in p:
             y = y + p["b"].astype(y.dtype)
         return y

@@ -10,13 +10,11 @@ makes the ``long_500k`` shape tractable for these families.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.dist.sharding import constrain
 from repro.models.layers import Params, init_linear, linear
 
 
@@ -210,7 +208,8 @@ def _rwkv_projections(p, x, x_prev, quant, compute_dtype):
     mu = p["mu"].astype(jnp.float32)
     xf = x.astype(jnp.float32)
     xpf = x_prev.astype(jnp.float32)
-    mix = lambda i: (xf + (xpf - xf) * mu[i]).astype(compute_dtype)
+    def mix(i):
+        return (xf + (xpf - xf) * mu[i]).astype(compute_dtype)
     r = linear(p["wr"], mix(0), quant, compute_dtype)
     k = linear(p["wk"], mix(1), quant, compute_dtype)
     v = linear(p["wv"], mix(2), quant, compute_dtype)

@@ -21,7 +21,7 @@ from repro.dist.sharding import constrain
 from repro.models import attention as attn_lib
 from repro.models import ssm as ssm_lib
 from repro.models.layers import (init_embedding, init_linear, init_mlp,
-                                 init_norm, layer_norm, linear, mlp, rms_norm,
+                                 init_norm, layer_norm, mlp, rms_norm,
                                  softcap)
 from repro.models.moe import MoEConfig, init_moe, moe_ffn
 
@@ -271,9 +271,11 @@ def _lm_head(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
         return x @ params["embed"]["emb"].T.astype(x.dtype)
     lh = params["lm_head"]
     if "w_q" in lh:
+        from repro.dist.tp import leaf_tp_mode
         from repro.kernels.lutmul import ops as lut_ops
         return lut_ops.prequant_matmul(x, lh["w_q"], lh["w_scale"],
-                                       mode=cfg.quant, compute_dtype=x.dtype)
+                                       mode=cfg.quant, compute_dtype=x.dtype,
+                                       tp=leaf_tp_mode(lh))
     return x @ lh["w"].astype(x.dtype)
 
 

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +20,9 @@ def init(params, keep_master: bool = False) -> dict:
     """``keep_master=True``: params may be bf16 for compute/all-gather; a
     fp32 master copy lives in the optimizer state (mixed-precision FSDP —
     halves the per-layer parameter all-gather volume)."""
-    zeros = lambda p: jax.tree_util.tree_map(
-        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    def zeros(p):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), p)
     st = {"m": zeros(params), "v": zeros(params),
           "step": jnp.zeros((), jnp.int32)}
     if keep_master:
@@ -33,8 +33,8 @@ def init(params, keep_master: bool = False) -> dict:
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))
 
 
 def clip_by_global_norm(grads, max_norm: float):

@@ -27,10 +27,17 @@ Static-shape invariants:
 ``Engine.generate`` keeps the static-batch path (all sequences in lock-step)
 as the bit-exactness oracle: at temperature 0 the scheduler emits the same
 tokens per request as one-shot static batching.
+
+``serve.sharded.ShardedEngine`` is the multi-device drop-in: the same
+admission/decode bodies compiled under ``shard_map`` over a (data, model)
+mesh — tensor-parallel integer-code matmuls along ``model``, an independent
+slot-pool shard per ``data`` index — with temperature-0 output bit-identical
+to the single-device engine.
 """
 from repro.serve.engine import Engine, ServeConfig, sample_logits
 from repro.serve.request import Request, RequestStatus
 from repro.serve.scheduler import Scheduler
+from repro.serve.sharded import ShardedEngine
 
 __all__ = ["Engine", "ServeConfig", "Request", "RequestStatus", "Scheduler",
-           "sample_logits"]
+           "ShardedEngine", "sample_logits"]

@@ -137,8 +137,8 @@ class Engine:
         # donate the cache: decode updates it in place (halves residency)
         self._decode = jax.jit(lambda p, t, c, pos: mod.decode_step(
             p, cfg, t, c, pos), donate_argnums=2)
-        self._admit_fn = jax.jit(self._admit_impl, donate_argnums=1)
-        self._scan_fns: dict[int, callable] = {}
+        self._admit_fn = self._build_admit_fn()
+        self._scan_fns: dict[tuple, callable] = {}
         # attention KV tolerates right-padded prompt buckets (pad keys stay
         # position-masked until decode overwrites them); SSM/RWKV recurrent
         # states do NOT — the recurrence integrates pad embeddings — so the
@@ -146,11 +146,27 @@ class Engine:
         self.has_recurrent_state = (not self.is_encdec and any(
             spec.kind != "attn" for spec in cfg.pattern))
 
+    # -- compiled-executor construction (ShardedEngine overrides these with
+    #    shard_map-wrapped variants; the impls themselves are shared) --------
+
+    def _build_admit_fn(self):
+        return jax.jit(self._admit_impl, donate_argnums=1)
+
+    def _build_scan_fn(self, chunk: int, greedy: bool):
+        return jax.jit(self._make_decode_scan(chunk, greedy),
+                       donate_argnums=1)
+
     # -- scheduler-facing API ------------------------------------------------
 
     def init_cache(self, batch: int):
         """Zero decode buffers for ``batch`` slots at max_len (static shapes)."""
         return self._mod.init_cache(self.cfg, batch, self.scfg.max_len)
+
+    def place_slot_state(self, x: jax.Array) -> jax.Array:
+        """Device placement for per-slot ``[slots]`` vectors (identity here;
+        the sharded engine pins them to the data axis so the compiled
+        executors see one stable input sharding from round one)."""
+        return x
 
     def _stitch_impl(self, cache, pcache, lengths, mask):
         """Cache-stitch-at-slot: write freshly prefilled rows into the masked
@@ -221,9 +237,11 @@ class Engine:
     def _admit_impl(self, params, cache, prompts, lengths, mask, budget_one,
                     eos, temperature, top_k, top_p, tok, pos, done, key,
                     step0):
+        from repro.dist import tp as tp_lib
         logits, pcache = self._mod.prefill(params, self.cfg, prompts,
                                            full_kv=True, length=lengths)
         cache = self._stitch_impl(cache, pcache, lengths, mask)
+        key = tp_lib.fold_in_data(key)   # per-data-shard sampling stream
         tok0 = sample_logits(logits, jax.random.fold_in(key, step0),
                              temperature, top_k, top_p)
         done0 = ((eos >= 0) & (tok0 == eos)) | budget_one
@@ -246,8 +264,7 @@ class Engine:
         """
         fn = self._scan_fns.get((chunk, greedy))
         if fn is None:
-            fn = jax.jit(self._make_decode_scan(chunk, greedy),
-                         donate_argnums=1)
+            fn = self._build_scan_fn(chunk, greedy)
             self._scan_fns[(chunk, greedy)] = fn
         key = jax.random.PRNGKey(self.scfg.seed)
         return fn(self.params, cache, tok, pos, done, eos, temperature,
@@ -258,6 +275,9 @@ class Engine:
 
         def run(params, cache, tok, pos, done, eos, temperature, top_k,
                 top_p, key, step0):
+            from repro.dist import tp as tp_lib
+            key = tp_lib.fold_in_data(key)   # per-data-shard sampling stream
+
             def step(carry, i):
                 cache, tok, pos, done = carry
                 logits, cache = mod.decode_step(params, cfg, tok, cache, pos)

@@ -40,8 +40,10 @@ class Request:
     finish_time: Optional[float] = None
 
     def __post_init__(self):
-        if self.max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
+        # budget 0 is legal (score-the-prompt / warmup requests): the
+        # scheduler finishes it at admission without emitting a token
+        if self.max_new_tokens < 0:
+            raise ValueError("max_new_tokens must be >= 0")
         if len(self.prompt) < 1:
             raise ValueError("prompt must be non-empty")
 

@@ -67,10 +67,11 @@ class Scheduler:
         self.prompt_bucket = prompt_bucket
         scfg = engine.scfg
         self.cache = engine.init_cache(slots)
-        # per-slot device state ([slots] vectors; free slot: pos=-1, done)
-        self.tok = jnp.zeros((slots,), jnp.int32)
-        self.pos = jnp.full((slots,), -1, jnp.int32)
-        self.done = jnp.ones((slots,), bool)
+        # per-slot device state ([slots] vectors; free slot: pos=-1, done);
+        # placed by the engine (sharded: pinned along the data axis)
+        self.tok = engine.place_slot_state(jnp.zeros((slots,), jnp.int32))
+        self.pos = engine.place_slot_state(jnp.full((slots,), -1, jnp.int32))
+        self.done = engine.place_slot_state(jnp.ones((slots,), bool))
         # per-slot sampling state is mirrored host-side so admission can
         # rebuild the vectors without device reads
         self._eos_h = [-1] * slots
@@ -150,7 +151,9 @@ class Scheduler:
             prompts[slot, :L] = req.prompt
             lengths[slot] = L
             mask[slot] = True
-            budget_one[slot] = req.max_new_tokens == 1
+            # <=1: budget-0 requests also finish at admission (their slot is
+            # never occupied; the sampled token is simply not emitted)
+            budget_one[slot] = req.max_new_tokens <= 1
             (self._temp_h[slot], self._topk_h[slot],
              self._topp_h[slot]) = self._sampling_for(req)
             self._eos_h[slot] = -1 if req.eos_id is None else int(req.eos_id)
@@ -167,10 +170,12 @@ class Scheduler:
         for slot, req in admitted:
             req.status = RequestStatus.RUNNING
             req.slot = slot
-            req.emit(int(tok0_h[slot]))
+            if req.max_new_tokens >= 1:
+                req.emit(int(tok0_h[slot]))
             if done0_h[slot]:
                 eos = self._eos_h[slot]
-                req.finish("eos" if eos >= 0 and req.tokens[-1] == eos
+                req.finish("eos" if eos >= 0 and req.tokens
+                           and req.tokens[-1] == eos
                            else "length", now)
                 self.finished.append(req)
                 self._reset_slot_sampling(slot)
@@ -179,10 +184,11 @@ class Scheduler:
         return len(admitted)
 
     def _push_sampling_state(self) -> None:
-        self.eos = jnp.asarray(self._eos_h, jnp.int32)
-        self.temperature = jnp.asarray(self._temp_h, jnp.float32)
-        self.top_k = jnp.asarray(self._topk_h, jnp.int32)
-        self.top_p = jnp.asarray(self._topp_h, jnp.float32)
+        place = self.engine.place_slot_state
+        self.eos = place(jnp.asarray(self._eos_h, jnp.int32))
+        self.temperature = place(jnp.asarray(self._temp_h, jnp.float32))
+        self.top_k = place(jnp.asarray(self._topk_h, jnp.int32))
+        self.top_p = place(jnp.asarray(self._topp_h, jnp.float32))
 
     # -- the scheduling loop -------------------------------------------------
 
@@ -219,7 +225,7 @@ class Scheduler:
                 if dones_h[slot, j]:
                     req.finish("eos", now)
                     break
-                if req.remaining == 0:
+                if req.remaining <= 0:
                     req.finish("length", now)
                     break
             if req.done:
@@ -230,7 +236,7 @@ class Scheduler:
         if freed:
             fm = np.zeros((self.n_slots,), bool)
             fm[freed] = True
-            fm = jnp.asarray(fm)
+            fm = self.engine.place_slot_state(jnp.asarray(fm))
             self.done = self.done | fm
             self.pos = jnp.where(fm, -1, self.pos)
         return emitted

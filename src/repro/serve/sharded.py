@@ -1,0 +1,138 @@
+"""Multi-device serving engine: tensor-parallel LUT matmuls over a ``model``
+mesh axis x a data-parallel slot pool over a ``data`` axis.
+
+The LUTMUL scale-out argument — beat the roofline by fanning multiplication
+across many cheap units instead of speeding one up — applied at the device
+level: every quantized projection's integer codes are split across the
+``model`` axis (column-parallel N split with an all-gather, row-parallel K
+split with an exact int32 psum; see ``dist.tp``), while the serving state
+(decode slots, per-slot positions, KV/ring caches, sampling vectors, RNG
+streams) is split across the ``data`` axis so each data shard runs an
+independent slot pool under ONE host-side ``serve.scheduler.Scheduler``.
+
+``ShardedEngine`` reuses ``Engine``'s admission/decode *implementations*
+unchanged — it only overrides how they are compiled: the bodies run under
+``shard_map`` with an active ``tp_context``, so the same model code that is
+the single-device engine becomes the per-shard program.  Because every
+sharded reduction is either exact (int32 psum) or a reordering-free gather,
+temperature-0 output is bit-identical to the single-device engine.
+
+Runs anywhere ``jax.devices()`` offers enough devices — including CPU via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI recipe).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import tp as tp_lib
+from repro.models import transformer
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.quantize import quantize_params_for_serving
+
+
+class ShardedEngine(Engine):
+    """Drop-in ``Engine`` for the scheduler, executing on a (data, model)
+    mesh.  ``slots`` handed to ``Scheduler``/``init_cache`` must be divisible
+    by the data-axis size; quantized serving codes are required (only
+    integer-code matmuls shard bit-exactly — see ``dist.tp``)."""
+
+    def __init__(self, cfg, params, scfg: ServeConfig = ServeConfig(), *,
+                 mesh: Mesh, data_axis: str = "data",
+                 model_axis: str = "model"):
+        if getattr(cfg, "enc_dec", False):
+            raise NotImplementedError(
+                "sharded serving covers decoder-only LMs")
+        if not scfg.quant:
+            raise ValueError(
+                "ShardedEngine requires ServeConfig(quant=...): only integer "
+                "weight codes shard bit-exactly (int32 psum is associative; "
+                "a float row-parallel reduction would drift)")
+        self.mesh = mesh
+        self.data_axis, self.model_axis = data_axis, model_axis
+        self.n_data = mesh.shape[data_axis]
+        self.n_model = mesh.shape[model_axis]
+        # quantize + mark BEFORE Engine.__init__: _build_admit_fn (called by
+        # the base ctor) closes over the param/cache specs
+        params = quantize_params_for_serving(params, mode=scfg.quant)
+        params, self._param_specs, self.n_tp_leaves = tp_lib.mark_tp_params(
+            params, self.n_model, model_axis)
+        # canonical specs (no trailing Nones, size-1 axes elided) — exactly
+        # the form XLA hands back on computation outputs, so round-tripped
+        # slot state / caches never change the executors' cache signature
+        self._dspec = P(data_axis) if self.n_data > 1 else P()
+        self._cspec = P(None, data_axis) if self.n_data > 1 else P()
+        self._cache_specs = jax.tree_util.tree_map(
+            lambda sds: self._cspec,
+            jax.eval_shape(lambda: transformer.init_cache(
+                cfg, self.n_data, scfg.max_len)))
+        super().__init__(cfg, params,
+                         dataclasses.replace(scfg, quant=None))
+        self.scfg = scfg                     # keep the quant label visible
+        self.params = jax.device_put(
+            self.params, jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), self._param_specs))
+
+    # -- shard_map-compiled executors ---------------------------------------
+
+    def _shard_jit(self, impl, in_specs, out_specs):
+        def body(*args):
+            with tp_lib.tp_context(self.model_axis, self.n_model,
+                                   self.data_axis):
+                return impl(*args)
+        # explicit in_shardings keep argument placement out of the jit cache
+        # key: committed outputs fed back next round (whose specs XLA may
+        # have normalized, e.g. P("data") -> P() on a size-1 axis) reshard
+        # instead of retracing — the no-retrace-after-warmup invariant
+        return jax.jit(
+            shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False),
+            in_shardings=jax.tree_util.tree_map(
+                lambda s: NamedSharding(self.mesh, s), in_specs),
+            donate_argnums=1)
+
+    def _build_admit_fn(self):
+        d = self._dspec
+        in_specs = (self._param_specs, self._cache_specs,
+                    d,                              # prompts [slots, bucket]
+                    d, d, d,                        # lengths, mask, budget_one
+                    d, d, d, d,                     # eos, temp, top_k, top_p
+                    d, d, d,                        # tok, pos, done
+                    P(), P())                       # key, step0
+        out_specs = (self._cache_specs, d, d, d, d, d)
+        return self._shard_jit(self._admit_impl, in_specs, out_specs)
+
+    def _build_scan_fn(self, chunk: int, greedy: bool):
+        d = self._dspec
+        in_specs = (self._param_specs, self._cache_specs,
+                    d, d, d,                        # tok, pos, done
+                    d, d, d, d,                     # eos, temp, top_k, top_p
+                    P(), P())                       # key, step0
+        out_specs = (self._cache_specs, d, d, d,
+                     d, d)                # tokens/dones [slots, chunk]
+        return self._shard_jit(self._make_decode_scan(chunk, greedy),
+                               in_specs, out_specs)
+
+    # -- scheduler-facing API ------------------------------------------------
+
+    def init_cache(self, batch: int):
+        if batch % self.n_data:
+            raise ValueError(
+                f"slots ({batch}) must be divisible by the data-axis size "
+                f"({self.n_data}) — each data shard runs batch/{self.n_data} "
+                "independent decode lanes")
+        return jax.device_put(
+            super().init_cache(batch), jax.tree_util.tree_map(
+                lambda s: NamedSharding(self.mesh, s), self._cache_specs))
+
+    def place_slot_state(self, x):
+        return jax.device_put(x, NamedSharding(self.mesh, self._dspec))
+
+    def generate(self, *a, **kw):
+        raise NotImplementedError(
+            "ShardedEngine serves through serve.scheduler.Scheduler "
+            "(admit_batch/decode_chunk); use the single-device Engine for "
+            "the static-batch generate() oracle")

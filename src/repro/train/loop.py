@@ -14,7 +14,6 @@ import time
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.ckpt import checkpoint
 from repro.data import pipeline

@@ -7,7 +7,7 @@ One factory serves every model family; the loss function is dispatched by
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -69,8 +69,8 @@ def make_train_step(model_cfg, tcfg: TrainConfig = TrainConfig()):
 
             def acc_body(carry, mb):
                 loss_acc, grad_acc = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
-                return (loss_acc + l,
+                loss_mb, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_acc + loss_mb,
                         jax.tree_util.tree_map(jnp.add, grad_acc, g)), None
 
             zero_g = jax.tree_util.tree_map(

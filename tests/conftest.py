@@ -4,7 +4,6 @@ import sys
 # tests run on 1 CPU device by design (the dry-run owns the 512-device env)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import pytest
 
 try:
     import hypothesis  # noqa: F401

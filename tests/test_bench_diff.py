@@ -1,0 +1,136 @@
+"""benchmarks.run --diff / --fail-on-regress: structured deltas + the gate.
+
+``diff_records`` must report baseline benchmarks missing from the run (a
+silently dropped benchmark used to diff clean) and ``gate_regressions``
+turns deltas into CI pass/fail.
+"""
+import json
+
+import pytest
+
+from benchmarks.run import diff_records, gate_regressions
+
+
+def _baseline(tmp_path, rows):
+    p = tmp_path / "base.json"
+    p.write_text(json.dumps({"rows": rows}))
+    return str(p)
+
+
+def _rec(name, ms, gops=None):
+    return {"name": name, "median_ms": ms, "gops": gops, "derived": ""}
+
+
+def test_diff_reports_missing_and_new(tmp_path, capsys):
+    base = _baseline(tmp_path, [_rec("a", 1.0), _rec("dropped", 2.0)])
+    diffs = diff_records([_rec("a", 1.1), _rec("fresh", 3.0)], base)
+    by_name = {d["name"]: d for d in diffs}
+    assert by_name["a"]["status"] == "ok"
+    assert by_name["a"]["delta_ms_pct"] == pytest.approx(10.0)
+    assert by_name["fresh"]["status"] == "new"
+    assert by_name["dropped"]["status"] == "missing"
+    out = capsys.readouterr().out
+    assert "dropped,MISSING" in out and "fresh,NEW" in out
+
+
+def test_gate_passes_within_threshold(tmp_path):
+    base = _baseline(tmp_path, [_rec("a", 1.0), _rec("b", 2.0)])
+    diffs = diff_records([_rec("a", 1.2), _rec("b", 1.5)], base)
+    assert gate_regressions(diffs, 25.0) == []
+
+
+def test_gate_fails_on_slowdown_beyond_threshold(tmp_path):
+    base = _baseline(tmp_path, [_rec("a", 1.0)])
+    diffs = diff_records([_rec("a", 1.5)], base)
+    bad = gate_regressions(diffs, 25.0)
+    assert len(bad) == 1 and "a" in bad[0] and "slower" in bad[0]
+
+
+def test_gate_fails_on_missing_benchmark(tmp_path):
+    base = _baseline(tmp_path, [_rec("a", 1.0), _rec("dropped", 2.0)])
+    diffs = diff_records([_rec("a", 1.0)], base)
+    bad = gate_regressions(diffs, 25.0)
+    assert len(bad) == 1 and "dropped" in bad[0] and "missing" in bad[0]
+
+
+def test_gate_ignores_new_and_speedups(tmp_path):
+    base = _baseline(tmp_path, [_rec("a", 2.0)])
+    diffs = diff_records([_rec("a", 0.5), _rec("fresh", 9.0)], base)
+    assert gate_regressions(diffs, 0.0) == []
+
+
+def test_normalize_cancels_uniform_host_speed(tmp_path):
+    """A uniformly 2x-slower host trips the raw gate but passes when
+    normalized by a calibration row (the plain-XLA matmul probe)."""
+    base = _baseline(tmp_path, [_rec("cal", 1.0), _rec("a", 4.0)])
+    run = [_rec("cal", 2.0), _rec("a", 8.0)]
+    raw = diff_records(run, base)
+    assert gate_regressions(raw, 25.0)                      # +100% raw
+    norm = diff_records(run, base, normalize="cal")
+    assert gate_regressions(norm, 25.0) == []               # 0% relative
+    by = {d["name"]: d for d in norm}
+    assert by["a"]["delta_ms_pct"] == pytest.approx(0.0)
+
+
+def test_normalize_rescales_gops_consistently(tmp_path, capsys):
+    """The gops delta column must agree with the normalized ms delta
+    (gops ~ 1/time, so the baseline gops is rescaled by 1/speed)."""
+    base = _baseline(tmp_path, [_rec("cal", 1.0, gops=10.0),
+                                _rec("a", 2.0, gops=5.0)])
+    run = [_rec("cal", 2.0, gops=5.0), _rec("a", 4.0, gops=2.5)]
+    diff_records(run, base, normalize="cal")
+    out = capsys.readouterr().out
+    row = [ln for ln in out.splitlines() if ln.startswith("a,")][0]
+    assert row.endswith(",+0.0") and ",+0.0," in row   # ms AND gops deltas
+
+
+def test_normalize_still_catches_relative_regressions(tmp_path):
+    base = _baseline(tmp_path, [_rec("cal", 1.0), _rec("a", 4.0)])
+    # host 2x slower AND 'a' regressed another 2x on top
+    run = [_rec("cal", 2.0), _rec("a", 16.0)]
+    norm = diff_records(run, base, normalize="cal")
+    bad = gate_regressions(norm, 25.0)
+    assert len(bad) == 1 and "a" in bad[0]
+
+
+def test_normalize_requires_calibration_row(tmp_path):
+    base = _baseline(tmp_path, [_rec("a", 1.0)])
+    with pytest.raises(SystemExit):
+        diff_records([_rec("a", 1.0)], base, normalize="cal")
+
+
+def test_normalize_median_is_robust_to_one_regressed_row(tmp_path):
+    """Median-of-ratios: a 2x-slower host cancels; the one row that
+    regressed 4x relative to its peers still trips the gate, and the
+    regression can't hide by dragging the calibration with it."""
+    names = ["a", "b", "c", "d", "bad"]
+    base = _baseline(tmp_path, [_rec(n, 1.0) for n in names])
+    run = [_rec(n, 2.0) for n in names[:-1]] + [_rec("bad", 8.0)]
+    diffs = diff_records(run, base, normalize="median")
+    bad = gate_regressions(diffs, 25.0)
+    assert len(bad) == 1 and "bad" in bad[0]
+    by = {d["name"]: d for d in diffs}
+    assert by["a"]["delta_ms_pct"] == pytest.approx(0.0)
+
+
+def test_cli_gate_exit_codes(tmp_path, capsys, monkeypatch):
+    """main() wires --fail-on-regress to the exit status (run the cheap
+    lut_init module against a synthetic baseline)."""
+    from benchmarks import run as run_mod
+
+    # a fabricated baseline containing a row that this run won't produce
+    rows = [{"name": "ghost_bench", "median_ms": 1.0, "gops": None,
+             "derived": ""}]
+    base = _baseline(tmp_path, rows)
+    with pytest.raises(SystemExit) as e:
+        run_mod.main(["--only", "lut_init", "--diff", base,
+                      "--fail-on-regress", "25"])
+    assert e.value.code == 1
+    assert "ghost_bench" in capsys.readouterr().err
+
+
+def test_cli_fail_on_regress_requires_diff():
+    from benchmarks import run as run_mod
+    with pytest.raises(SystemExit) as e:
+        run_mod.main(["--only", "lut_init", "--fail-on-regress", "25"])
+    assert e.value.code == 2          # argparse usage error

@@ -12,7 +12,7 @@ from repro.ckpt import checkpoint
 from repro.data import pipeline
 from repro.models import transformer as T
 from repro.train import loop
-from repro.train.step import TrainConfig, init_state
+from repro.train.step import TrainConfig
 
 
 def _tree():
@@ -60,7 +60,8 @@ def test_failure_injection_resumes_identically(tmp_path):
     cfg = configs.get_config("minicpm-2b", smoke=True)
     dcfg = pipeline.DataConfig(seed=3, vocab=cfg.vocab, seq_len=16,
                                global_batch=4)
-    init_fn = lambda: T.init_params(jax.random.PRNGKey(0), cfg)
+    def init_fn():
+        return T.init_params(jax.random.PRNGKey(0), cfg)
     tcfg = TrainConfig(total_steps=12, peak_lr=1e-3, warmup=2)
 
     r1 = loop.run(cfg, init_fn, dcfg, tcfg,

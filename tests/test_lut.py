@@ -1,6 +1,5 @@
 """Bit-exact validation of the paper's LUT mechanism (Fig. 5, Eq. 3)."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import lut
@@ -41,7 +40,7 @@ def test_product_table_exhaustive():
 
 
 @given(st.lists(st.integers(-8, 7), min_size=2, max_size=64)
-       .filter(lambda l: len(l) % 2 == 0))
+       .filter(lambda v: len(v) % 2 == 0))
 @settings(max_examples=50, deadline=None)
 def test_pack_unpack_roundtrip(vals):
     import jax.numpy as jnp

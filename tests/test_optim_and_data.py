@@ -1,4 +1,3 @@
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -52,7 +51,7 @@ def test_compress_decompress_error_feedback():
 
 def test_compressed_psum_single_axis():
     """Under shard_map on 1 device the mean must be exact after EF."""
-    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
     from repro.dist.sharding import make_mesh
     mesh = make_mesh((1,), ("dp",))

@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.quantization import (A4, W4, W8, QuantConfig, compute_scale,
+from repro.core.quantization import (W4, QuantConfig, compute_scale,
                                      dequantize, fake_quant, quant_error,
                                      quantize)
 

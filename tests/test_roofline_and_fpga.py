@@ -1,6 +1,5 @@
 """Roofline parser + the paper's analytic FPGA model (Eq. 1/2, Fig. 1,
 Table 2 reproduction checks)."""
-import numpy as np
 import pytest
 
 from repro.core import fpga_model as F
@@ -93,5 +92,5 @@ def test_mobilenet_macs_match_paper_ops():
     table must reproduce MobileNetV2's MAC count (~300M MACs)."""
     from repro.models.mobilenet import MobileNetConfig, fpga_layer_table
     layers = fpga_layer_table(MobileNetConfig())
-    macs = sum(l.macs for l in layers)
+    macs = sum(lyr.macs for lyr in layers)
     assert 280e6 < macs < 330e6, macs / 1e6

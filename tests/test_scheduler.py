@@ -273,6 +273,60 @@ def test_freed_slot_restores_greedy_fast_path():
     assert req.tokens == want[0].tolist()
 
 
+# ---------------------------------------------------------------------------
+# degenerate requests must not pin their slot
+# ---------------------------------------------------------------------------
+
+def test_prompt_ending_in_eos_frees_slot():
+    """A prompt that already ends in the EOS token decodes normally (the
+    trailing EOS is prompt context, not an emission) and its slot frees on
+    retirement — it must not wedge the pool."""
+    cfg, params, eng = _engine()
+    eos = 7
+    sched = Scheduler(eng, slots=1, chunk=2, prompt_bucket="exact")
+    r0 = Request(prompt=[1, 2, 3, eos], max_new_tokens=3, eos_id=eos)
+    r1 = Request(prompt=[4, 5, 6, 8], max_new_tokens=3)
+    done = sched.run([r0, r1], max_rounds=16)
+    assert len(done) == 2 and r0.done and r1.done
+    assert 1 <= len(r0.tokens) <= 3
+    if r0.finish_reason == "eos":
+        assert r0.tokens[-1] == eos
+    else:
+        assert r0.finish_reason == "length" and len(r0.tokens) == 3
+    assert all(s is None for s in sched.slots) and not sched.queue
+
+
+def test_budget_zero_request_finishes_at_admission():
+    """budget=0 finishes at admission without emitting and without ever
+    occupying the slot — the next queued request runs immediately (before
+    this fix the slot stayed RUNNING forever: ``remaining`` went negative
+    and the retirement check never fired)."""
+    cfg, params, eng = _engine()
+    want = np.asarray(eng.generate(jnp.asarray([[5, 6, 7, 8]]), 3)[:, 4:])
+    sched = Scheduler(eng, slots=1, chunk=2, prompt_bucket="exact")
+    r0 = Request(prompt=[1, 2, 3, 4], max_new_tokens=0)
+    r1 = Request(prompt=[5, 6, 7, 8], max_new_tokens=3)
+    done = sched.run([r0, r1], max_rounds=16)
+    assert len(done) == 2
+    assert r0.done and r0.tokens == [] and r0.finish_reason == "length"
+    # the freed slot served r1 with unchanged numerics
+    assert r1.tokens == want[0].tolist()
+    assert all(s is None for s in sched.slots) and not sched.queue
+
+
+def test_budget_zero_and_one_mixed_with_normal_requests():
+    """A pile of degenerate budgets drains in bounded rounds alongside a
+    normal stream (regression guard on the admission fast-finish path)."""
+    cfg, params, eng = _engine()
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    reqs = [Request(prompt=[1, 2, 3], max_new_tokens=b)
+            for b in (0, 1, 0, 4, 1, 0)]
+    done = sched.run(reqs, max_rounds=32)
+    assert len(done) == len(reqs)
+    for r, b in zip(reqs, (0, 1, 0, 4, 1, 0)):
+        assert len(r.tokens) == b and r.done
+
+
 def test_request_streaming_callback():
     cfg, params, eng = _engine()
     seen = []

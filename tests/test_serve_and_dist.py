@@ -121,7 +121,8 @@ def test_small_mesh_dryrun_subprocess():
     out = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
-    line = [l for l in out.stdout.splitlines() if l.startswith("RESULTS")][0]
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("RESULTS")][0]
     results = json.loads(line[len("RESULTS"):])
     assert len(results) == 4
     for k, v in results.items():

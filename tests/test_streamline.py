@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.streamline import (StreamlinedStage, float_stage_reference,
+from repro.core.streamline import (float_stage_reference,
                                    integer_stage_forward, streamline_stage)
 from repro.core.thresholds import BNParams
 

@@ -1,11 +1,10 @@
 """Multi-threshold streamlining == float BN+quantize, exactly, on integer
 accumulators (the property FINN streamlining relies on)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.quantization import A4, A8
+from repro.core.quantization import A4
 from repro.core.thresholds import (BNParams, apply_thresholds,
                                    float_reference, make_thresholds)
 

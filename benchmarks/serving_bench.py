@@ -187,10 +187,15 @@ def _sharded_rows(meshes=None):
                             mesh=make_serving_mesh(spec))
         _sharded_workload(eng, SLOTS, CHUNK, prompts, budgets)   # warmup
         dt = _sharded_workload(eng, SLOTS, CHUNK, prompts, budgets)
+        # per-shard KV bytes make the head-sharding memory win visible next
+        # to tokens/s: the data axis splits the slots and — when the head
+        # counts divide the model axis — the model axis splits the KV heads
         rows.append((f"serve_sharded_{spec}", dt * 1e6,
                      f"tokens_per_s={tokens / dt:.1f};mesh={spec};"
                      f"slots={SLOTS};chunk={CHUNK};requests={N};"
-                     f"tp_leaves={eng.n_tp_leaves}"))
+                     f"tp_leaves={eng.n_tp_leaves};"
+                     f"kv_bytes_per_shard={eng.kv_cache_bytes(SLOTS)};"
+                     f"head_sharded={int(eng.head_sharded)}"))
     return rows
 
 

@@ -5,27 +5,51 @@ LUT multipliers instead of making one DSP faster — maps onto devices here:
 the integer weight codes of every projection are split across the ``model``
 mesh axis and each device runs its share of the LUT contraction.
 
-Two layouts (classic Megatron, adapted to integer codes):
+Four layouts (classic Megatron, adapted to integer codes):
 
   * **column-parallel** (``tp_col``): the weight keeps full K rows; codes and
     per-channel scales are split along N.  Every device computes its output
     columns with *exactly* the math the single-device kernel runs, then an
     ``all_gather`` rebuilds the full activation.
   * **row-parallel** (``tp_row``): codes split along K.  The activation
-    quantization scale is taken over the FULL (replicated) activation vector
+    quantization scale is taken over the FULL activation vector
     — identical to the single-device scale — each device contracts its K
     slice into an int32 partial accumulator, and a ``psum`` adds the
     partials.  int32 addition is associative and exact, so the accumulated
     value (and the fp32 dequant epilogue applied to it) is bit-identical to
     the unsharded kernel.  This is why only *integer-code* layers are
-    sharded: a float row-parallel matmul would reassociate an fp32 reduction
-    and drift.
+    sharded row-parallel: a float row-parallel matmul would reassociate an
+    fp32 reduction and drift.
+  * **head-parallel** (``tp_head``): column-parallel *without the gather* —
+    QKV projections keep their local output columns, which are whole
+    attention heads, so attention itself (scores, softmax, KV cache, ring
+    writes) runs on ``n_heads / tp`` local heads per shard.  Every head's
+    math is independent, so the local heads are a bitwise slice of the
+    replicated computation.  The head-local attention output feeds the
+    row-parallel ``wo`` directly (its K slice *is* the local heads); the
+    full-K activation scale is recovered exactly via a ``pmax`` of the
+    per-shard maxima (max is associative and exact).  Applied only when
+    both ``n_heads`` and ``n_kv`` divide the model axis — GQA configs with
+    ``n_kv % tp != 0`` fall back to the replicated-attention col/row
+    marking above (correct, just redundant attention FLOPs).  The 3D
+    split-head float variants (``wq3``/``wk3``/``wv3``) are head-parallel
+    too (an exact column split over the head axis); ``wo3`` stays
+    replicated — a float psum would drift — so the attention output is
+    all-gathered back to full heads in front of it.
+  * **expert-parallel** (``tp_exp``): MoE expert banks ``[E, d, f]`` split
+    along the expert axis.  Router logits (and therefore top-k expert
+    choice, gates, and capacity positions) stay replicated and
+    bit-identical; each shard runs only its ``E / tp`` local experts and an
+    ``all_gather`` over the expert axis rebuilds the full expert-output
+    buffer, after which the combine runs the unsharded math.  Applied only
+    when ``E % tp == 0``; otherwise the bank stays replicated.
 
 Leaves are tagged structurally: :func:`mark_tp_params` inserts a zero-size
-``tp_col``/``tp_row`` marker array into each sharded leaf dict.  Key presence
-is static pytree structure, so ``models.layers.linear`` can read the layout
-under ``jit``/``shard_map`` tracing with no runtime cost, and the markers
-scan/stitch like any other (empty) leaf.
+``tp_col``/``tp_row``/``tp_head``/``tp_exp`` marker array into each sharded
+leaf dict.  Key presence is static pytree structure, so
+``models.layers.linear`` can read the layout under ``jit``/``shard_map``
+tracing with no runtime cost, and the markers scan/stitch like any other
+(empty) leaf.
 
 The context (:func:`tp_context`) is installed by the sharded engine around
 its ``shard_map`` bodies at trace time; outside it every hook here is the
@@ -45,9 +69,13 @@ from jax.sharding import PartitionSpec as P
 # eligible defaults to column-parallel (split N, gather), which is correct
 # for any projection.
 _ROW_PARALLEL_NAMES = frozenset({"wo", "out_proj"})
-# leaves under these parent keys never shard (embeddings are a table lookup;
-# MoE banks are 3D expert stacks routed by moe_ffn, out of scope here)
-_SKIP_NAMES = frozenset({"embed", "moe"})
+# leaves under these parent keys never shard (embeddings are a table lookup)
+_SKIP_NAMES = frozenset({"embed"})
+# the QKV projections that go head-parallel when the head counts divide
+_HEAD_COL_NAMES = ("wq", "wk", "wv")
+_HEAD_COL_3D = ("wq3", "wk3", "wv3")
+# direct children of a "moe" dict that are stacked expert banks [.., E, d, f]
+_EXPERT_BANK_NAMES = frozenset({"wi", "wg", "wo"})
 
 _CTX: list[tuple[str, int, Optional[str]]] = []
 
@@ -87,7 +115,19 @@ def leaf_tp_mode(p: dict) -> Optional[str]:
         return "col"
     if "tp_row" in p:
         return "row"
+    if "tp_head" in p:
+        return "head"
+    if "tp_exp" in p:
+        return "exp"
     return None
+
+
+def head_shardable(n_heads: int, n_kv: int, n_model: int) -> bool:
+    """True when attention can run on local heads: every shard gets whole
+    Q heads AND whole KV heads.  ``n_kv % n_model != 0`` (GQA with few KV
+    heads) falls back to replicated attention — sharding Q but replicating
+    KV would straddle the grouped-head reshape."""
+    return n_model > 1 and n_heads % n_model == 0 and n_kv % n_model == 0
 
 
 # ---------------------------------------------------------------------------
@@ -105,38 +145,139 @@ def _divisible(leaf: dict, mode: str, n_model: int) -> bool:
     return w_q.shape[-1] % n_model == 0
 
 
+def _tail(ndim: int, *entries) -> P:
+    """Right-aligned PartitionSpec: the trailing dims get ``entries``, any
+    leading (stack) dims are replicated — so stacked (leading-G) block
+    leaves shard the same trailing dims as unstacked ones."""
+    entries = entries[-ndim:]
+    return P(*(((None,) * (ndim - len(entries))) + tuple(entries)))
+
+
 def _leaf_specs(leaf: dict, mode: str, axis: str) -> dict:
     """PartitionSpec per array of one sharded leaf ({"w_q","w_scale"[,"b"]}).
 
-    Specs are right-aligned so stacked (leading-G) block leaves shard the
-    same trailing dims as unstacked ones.  Biases stay replicated: they are
-    added after the gather/psum on the full output.
+    Biases stay replicated for col/row (they are added after the
+    gather/psum on the full output) but split along N for head-parallel
+    leaves, whose output stays local.  Expert banks split the expert axis
+    (-3) of codes and scales.
     """
-    def tail(ndim: int, *entries) -> P:
-        entries = entries[-ndim:]
-        return P(*(((None,) * (ndim - len(entries))) + tuple(entries)))
-
     specs = {}
     for k, v in leaf.items():
         nd = getattr(v, "ndim", 0)
-        if k == "w_q":
-            specs[k] = tail(nd, axis, None) if mode == "row" \
-                else tail(nd, None, axis)
-        elif k == "w_scale" and mode == "col":
-            specs[k] = tail(nd, None, axis)
+        if mode == "exp":
+            specs[k] = _tail(nd, axis, None, None) \
+                if k in ("w_q", "w_scale") else P()
+        elif k == "w_q":
+            specs[k] = _tail(nd, axis, None) if mode == "row" \
+                else _tail(nd, None, axis)
+        elif k == "w_scale" and mode in ("col", "head"):
+            specs[k] = _tail(nd, None, axis)
+        elif k == "b" and mode == "head":
+            specs[k] = _tail(nd, axis)
         else:
             specs[k] = P()
     return specs
 
 
-def mark_tp_params(params, n_model: int, model_axis: str = "model"):
+def _marker(leaf_arrays: dict, ref_key: str = "w_q"):
+    """Zero-size int8 marker shaped ``leading_stack_dims + (0,)`` so it
+    scans over stacked block params like any other leaf."""
+    ref = leaf_arrays[ref_key]
+    return jnp.zeros(ref.shape[:-2] + (0,), jnp.int8)
+
+
+def _attn_head_counts(attn: dict, head_dim: int):
+    """(n_heads, n_kv) of one attention param dict, from leaf shapes."""
+    if "wq3" in attn:
+        return attn["wq3"]["w"].shape[-2], attn["wk3"]["w"].shape[-2]
+    nq = attn["wq"]["w_q"].shape[-1]
+    nk = attn["wk"]["w_q"].shape[-1]
+    return nq // head_dim, nk // head_dim
+
+
+def _is_attn_group(v) -> bool:
+    if not isinstance(v, dict):
+        return False
+    if all(k in v and isinstance(v[k], dict) and "w_q" in v[k]
+           for k in ("wq", "wk", "wv", "wo")):
+        return True
+    return all(k in v and isinstance(v[k], dict) and "w" in v[k]
+               for k in (*_HEAD_COL_3D, "wo3"))
+
+
+def _mark_attn_heads(attn: dict, n_model: int, axis: str):
+    """Head-parallel marking of one attention group (caller checked
+    divisibility).  Returns (marked, specs, n_sharded)."""
+    out, spec, n = dict(attn), dict(), 0
+    for k, v in attn.items():
+        spec[k] = jax.tree_util.tree_map(lambda _: P(), v)
+    if "wq3" in attn:
+        # float split-head leaves: w [.., d, H, dh] splits the head axis
+        # (an exact column split); wo3 [.., H, dh, d] stays replicated —
+        # attention output is all-gathered in front of it (a float psum
+        # would reassociate the fp32 reduction and drift)
+        for k in _HEAD_COL_3D:
+            leaf = dict(attn[k])
+            leaf["tp_head"] = jnp.zeros(
+                leaf["w"].shape[:-3] + (0,), jnp.int8)
+            out[k] = leaf
+            s = {"w": _tail(leaf["w"].ndim, axis, None),
+                 "tp_head": P()}
+            if "b" in leaf:
+                s["b"] = _tail(leaf["b"].ndim, axis, None)
+            spec[k] = s
+            n += 1
+        return out, spec, n
+    for k in _HEAD_COL_NAMES:
+        leaf = dict(attn[k])
+        leaf["tp_head"] = _marker(leaf)
+        out[k] = leaf
+        spec[k] = _leaf_specs(leaf, "head", axis)
+        n += 1
+    # the output projection is ordinary row-parallel: its K rows are
+    # head-major, so the even K split IS the head split and the head-local
+    # attention output is already each shard's K slice (detected by shape
+    # in ops._row_parallel_prequant — same marker, same specs)
+    leaf = dict(attn["wo"])
+    leaf["tp_row"] = _marker(leaf)
+    out["wo"] = leaf
+    spec["wo"] = _leaf_specs(leaf, "row", axis)
+    return out, spec, n + 1
+
+
+def _attn_head_marking_ok(attn: dict, head_dim: Optional[int],
+                          n_model: int) -> bool:
+    if head_dim is None or n_model <= 1:
+        return False
+    nh, nkv = _attn_head_counts(attn, head_dim)
+    if not head_shardable(nh, nkv, n_model):
+        return False
+    if "wq3" in attn:
+        return True
+    # every quantized leaf must split cleanly too (packed int4 wo rows are
+    # K//2 = n_heads * head_dim // 2: an odd per-shard row count would
+    # straddle a nibble pair)
+    return all(_divisible(attn[k], "col", n_model)
+               for k in _HEAD_COL_NAMES) \
+        and _divisible(attn["wo"], "row", n_model)
+
+
+def mark_tp_params(params, n_model: int, model_axis: str = "model",
+                   head_dim: Optional[int] = None):
     """Tag every shardable quantized leaf and derive its PartitionSpecs.
 
     Walks the param tree for serving-code leaves (``{"w_q", "w_scale"}``,
     produced by ``serve.quantize``) whose parent key names a projection.
-    Output projections (``wo``/``out_proj``) become row-parallel, everything
-    else column-parallel; leaves whose sharded dim is not divisible by
-    ``n_model`` stay replicated (correct, just not distributed).
+    Attention groups (dicts holding ``wq/wk/wv/wo`` or the 3D
+    ``wq3/wk3/wv3/wo3`` variants) go **head-parallel** when ``head_dim`` is
+    given and both head counts divide ``n_model`` (see module docstring);
+    otherwise — and for every other projection — output projections
+    (``wo``/``out_proj``) become row-parallel and the rest column-parallel.
+    MoE expert banks (``wi/wg/wo`` stacks directly under a ``moe`` dict)
+    split the expert axis when ``E % n_model == 0``; the router is always
+    replicated so top-k expert choice stays bit-identical.  Leaves whose
+    sharded dim is not divisible by ``n_model`` stay replicated (correct,
+    just not distributed).
 
     Returns ``(marked_params, specs, n_sharded)`` — ``specs`` is a pytree of
     PartitionSpec with the same structure as ``marked_params`` (replicated
@@ -146,29 +287,100 @@ def mark_tp_params(params, n_model: int, model_axis: str = "model"):
     """
     n_sharded = 0
 
-    def walk(tree, skip=False):
+    def mark_expert_bank(v: dict):
+        nonlocal n_sharded
+        if n_model > 1 and v["w_q"].ndim >= 3 \
+                and v["w_q"].shape[-3] % n_model == 0:
+            leaf = dict(v)
+            leaf["tp_exp"] = _marker(leaf)
+            n_sharded += 1
+            return leaf, _leaf_specs(leaf, "exp", model_axis)
+        return v, jax.tree_util.tree_map(lambda _: P(), v)
+
+    def walk(tree, skip=False, in_moe=False):
         nonlocal n_sharded
         if isinstance(tree, dict):
+            if not skip and _is_attn_group(tree) \
+                    and _attn_head_marking_ok(tree, head_dim, n_model):
+                out, spec, n = _mark_attn_heads(tree, n_model, model_axis)
+                n_sharded += n
+                return out, spec
             out, spec = {}, {}
             for k, v in tree.items():
-                if (not skip and isinstance(v, dict) and "w_q" in v
-                        and k not in _SKIP_NAMES):
+                if in_moe and k in _EXPERT_BANK_NAMES \
+                        and isinstance(v, dict) and "w_q" in v:
+                    out[k], spec[k] = mark_expert_bank(v)
+                    continue
+                if in_moe and k == "router":
+                    # replicated router => bit-identical top-k everywhere
+                    out[k], spec[k] = walk(v, skip=True)
+                    continue
+                if (not skip and not in_moe and isinstance(v, dict)
+                        and "w_q" in v and k not in _SKIP_NAMES):
                     mode = "row" if k in _ROW_PARALLEL_NAMES else "col"
                     if n_model > 1 and _divisible(v, mode, n_model):
                         leaf = dict(v)
-                        leaf["tp_" + mode] = jnp.zeros(
-                            v["w_q"].shape[:-2] + (0,), jnp.int8)
+                        leaf["tp_" + mode] = _marker(leaf)
                         out[k] = leaf
                         spec[k] = _leaf_specs(leaf, mode, model_axis)
                         n_sharded += 1
                         continue
-                out[k], spec[k] = walk(v, skip or k in _SKIP_NAMES)
+                out[k], spec[k] = walk(v, skip or k in _SKIP_NAMES,
+                                       k == "moe")
             return out, spec
         if isinstance(tree, (tuple, list)):
-            pairs = [walk(v, skip) for v in tree]
+            pairs = [walk(v, skip, in_moe) for v in tree]
             return (type(tree)(p[0] for p in pairs),
                     type(tree)(p[1] for p in pairs))
         return tree, P()
 
     marked, specs = walk(params)
     return marked, specs, n_sharded
+
+
+def has_marker(params, marker: str) -> bool:
+    """True if any leaf dict in ``params`` carries ``marker`` (e.g.
+    ``"tp_head"`` — the sharded engine keys its cache layout off this)."""
+    found = False
+
+    def walk(tree):
+        nonlocal found
+        if isinstance(tree, dict):
+            if marker in tree:
+                found = True
+                return
+            for v in tree.values():
+                walk(v)
+        elif isinstance(tree, (tuple, list)):
+            for v in tree:
+                walk(v)
+
+    walk(params)
+    return found
+
+
+def attn_group_counts(params) -> tuple[int, int]:
+    """(attention groups, head-marked attention groups) in a marked tree.
+
+    The sharded engine's KV-cache layout is one global choice, so head
+    marking must be all-or-nothing across groups — it asserts
+    ``head_marked in (0, total)`` before trusting the cache specs."""
+    total = marked = 0
+
+    def walk(tree):
+        nonlocal total, marked
+        if isinstance(tree, dict):
+            if _is_attn_group(tree):
+                total += 1
+                probe = tree.get("wq", tree.get("wq3", {}))
+                if "tp_head" in probe:
+                    marked += 1
+                return
+            for v in tree.values():
+                walk(v)
+        elif isinstance(tree, (tuple, list)):
+            for v in tree:
+                walk(v)
+
+    walk(params)
+    return total, marked

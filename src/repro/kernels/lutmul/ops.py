@@ -273,13 +273,20 @@ def _fused_int(a_q, w_int, a_scale, w_scale, *, be: str,
 # quantizers
 # ---------------------------------------------------------------------------
 
+def _quantize_with_scale(x2: jax.Array, a_scale: jax.Array,
+                         qmax: int) -> jax.Array:
+    """Symmetric round/clip to int8 codes under a precomputed scale — THE
+    one copy of the formula both the full-K and the head-sharded (pmax
+    scale) paths share, so they can never drift apart."""
+    return jnp.clip(jnp.round(x2 / a_scale), -qmax - 1, qmax).astype(jnp.int8)
+
+
 def quantize_activations(x2: jax.Array, bits: int):
     """Per-token symmetric quant: [M, K] f32 -> (int8 codes, [M, 1] scale)."""
     qmax = 2 ** (bits - 1) - 1
     a_scale = jnp.maximum(jnp.max(jnp.abs(x2), axis=1, keepdims=True),
                           1e-8) / qmax
-    a_q = jnp.clip(jnp.round(x2 / a_scale), -qmax - 1, qmax).astype(jnp.int8)
-    return a_q, a_scale
+    return _quantize_with_scale(x2, a_scale, qmax), a_scale
 
 
 def quantize_weights(wf: jax.Array, bits: int, pack: bool = False):
@@ -314,13 +321,19 @@ def _row_parallel_prequant(x, w_q, w_scale, mode, compute_dtype, be,
                            axis: str, size: int) -> jax.Array:
     """Row-parallel (K-sharded) pre-quantized matmul under ``shard_map``.
 
-    ``x`` is the full replicated activation; ``w_q`` is this device's K
-    slice of the codes.  The activation scale comes from the FULL K vector
-    (identical to the single-device scale), each shard contracts its slice
-    into an int32 partial, and ``psum`` adds the partials — int32 addition
-    is exact, so the dequant epilogue sees bit-identical accumulators to the
-    unsharded kernel.  The epilogue is deliberately unfused here: fusion
-    would rescale *partial* sums per shard and break that exactness.
+    ``w_q`` is this device's K slice of the codes.  ``x`` is either the full
+    replicated activation (classic Megatron row-parallel) or — when attention
+    runs head-sharded — already this shard's K slice (the head-local
+    attention output feeding ``wo``), distinguished statically by its K
+    extent.  Either way the activation scale is the FULL-K per-token scale
+    (identical to the single-device scale): taken directly on the replicated
+    input, or recovered exactly from the local slice via a ``pmax`` of the
+    per-shard maxima — max is associative and exact, so both routes yield
+    the same fp32 scale bit for bit.  Each shard contracts its slice into an
+    int32 partial, and ``psum`` adds the partials — int32 addition is exact,
+    so the dequant epilogue sees bit-identical accumulators to the unsharded
+    kernel.  The epilogue is deliberately unfused here: fusion would rescale
+    *partial* sums per shard and break that exactness.
     """
     lead = x.shape[:-1]
     K = x.shape[-1]
@@ -328,15 +341,25 @@ def _row_parallel_prequant(x, w_q, w_scale, mode, compute_dtype, be,
     packed = w_q.dtype == jnp.uint8
     bits = 4 if packed else 8
     rows = w_q.shape[-2]
-    Kl = K // size
-    if (2 * rows if packed else rows) != Kl:
+    Kl = 2 * rows if packed else rows
+    qmax = 2 ** (bits - 1) - 1
+    if K == Kl * size:
+        # replicated input: quantize full-K, contract the local slice
+        x2 = x.reshape(-1, K).astype(jnp.float32)
+        a_q, a_scale = quantize_activations(x2, bits)
+        a_l = jax.lax.dynamic_slice_in_dim(
+            a_q, jax.lax.axis_index(axis) * Kl, Kl, axis=1)
+    elif K == Kl:
+        # head-sharded input: x IS the local K slice; the full-K per-token
+        # max is the max of the per-shard maxima (exact)
+        x2 = x.reshape(-1, K).astype(jnp.float32)
+        local_max = jnp.max(jnp.abs(x2), axis=1, keepdims=True)
+        a_scale = jnp.maximum(jax.lax.pmax(local_max, axis), 1e-8) / qmax
+        a_l = _quantize_with_scale(x2, a_scale, qmax)
+    else:
         raise ValueError(
-            f"row-parallel codes hold {2 * rows if packed else rows} K rows "
-            f"per shard; expected {K}/{size} = {Kl}")
-    x2 = x.reshape(-1, K).astype(jnp.float32)
-    a_q, a_scale = quantize_activations(x2, bits)
-    a_l = jax.lax.dynamic_slice_in_dim(
-        a_q, jax.lax.axis_index(axis) * Kl, Kl, axis=1)
+            f"row-parallel activation K ({K}) matches neither the full "
+            f"extent ({Kl * size}) nor this shard's slice ({Kl})")
     if packed and mode == "w4a4_lut":
         acc = lutmul(a_l.astype(jnp.uint8) & 0xF, w_q, a_signed=True,
                      backend=be)
@@ -358,12 +381,15 @@ def prequant_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
     kernel backends the dequant epilogue is fused: the int32 accumulator is
     rescaled in-kernel and written as ``compute_dtype`` directly.
 
-    ``tp`` ("col" | "row" | None) is the tensor-parallel layout of ``w_q``
-    when tracing inside an active ``dist.tp.tp_context`` (the sharded
-    serving engine): column-parallel computes the local N columns with the
-    unsharded math and all-gathers; row-parallel contracts a K slice and
-    psums the exact int32 accumulator (see ``_row_parallel_prequant``).
-    Outside the context ``tp`` is ignored.
+    ``tp`` ("col" | "head" | "row" | None) is the tensor-parallel layout of
+    ``w_q`` when tracing inside an active ``dist.tp.tp_context`` (the
+    sharded serving engine): column-parallel computes the local N columns
+    with the unsharded math and all-gathers; head-parallel is
+    column-parallel *without* the gather (QKV projections whose local
+    columns are whole attention heads — the caller keeps working on local
+    heads); row-parallel contracts a K slice and psums the exact int32
+    accumulator (see ``_row_parallel_prequant``).  Outside the context
+    ``tp`` is ignored.
     """
     from repro.dist import tp as tp_lib
     axis = tp_lib.model_axis() if tp else None
@@ -399,9 +425,9 @@ def prequant_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
                              backend=be)
         y = (acc.astype(jnp.float32) * a_scale * ws_row) \
             .reshape(*lead, N).astype(compute_dtype)
-    if axis is not None:                     # column-parallel: N is local
+    if axis is not None and tp == "col":     # column-parallel: N is local
         y = jax.lax.all_gather(y, axis, axis=-1, tiled=True)
-    return y
+    return y                                 # "head": stays head-local
 
 
 # ---------------------------------------------------------------------------

@@ -127,6 +127,43 @@ def cache_specs(cache_sds, rules: Rules, mesh: Mesh | None = None) -> Any:
     return jax.tree_util.tree_map_with_path(leaf, cache_sds)
 
 
+# decode-cache leaves that hold per-head KV state: [.., B, T, H, D] tensors
+# and their int8-KV [.., B, T, H] scale companions (exact key names — mamba
+# "h" / rwkv "S" recurrent states must NOT match)
+KV_CACHE_LEAVES = frozenset({"k", "v", "shared_k", "shared_v", "xk", "xv"})
+KV_SCALE_LEAVES = frozenset({"k_scale", "v_scale"})
+
+
+def _leaf_key(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", getattr(last, "name", ""))
+
+
+def serving_cache_specs(cache_sds, data_axis: str | None,
+                        model_axis: str | None):
+    """PartitionSpec tree for the serving engine's decode cache.
+
+    Every per-slot buffer splits its batch axis over ``data_axis`` (each
+    data shard runs an independent slot pool).  When ``model_axis`` is given
+    (head-sharded attention: ``n_heads`` and ``n_kv`` both divide the model
+    axis), KV leaves additionally split their head axis over it, so the
+    per-shard KV cache holds ``n_kv / tp`` heads.  Pass ``None`` for a
+    size-1 axis — specs stay in the canonical (elided) form XLA hands back
+    on computation outputs, preserving the no-retrace invariant.
+    """
+    def leaf(path, x):
+        key = _leaf_key(path)
+        if model_axis is not None and x.ndim >= 5 \
+                and key in KV_CACHE_LEAVES:
+            return P(None, data_axis, None, model_axis)
+        if model_axis is not None and x.ndim >= 4 \
+                and key in KV_SCALE_LEAVES:
+            return P(None, data_axis, None, model_axis)
+        return P(None, data_axis) if data_axis is not None else P()
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_sds)
+
+
 def batch_specs(batch_sds, rules: Rules):
     b = rules.get("batch")
 

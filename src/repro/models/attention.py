@@ -53,22 +53,38 @@ def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
 
 def _proj_qkv(p: Params, name: str, x: jax.Array, B: int, S: int, H: int,
               D: int, quant: str, cd) -> jax.Array:
-    """Project to [B, S, H, D] through either the fused-2D or split-3D params."""
+    """Project to [B, S, h, D] through either the fused-2D or split-3D params.
+
+    ``h`` is derived from the projection output, not the ``H`` argument:
+    under head-sharded tensor parallelism (``tp_head``-marked leaves inside
+    a ``dist.tp`` context) the projection emits only this shard's
+    ``H / tp`` local heads and everything downstream (RoPE, cache writes,
+    attention) is per-head math that works on the local slice unchanged.
+    """
     if name + "3" in p:
         w = p[name + "3"]["w"].astype(cd)
         y = jnp.einsum("bsd,dhk->bshk", x.astype(cd), w)
         if "b" in p[name + "3"]:
             y = y + p[name + "3"]["b"].astype(cd)
         return y
-    return linear(p[name], x, quant, cd).reshape(B, S, H, D)
+    return linear(p[name], x, quant, cd).reshape(B, S, -1, D)
 
 
 def _proj_out(p: Params, out: jax.Array, B: int, S: int, H: int, D: int,
               quant: str, cd) -> jax.Array:
+    """Output projection.  ``out`` may hold only this shard's local heads:
+    the 2D quantized ``wo`` is row-parallel (its K rows are head-major, so
+    the local heads ARE its K slice — ops._row_parallel_prequant psums the
+    exact int32 accumulator); the float ``wo3`` stays replicated, so local
+    heads are all-gathered back to the full head axis in front of it."""
     if "wo3" in p:
+        if out.shape[2] != H:               # head-sharded input
+            from repro.dist import tp as tp_lib
+            out = jax.lax.all_gather(out, tp_lib.model_axis(), axis=2,
+                                     tiled=True)
         return jnp.einsum("bshk,hkd->bsd", out.astype(cd),
                           p["wo3"]["w"].astype(cd))
-    return linear(p["wo"], out.reshape(B, S, H * D).astype(cd), quant, cd)
+    return linear(p["wo"], out.reshape(B, S, -1).astype(cd), quant, cd)
 
 
 def _mask(q_pos, k_pos, causal: bool, window: Optional[int]):
@@ -389,11 +405,11 @@ def cross_attention(p: Params, x: jax.Array, enc: jax.Array, *,
     """Encoder-decoder cross attention (Whisper decoder)."""
     B, S, _ = x.shape
     T = enc.shape[1]
-    q = linear(p["wq"], x, quant, compute_dtype).reshape(B, S, n_heads, head_dim)
-    k = linear(p["wk"], enc, quant, compute_dtype).reshape(B, T, n_kv, head_dim)
-    v = linear(p["wv"], enc, quant, compute_dtype).reshape(B, T, n_kv, head_dim)
+    q = linear(p["wq"], x, quant, compute_dtype).reshape(B, S, -1, head_dim)
+    k = linear(p["wk"], enc, quant, compute_dtype).reshape(B, T, -1, head_dim)
+    v = linear(p["wv"], enc, quant, compute_dtype).reshape(B, T, -1, head_dim)
     q_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
     k_pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
     out = full_attention(q, k, v, q_pos, k_pos, causal=False)
-    return linear(p["wo"], out.reshape(B, S, n_heads * head_dim).astype(compute_dtype),
+    return linear(p["wo"], out.reshape(B, S, -1).astype(compute_dtype),
                   quant, compute_dtype)

@@ -194,8 +194,8 @@ def precompute_cross_kv(params: dict, cfg: ModelConfig, enc_out: jax.Array,
     def per_layer(bp):
         k = linear(bp["cross_attn"]["wk"], enc_out, cfg.quant, cd)
         v = linear(bp["cross_attn"]["wv"], enc_out, cfg.quant, cd)
-        return (k.reshape(B, T, cfg.n_kv, cfg.head_dim),
-                v.reshape(B, T, cfg.n_kv, cfg.head_dim))
+        return (k.reshape(B, T, -1, cfg.head_dim),
+                v.reshape(B, T, -1, cfg.head_dim))
 
     xk, xv = jax.vmap(per_layer)(params["dec_blocks"])
     return {**cache, "xk": xk.astype(cd), "xv": xv.astype(cd)}
@@ -226,14 +226,13 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
         x = x + y
         h = layer_norm(bp["ln_x"], x)
         qh = linear(bp["cross_attn"]["wq"], h, q, cd).reshape(
-            B, 1, cfg.n_heads, cfg.head_dim)
+            B, 1, -1, cfg.head_dim)
         pos_q = jnp.zeros((B, 1), jnp.int32)
         pos_k = jnp.broadcast_to(jnp.arange(xk.shape[1], dtype=jnp.int32)[None],
                                  (B, xk.shape[1]))
         o = attn_lib.full_attention(qh, xk, xv, pos_q, pos_k, causal=False)
         x = x + linear(bp["cross_attn"]["wo"],
-                       o.reshape(B, 1, cfg.n_heads * cfg.head_dim).astype(cd),
-                       q, cd)
+                       o.reshape(B, 1, -1).astype(cd), q, cd)
         h = layer_norm(bp["ln2"], x)
         x = x + mlp(bp["mlp"], h, "gelu", q, cd)
         return (x,), (ck, cv)

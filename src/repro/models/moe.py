@@ -153,14 +153,31 @@ def _moe_dispatch_flat(p: Params, xf: jax.Array, cfg: MoEConfig, *,
     if constrain_bufs:
         buf = constrain(buf, "expert", "moe_capacity", None)
 
-    # batched expert SwiGLU (weights may be pre-quantized serving codes)
+    # batched expert SwiGLU (weights may be pre-quantized serving codes).
+    # Under expert-parallel tensor sharding (``tp_exp``-marked banks inside
+    # a dist.tp context) each shard holds E/tp experts: the dispatch buffer
+    # is sliced to the local experts, only they run, and an all_gather over
+    # the expert axis rebuilds the full output buffer — every element of
+    # which is computed by exactly one shard with the unsharded per-expert
+    # math, so the (replicated) combine below stays bit-identical to the
+    # single-device path.  Routing above ran on the replicated router, so
+    # top-k choice, gates, and capacity positions are identical everywhere.
+    from repro.dist import tp as tp_lib
+    exp_axis = tp_lib.model_axis() if (isinstance(p["wi"], dict)
+                                       and "tp_exp" in p["wi"]) else None
+    if exp_axis is not None:
+        E_local = p["wi"]["w_q"].shape[0]
+        start = jax.lax.axis_index(exp_axis) * E_local
+        buf = jax.lax.dynamic_slice_in_dim(buf, start, E_local, axis=0)
     h = _expert_einsum(buf, p["wi"], compute_dtype)
     g = _expert_einsum(buf, p["wg"], compute_dtype)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * h
-    if constrain_bufs:
+    if exp_axis is None and constrain_bufs:
         h = constrain(h, "expert", "moe_capacity", "expert_mlp")
     out = _expert_einsum(h, p["wo"], compute_dtype, out_contract=True)
-    if constrain_bufs:
+    if exp_axis is not None:
+        out = jax.lax.all_gather(out, exp_axis, axis=0, tiled=True)
+    elif constrain_bufs:
         out = constrain(out, "expert", "moe_capacity", None)
 
     # combine

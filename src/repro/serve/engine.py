@@ -162,6 +162,26 @@ class Engine:
         """Zero decode buffers for ``batch`` slots at max_len (static shapes)."""
         return self._mod.init_cache(self.cfg, batch, self.scfg.max_len)
 
+    def _cache_sds(self, batch: int):
+        """ShapeDtypeStructs of the decode cache (no device allocation)."""
+        return jax.eval_shape(
+            lambda: self._mod.init_cache(self.cfg, batch, self.scfg.max_len))
+
+    def kv_cache_bytes(self, batch: int) -> int:
+        """Bytes of the attention KV leaves (K/V + int8-KV scales + shared
+        attention K/V) of a ``batch``-slot cache.  The sharded engine
+        overrides this with the *per-shard* figure — the memory number the
+        serving bench reports next to tokens/s."""
+        from repro.launch.specs import (KV_CACHE_LEAVES, KV_SCALE_LEAVES,
+                                        _leaf_key)
+        names = KV_CACHE_LEAVES | KV_SCALE_LEAVES
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self._cache_sds(batch))[0]:
+            if _leaf_key(path) in names:
+                total += leaf.size * leaf.dtype.itemsize
+        return total
+
     def place_slot_state(self, x: jax.Array) -> jax.Array:
         """Device placement for per-slot ``[slots]`` vectors (identity here;
         the sharded engine pins them to the data axis so the compiled

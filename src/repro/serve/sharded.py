@@ -29,6 +29,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.dist import tp as tp_lib
+from repro.launch.specs import serving_cache_specs
 from repro.models import transformer
 from repro.serve.engine import Engine, ServeConfig
 from repro.serve.quantize import quantize_params_for_serving
@@ -56,19 +57,32 @@ class ShardedEngine(Engine):
         self.n_data = mesh.shape[data_axis]
         self.n_model = mesh.shape[model_axis]
         # quantize + mark BEFORE Engine.__init__: _build_admit_fn (called by
-        # the base ctor) closes over the param/cache specs
+        # the base ctor) closes over the param/cache specs.  head_dim lets
+        # the marker go head-parallel on attention groups (QKV stay local,
+        # attention runs on n_heads/tp heads per shard) when the head counts
+        # divide the model axis; the KV cache layout below keys off whether
+        # that actually happened.
         params = quantize_params_for_serving(params, mode=scfg.quant)
         params, self._param_specs, self.n_tp_leaves = tp_lib.mark_tp_params(
-            params, self.n_model, model_axis)
+            params, self.n_model, model_axis, head_dim=cfg.head_dim)
+        n_attn, n_head_marked = tp_lib.attn_group_counts(params)
+        if n_head_marked not in (0, n_attn):
+            # the KV-cache layout below is one global choice: a tree where
+            # only SOME attention groups went head-parallel (heterogeneous
+            # per-layer head counts) cannot be cached consistently
+            raise ValueError(
+                f"head marking must be all-or-nothing across attention "
+                f"groups, got {n_head_marked}/{n_attn}")
+        self.head_sharded = n_head_marked > 0
         # canonical specs (no trailing Nones, size-1 axes elided) — exactly
         # the form XLA hands back on computation outputs, so round-tripped
         # slot state / caches never change the executors' cache signature
         self._dspec = P(data_axis) if self.n_data > 1 else P()
-        self._cspec = P(None, data_axis) if self.n_data > 1 else P()
-        self._cache_specs = jax.tree_util.tree_map(
-            lambda sds: self._cspec,
+        self._cache_specs = serving_cache_specs(
             jax.eval_shape(lambda: transformer.init_cache(
-                cfg, self.n_data, scfg.max_len)))
+                cfg, self.n_data, scfg.max_len)),
+            data_axis if self.n_data > 1 else None,
+            model_axis if self.head_sharded else None)
         super().__init__(cfg, params,
                          dataclasses.replace(scfg, quant=None))
         self.scfg = scfg                     # keep the quant label visible
@@ -130,6 +144,35 @@ class ShardedEngine(Engine):
 
     def place_slot_state(self, x):
         return jax.device_put(x, NamedSharding(self.mesh, self._dspec))
+
+    def kv_cache_bytes(self, batch: int) -> int:
+        """PER-SHARD bytes of the attention KV leaves: the data axis splits
+        the ``batch`` slots and — when head-sharded — the model axis splits
+        the KV heads, so the figure shrinks by ``n_data * n_model`` on
+        divisible configs (vs ``n_data`` alone with replicated heads)."""
+        from repro.launch.specs import (KV_CACHE_LEAVES, KV_SCALE_LEAVES,
+                                        _leaf_key)
+        names = KV_CACHE_LEAVES | KV_SCALE_LEAVES
+        sds = self._cache_sds(batch)
+        # the engine's live specs are batch-independent (same leaf names and
+        # ranks for any slot count) — reusing them keeps this report and the
+        # actual executor sharding from ever diverging
+        specs = self._cache_specs
+        total = 0
+        for (path, leaf), spec in zip(
+                jax.tree_util.tree_flatten_with_path(sds)[0],
+                jax.tree_util.tree_leaves(
+                    specs, is_leaf=lambda x: isinstance(x, P))):
+            if _leaf_key(path) not in names:
+                continue
+            div = 1
+            for entry in spec:
+                if entry is None:
+                    continue
+                for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                    div *= self.mesh.shape[ax]
+            total += leaf.size * leaf.dtype.itemsize // div
+        return total
 
     def generate(self, *a, **kw):
         raise NotImplementedError(

@@ -1,8 +1,9 @@
 """Minimal hypothesis shim for environments without the real package.
 
 Provides just the API surface this repo's tests use — ``given``/``settings``
-and the ``integers``/``floats``/``lists`` strategies (+ ``.map``) — executing
-each property test over a fixed number of deterministically-seeded samples.
+and the ``integers``/``floats``/``lists``/``sampled_from``/``booleans``/
+``just``/``tuples`` strategies (+ ``.map``/``.filter``) — executing each
+property test over a fixed number of deterministically-seeded samples.
 Registered from ``conftest.py`` into ``sys.modules`` only when the real
 hypothesis is absent, so installing it transparently upgrades the tests.
 """
@@ -48,6 +49,23 @@ def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
     return _Strategy(draw)
 
 
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
 def settings(max_examples: int = 100, **_: object):
     def deco(fn):
         fn._stub_max_examples = max_examples
@@ -58,7 +76,11 @@ def settings(max_examples: int = 100, **_: object):
 def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
     def deco(fn):
         def wrapper():
-            n = min(getattr(fn, "_stub_max_examples", 100), 25)
+            # read the settings() cap at CALL time from the wrapper first:
+            # @settings stacked ABOVE @given tags the wrapper, below it tags
+            # fn — both orders must work like real hypothesis
+            n = min(getattr(wrapper, "_stub_max_examples",
+                            getattr(fn, "_stub_max_examples", 100)), 25)
             rng = random.Random(0)
             for _ in range(n):
                 drawn_args = tuple(s.draw(rng) for s in arg_strategies)
@@ -77,6 +99,8 @@ def install(sys_modules: dict) -> None:
     mod = types.ModuleType("hypothesis")
     strat = types.ModuleType("hypothesis.strategies")
     strat.integers, strat.floats, strat.lists = integers, floats, lists
+    strat.sampled_from, strat.booleans = sampled_from, booleans
+    strat.just, strat.tuples = just, tuples
     mod.given, mod.settings, mod.strategies = given, settings, strat
     sys_modules["hypothesis"] = mod
     sys_modules["hypothesis.strategies"] = strat

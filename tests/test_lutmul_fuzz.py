@@ -1,0 +1,164 @@
+"""Property-based bit-exactness fuzz for the lutmul kernel family.
+
+Every drawn (M, K, N, weight bits, block shape, contract dtype) combination
+must make the Pallas kernels (interpret mode — the CPU lowering of the TPU
+kernel) agree EXACTLY with the pure-jnp oracles in ``kernels/lutmul/ref.py``:
+integer accumulators bit for bit, fused-dequant outputs bit for bit against
+the oracle's epilogue order.  Runs under real hypothesis when installed, or
+the deterministic shim in ``tests/_hypothesis_stub.py`` (fixed seed) —
+``REPRO_FUZZ_EXAMPLES`` bounds the example count so CI stays fast.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.lut import contraction_table, pack_int4
+from repro.kernels.lutmul import kernel, ref
+from repro.kernels.lutmul import ops as lut_ops
+
+N_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "8"))
+
+# (bm, bn, bk) — (8, 128, 128)-aligned like ops._CANDIDATES, small enough
+# that interpret mode stays fast
+BLOCKS = st.sampled_from([(8, 128, 128), (16, 128, 128), (8, 256, 128),
+                          (8, 128, 256)])
+DIMS = st.tuples(st.integers(1, 24),                 # M
+                 st.integers(1, 96).map(lambda k: 2 * k),   # K (even)
+                 st.integers(1, 140))                # N
+CONTRACT_DTYPE = st.sampled_from(["float32", "int8"])
+
+
+def _codes(rng: np.random.Generator, m: int, k: int) -> np.ndarray:
+    """Random 4-bit activation codes (two's-complement nibbles in uint8)."""
+    return (rng.integers(-8, 8, (m, k)) & 0xF).astype(np.uint8)
+
+
+def _packed_weights(rng: np.random.Generator, k: int, n: int) -> np.ndarray:
+    w = rng.integers(-8, 8, (k, n)).astype(np.int8)
+    return np.asarray(pack_int4(jnp.asarray(w).T).T)
+
+
+def _int8_vals(rng: np.random.Generator, shape, bits: int) -> np.ndarray:
+    qmax = 2 ** (bits - 1) - 1
+    return rng.integers(-qmax, qmax + 1, shape).astype(np.int8)
+
+
+@given(DIMS, st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=N_EXAMPLES, deadline=None)
+def test_fuzz_lutmul_interpret_matches_ref(dims, seed):
+    """ops.lutmul (onehot Pallas kernel, interpret) == ref, any shape —
+    padding, block clipping, and the one-hot contraction all exact."""
+    m, k, n = dims
+    rng = np.random.default_rng(seed)
+    a = _codes(rng, m, k)
+    wp = _packed_weights(rng, k, n)
+    got = lut_ops.lutmul(jnp.asarray(a), jnp.asarray(wp),
+                         backend="interpret")
+    want = ref.lutmul_ref(jnp.asarray(a), jnp.asarray(wp))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(DIMS, st.sampled_from([4, 8]), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=N_EXAMPLES, deadline=None)
+def test_fuzz_int_matmul_interpret_matches_ref(dims, bits, seed):
+    """ops.int_matmul (interpret) == ref over 4- and 8-bit value ranges."""
+    m, k, n = dims
+    rng = np.random.default_rng(seed)
+    a = _int8_vals(rng, (m, k), bits)
+    w = _int8_vals(rng, (k, n), bits)
+    got = lut_ops.int_matmul(jnp.asarray(a), jnp.asarray(w),
+                             backend="interpret")
+    want = ref.int_matmul_ref(jnp.asarray(a), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(BLOCKS, CONTRACT_DTYPE, st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=N_EXAMPLES, deadline=None)
+def test_fuzz_onehot_contract_dtype_exact(blocks, contract_dtype, seed):
+    """The one-hot/bitplane contraction itself is exact in BOTH contract
+    dtypes: float32 (interpret-mode path) and int8 (the TPU MXU path) —
+    the int8 variant is what real hardware runs, so the fuzz must pin it."""
+    bm, bn, bk = blocks
+    rng = np.random.default_rng(seed)
+    a = _codes(rng, bm, bk).astype(np.int32)
+    wp = _packed_weights(rng, bk, bn)
+    table = jnp.asarray(contraction_table(a_signed=True), jnp.int32)
+    acc = kernel._onehot_contract(jnp.asarray(a), jnp.asarray(wp), table,
+                                  contract_dtype=jnp.dtype(contract_dtype))
+    want = ref.lutmul_ref(jnp.asarray(a.astype(np.uint8)), jnp.asarray(wp))
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(want))
+
+
+@given(BLOCKS, st.integers(1, 2), st.integers(1, 2), st.integers(1, 2),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=N_EXAMPLES, deadline=None)
+def test_fuzz_lutmul_block_shapes_exact(blocks, gm, gn, gk, seed):
+    """Explicit (bm, bn, bk) sweep through the raw Pallas entry point on
+    multi-block grids: the K-accumulation order and block indexing never
+    change the integer result."""
+    bm, bn, bk = blocks
+    M, N, K = gm * bm, gn * bn, gk * bk
+    rng = np.random.default_rng(seed)
+    a = _codes(rng, M, K)
+    wp = _packed_weights(rng, K, N)
+    table = jnp.asarray(contraction_table(a_signed=True), jnp.int32)
+    got = kernel.lutmul_pallas(jnp.asarray(a), jnp.asarray(wp), table,
+                               bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.lutmul_ref(jnp.asarray(a), jnp.asarray(wp))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(BLOCKS, st.sampled_from(["lut", "int"]),
+       st.sampled_from(["float32", "bfloat16"]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=N_EXAMPLES, deadline=None)
+def test_fuzz_fused_dequant_matches_scaled_ref(blocks, which, out_dtype,
+                                               seed):
+    """Fused-epilogue kernels == the scaled oracle bit for bit: the in-kernel
+    rescale must apply the exact epilogue order ``ref.scaled_lutmul_ref``
+    documents, in both output dtypes."""
+    bm, bn, bk = blocks
+    M, N, K = bm, bn, 2 * bk                  # 2 K-blocks: epilogue at k=nk-1
+    rng = np.random.default_rng(seed)
+    a = _codes(rng, M, K)
+    wp = _packed_weights(rng, K, N)
+    a_scale = jnp.asarray(rng.uniform(1e-3, 1.0, (M, 1)), jnp.float32)
+    w_scale = jnp.asarray(rng.uniform(1e-3, 1.0, (1, N)), jnp.float32)
+    od = jnp.dtype(out_dtype)
+    if which == "lut":
+        table = jnp.asarray(contraction_table(a_signed=True), jnp.int32)
+        got = kernel.lutmul_fused_pallas(
+            jnp.asarray(a), jnp.asarray(wp), table, a_scale, w_scale,
+            bm=bm, bn=bn, bk=bk, out_dtype=od, interpret=True)
+        want = ref.scaled_lutmul_ref(jnp.asarray(a), jnp.asarray(wp),
+                                     a_scale, w_scale, out_dtype=od)
+    else:
+        w = np.asarray(ref.decode_codes(jnp.asarray(_codes(rng, K, N)))
+                       ).astype(np.int8)
+        a8 = _int8_vals(rng, (M, K), 8)
+        got = kernel.int_matmul_fused_pallas(
+            jnp.asarray(a8), jnp.asarray(w), a_scale, w_scale,
+            bm=bm, bn=bn, bk=bk, out_dtype=od, interpret=True)
+        acc = ref.int_matmul_ref(jnp.asarray(a8), jnp.asarray(w))
+        want = (acc.astype(jnp.float32) * a_scale * w_scale).astype(od)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.tuples(st.integers(1, 8), st.integers(1, 32).map(lambda k: 2 * k),
+                 st.integers(1, 48)),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=N_EXAMPLES, deadline=None)
+def test_fuzz_gather_impl_matches_ref(dims, seed):
+    """The retained serial table-gather baseline stays bit-exact too (small
+    dims: it is the slow A/B kernel)."""
+    m, k, n = dims
+    rng = np.random.default_rng(seed)
+    a = _codes(rng, m, k)
+    wp = _packed_weights(rng, k, n)
+    got = lut_ops.lutmul_gather(jnp.asarray(a), jnp.asarray(wp),
+                                backend="interpret")
+    want = ref.lutmul_ref(jnp.asarray(a), jnp.asarray(wp))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -8,12 +8,16 @@ the main pytest process stays single-device.  It asserts, on a 2x2 AND a
   * temperature-0 scheduler output is BIT-identical to the single-device
     engine (static-batch ``generate`` oracle), through staggered admission,
     padded pow2 prompt buckets, gemma SWA ring stitches, tied embeddings,
-    and the int8-KV decode cache;
+    the int8-KV decode cache, head-sharded attention (KV cache split to
+    n_kv/tp heads per shard — asserted on the live cache's shard shapes),
+    3D split-head projections, and sharded MoE expert banks (qwen2-moe +
+    mixtral smokes, incl. the replicated fallbacks for n_kv % tp != 0 and
+    E % tp != 0);
   * no jit retrace after warmup (executor cache sizes stay 1);
   * the quantized projections really are sharded (tp leaf count > 0).
 
-Single-device unit tests cover the param marking/spec derivation and the
-engine's guard rails.
+Single-device unit tests cover the param marking/spec derivation (head /
+expert / GQA-fallback edge cases) and the engine's guard rails.
 """
 import os
 import subprocess
@@ -75,6 +79,148 @@ def test_mark_tp_params_indivisible_leaves_stay_replicated():
     assert specs["blocks"][0]["attn"]["wq"]["w_q"] == P()
 
 
+# ---------------------------------------------------------------------------
+# head-parallel + expert-parallel spec derivation edge cases
+# ---------------------------------------------------------------------------
+
+def test_mark_tp_params_head_sharded_attention():
+    cfg, qparams = _quantized_smoke_params()
+    assert cfg.n_heads % 2 == 0 and cfg.n_kv % 2 == 0
+    marked, specs, n = tp.mark_tp_params(qparams, 2, head_dim=cfg.head_dim)
+    attn = marked["blocks"][0]["attn"]
+    # QKV are head-parallel: codes/scales/bias split on N, NO gather marker
+    for k in ("wq", "wk", "wv"):
+        assert tp.leaf_tp_mode(attn[k]) == "head", k
+        assert specs["blocks"][0]["attn"][k]["w_q"] == P(None, None, "model")
+        assert specs["blocks"][0]["attn"][k]["b"] == P(None, "model")
+    # the output projection stays ordinary row-parallel: the head-local
+    # attention output IS its K slice (shape-dispatched in ops)
+    assert tp.leaf_tp_mode(attn["wo"]) == "row"
+    assert specs["blocks"][0]["attn"]["wo"]["w_q"] == P(None, "model", None)
+    assert tp.has_marker(marked, "tp_head")
+
+
+def test_mark_tp_params_gqa_indivisible_kv_falls_back_to_replicated_attn():
+    """n_kv % tp != 0 (GQA): attention falls back to the col/row (replicated
+    attention) marking — still sharded projections, full-head KV cache."""
+    cfg = configs.get_config("mixtral-8x22b", smoke=True, quant="w4a4_lut")
+    assert cfg.n_kv % 4 != 0 and cfg.n_heads % 4 == 0
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params_for_serving(params, mode="w4a4_lut")
+    marked, specs, n = tp.mark_tp_params(qparams, 4, head_dim=cfg.head_dim)
+    attn = marked["blocks"][0]["attn"]
+    assert not tp.has_marker(marked, "tp_head")
+    assert tp.leaf_tp_mode(attn["wq"]) == "col"     # gathered, not local
+    assert tp.leaf_tp_mode(attn["wo"]) == "row"
+    # head-divisible counts on the same arch DO go head-parallel
+    marked2, _, _ = tp.mark_tp_params(qparams, 2, head_dim=cfg.head_dim)
+    assert tp.leaf_tp_mode(marked2["blocks"][0]["attn"]["wq"]) == "head"
+
+
+def test_mark_tp_params_indivisible_heads_fall_back():
+    """n_heads itself not divisible: no head marking anywhere (generic
+    col/row only shards what divides)."""
+    cfg, qparams = _quantized_smoke_params()
+    marked, specs, n = tp.mark_tp_params(qparams, 3, head_dim=cfg.head_dim)
+    assert not tp.has_marker(marked, "tp_head")
+    assert "tp_col" not in marked["blocks"][0]["attn"]["wq"]
+
+
+def test_mark_tp_params_3d_split_head_leaves():
+    """Float [d, H, dh] split-head projections go head-parallel over the H
+    axis; wo3 stays replicated (a float psum would drift — attention output
+    is gathered in front of it instead)."""
+    import dataclasses
+    cfg = configs.get_config("qwen2-7b", smoke=True, quant="w4a4_lut")
+    cfg = dataclasses.replace(cfg, split_head_params=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_params_for_serving(params, mode="w4a4_lut")
+    marked, specs, n = tp.mark_tp_params(qparams, 2, head_dim=cfg.head_dim)
+    attn = marked["blocks"][0]["attn"]
+    for k in ("wq3", "wk3", "wv3"):
+        assert tp.leaf_tp_mode(attn[k]) == "head", k
+        # stacked [G, d, H, dh]: the head axis is -2
+        assert specs["blocks"][0]["attn"][k]["w"] \
+            == P(None, None, "model", None)
+        assert specs["blocks"][0]["attn"][k]["b"] \
+            == P(None, "model", None)
+    assert tp.leaf_tp_mode(attn["wo3"]) is None
+    assert specs["blocks"][0]["attn"]["wo3"]["w"] == P()
+    # markers stay inert single-device
+    toks = jnp.arange(6, dtype=jnp.int32)[None]
+    import numpy as np
+    a, _ = T.prefill(qparams, cfg, toks)
+    b, _ = T.prefill(marked, cfg, toks)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _quantized_moe_params(arch="qwen2-moe-a2.7b"):
+    cfg = configs.get_config(arch, smoke=True, quant="w4a4_lut")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, quantize_params_for_serving(params, mode="w4a4_lut")
+
+
+def test_mark_tp_params_expert_banks_sharded():
+    cfg, qparams = _quantized_moe_params()       # 8 experts
+    marked, specs, n = tp.mark_tp_params(qparams, 2, head_dim=cfg.head_dim)
+    moe = marked["blocks"][0]["moe"]
+    for k in ("wi", "wg", "wo"):
+        assert tp.leaf_tp_mode(moe[k]) == "exp", k
+        # stacked [G, E, K(/2), N]: expert axis is -3, for codes AND scales
+        assert specs["blocks"][0]["moe"][k]["w_q"] \
+            == P(None, "model", None, None)
+        assert specs["blocks"][0]["moe"][k]["w_scale"] \
+            == P(None, "model", None, None)
+    # router replicated => top-k expert choice bit-identical everywhere
+    assert tp.leaf_tp_mode(moe["router"]) is None
+    assert specs["blocks"][0]["moe"]["router"]["w"] == P()
+    # the shared-expert branch is a plain MLP: normal col/row marking
+    assert tp.leaf_tp_mode(moe["shared"]["wi"]) == "col"
+    assert tp.leaf_tp_mode(moe["shared"]["wo"]) == "row"
+
+
+def test_mark_tp_params_indivisible_experts_stay_replicated():
+    cfg, qparams = _quantized_moe_params()       # 8 experts: 8 % 3 != 0
+    marked, specs, n = tp.mark_tp_params(qparams, 3, head_dim=cfg.head_dim)
+    moe = marked["blocks"][0]["moe"]
+    for k in ("wi", "wg", "wo"):
+        assert tp.leaf_tp_mode(moe[k]) is None, k
+        assert specs["blocks"][0]["moe"][k]["w_q"] == P()
+    # marked tree still runs single-device (replicated banks are inert)
+    toks = jnp.arange(4, dtype=jnp.int32)[None]
+    import numpy as np
+    a, _ = T.prefill(qparams, cfg, toks)
+    b, _ = T.prefill(marked, cfg, toks)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serving_cache_specs_head_sharded_layout():
+    from repro.launch.specs import serving_cache_specs
+    cfg = configs.get_config("qwen2-7b", smoke=True)
+    sds = jax.eval_shape(lambda: T.init_cache(cfg, 4, 16))
+    specs = serving_cache_specs(sds, "data", "model")
+    assert specs[0]["k"] == P(None, "data", None, "model")
+    # replicated heads: batch-only sharding; canonical elided form
+    specs_rep = serving_cache_specs(sds, "data", None)
+    assert specs_rep[0]["k"] == P(None, "data")
+    specs_1d = serving_cache_specs(sds, None, "model")
+    assert specs_1d[0]["k"] == P(None, None, None, "model")
+    # int8-KV scale leaves shard their trailing head axis
+    import dataclasses
+    cfg8 = dataclasses.replace(cfg, kv_quant="int8")
+    sds8 = jax.eval_shape(lambda: T.init_cache(cfg8, 4, 16))
+    specs8 = serving_cache_specs(sds8, "data", "model")
+    assert specs8[0]["k_scale"] == P(None, "data", None, "model")
+    # recurrent-state leaves (mamba h / rwkv S) must NOT head-shard
+    cfgz = configs.get_config("zamba2-2.7b", smoke=True)
+    sdsz = jax.eval_shape(lambda: T.init_cache(cfgz, 4, 16))
+    specsz = serving_cache_specs(sdsz, "data", "model")
+    for i, spec in enumerate(cfgz.pattern):
+        if spec.kind == "mamba2":
+            assert specsz[i]["h"] == P(None, "data")
+            break
+
+
 def test_mark_tp_params_markers_are_inert_single_device():
     """Marked params outside a tp_context run exactly like unmarked ones."""
     cfg, qparams = _quantized_smoke_params()
@@ -119,16 +265,18 @@ _EQUIV_SCRIPT = textwrap.dedent("""
     import dataclasses
     import jax, numpy as np
     from repro import configs
-    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.mesh import make_serving_mesh, parse_mesh
     from repro.models import transformer as T
     from repro.serve import Engine, Request, Scheduler, ServeConfig, \\
         ShardedEngine
 
     def case(arch, quant, mesh_spec, kv_quant="none", bucket="exact",
-             slots=4, chunk=2, oracle="generate"):
+             slots=4, chunk=2, oracle="generate", split3=False,
+             expect_heads=None):
         cfg = dataclasses.replace(
             configs.get_config(arch, smoke=True, quant=quant),
-            compute_dtype="float32", kv_quant=kv_quant)
+            compute_dtype="float32", kv_quant=kv_quant,
+            split_head_params=split3)
         params = T.init_params(jax.random.PRNGKey(0), cfg)
         scfg = ServeConfig(max_len=32, quant=quant)
         ref = Engine(cfg, params, scfg)
@@ -148,6 +296,10 @@ _EQUIV_SCRIPT = textwrap.dedent("""
         eng = ShardedEngine(cfg, params, scfg,
                             mesh=make_serving_mesh(mesh_spec))
         assert eng.n_tp_leaves > 0, (arch, mesh_spec)
+        nd, nm = parse_mesh(mesh_spec)
+        if expect_heads is not None:
+            assert eng.head_sharded == (expect_heads < cfg.n_kv), \\
+                (arch, mesh_spec, eng.head_sharded)
         sched = Scheduler(eng, slots=slots, chunk=chunk, prompt_bucket=bucket)
         reqs = [Request(prompt=np.asarray(prompts[i]).tolist(),
                         max_new_tokens=5) for i in range(4)]
@@ -164,15 +316,46 @@ _EQUIV_SCRIPT = textwrap.dedent("""
         sizes = (eng._admit_fn._cache_size(),
                  *(f._cache_size() for f in eng._scan_fns.values()))
         assert all(s == 1 for s in sizes), (arch, mesh_spec, sizes)
+        if expect_heads is not None:
+            # per-shard KV cache holds n_kv/tp heads on divisible configs
+            # (the documented replicated fallback otherwise)
+            c0 = next(c for c in sched.cache
+                      if "k" in c or "shared_k" in c)
+            k = c0["k"] if "k" in c0 else c0["shared_k"]
+            got_heads = k.sharding.shard_shape(k.shape)[-2]
+            assert got_heads == expect_heads, \\
+                (arch, mesh_spec, got_heads, expect_heads)
+            per_shard = eng.kv_cache_bytes(slots)
+            total = Engine.kv_cache_bytes(eng, slots)
+            shrink = nd * (nm if eng.head_sharded else 1)
+            assert per_shard == total // shrink, \\
+                (arch, mesh_spec, per_shard, total, shrink)
         print("OK", arch, quant, mesh_spec, "kv=" + kv_quant,
+              "head_sharded=", eng.head_sharded,
               "tp_leaves=", eng.n_tp_leaves, flush=True)
 
-    for mesh_spec in ("2x2", "1x8"):
-        case("qwen2-7b", "w4a4_lut", mesh_spec)
-    # SWA ring stitch + tied embeddings + padded pow2 buckets, int8 weights
+    # head-sharded attention on both meshes: 2x2 shards the smoke GQA heads
+    # (n_kv/2 per shard); on 1x8 n_heads % 8 != 0 -> documented replicated
+    # fallback
+    cfg0 = configs.get_config("qwen2-7b", smoke=True)
+    case("qwen2-7b", "w4a4_lut", "2x2", expect_heads=cfg0.n_kv // 2)
+    case("qwen2-7b", "w4a4_lut", "1x8", expect_heads=cfg0.n_kv)
+    # SWA ring stitch + tied embeddings + padded pow2 buckets, int8 weights,
+    # head-sharded rings
     case("gemma2-2b", "w8a8", "2x2", bucket="pow2")
-    # int8 decode KV cache under the sharded stitch (scheduler oracle)
+    # int8 decode KV cache: head-sharded (2x2) AND replicated (1x8) stitches
+    # (scheduler oracle)
+    case("qwen2-7b", "w4a4_lut", "2x2", kv_quant="int8", oracle="scheduler",
+         expect_heads=cfg0.n_kv // 2)
     case("qwen2-7b", "w4a4_lut", "1x8", kv_quant="int8", oracle="scheduler")
+    # 3D split-head float projections: head-parallel column split + gather
+    # in front of the replicated wo3
+    case("qwen2-7b", "w4a4_lut", "2x2", split3=True,
+         expect_heads=cfg0.n_kv // 2)
+    # zamba2: shared-attention block (head-sharded shared_k/shared_v) +
+    # mamba recurrent state stitches (exact-length admission)
+    case("zamba2-2.7b", "w8a8", "2x2",
+         expect_heads=configs.get_config("zamba2-2.7b", smoke=True).n_kv // 2)
     print("ALL-OK")
 """)
 
@@ -182,6 +365,84 @@ def test_sharded_scheduler_bit_identical_subprocess():
     env = dict(os.environ, PYTHONPATH=SRC)
     env.pop("XLA_FLAGS", None)
     out = subprocess.run([sys.executable, "-c", _EQUIV_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "ALL-OK" in out.stdout, out.stdout
+
+
+_MOE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, numpy as np
+    from repro import configs
+    from repro.dist import tp
+    from repro.launch.mesh import make_serving_mesh, parse_mesh
+    from repro.models import transformer as T
+    from repro.serve import Engine, Request, Scheduler, ServeConfig, \\
+        ShardedEngine
+
+    def case(arch, quant, mesh_spec):
+        cfg = dataclasses.replace(
+            configs.get_config(arch, smoke=True, quant=quant),
+            compute_dtype="float32")
+        nd, nm = parse_mesh(mesh_spec)
+        E = cfg.moe.n_experts
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        scfg = ServeConfig(max_len=32, quant=quant)
+        ref = Engine(cfg, params, scfg)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 6), 0,
+                                     cfg.vocab)
+        want = np.asarray(ref.generate(prompts, max_new_tokens=5)[:, 6:])
+        eng = ShardedEngine(cfg, params, scfg,
+                            mesh=make_serving_mesh(mesh_spec))
+        # expert banks really are sharded when E divides the model axis,
+        # and stay replicated (not crashed) otherwise
+        assert tp.has_marker(eng.params, "tp_exp") == \\
+            (nm > 1 and E % nm == 0), (arch, mesh_spec)
+        sched = Scheduler(eng, slots=4, chunk=2, prompt_bucket="exact")
+        reqs = [Request(prompt=np.asarray(prompts[i]).tolist(),
+                        max_new_tokens=5) for i in range(4)]
+        sched.submit(reqs[0]); sched.submit(reqs[1]); sched.step()
+        sched.submit(reqs[2]); sched.submit(reqs[3])
+        while sched.has_work:
+            sched.step()
+        for i, r in enumerate(reqs):
+            assert r.tokens == want[i].tolist(), \\
+                (arch, mesh_spec, i, r.tokens, want[i].tolist())
+        sizes = (eng._admit_fn._cache_size(),
+                 *(f._cache_size() for f in eng._scan_fns.values()))
+        assert all(s == 1 for s in sizes), (arch, mesh_spec, sizes)
+        if eng.head_sharded:
+            k = sched.cache[0]["k"]
+            assert k.sharding.shard_shape(k.shape)[-2] == cfg.n_kv // nm
+        print("OK", arch, mesh_spec, "experts_sharded=",
+              tp.has_marker(eng.params, "tp_exp"),
+              "head_sharded=", eng.head_sharded, flush=True)
+
+    # qwen2-moe smoke (8 experts, shared expert, qkv bias):
+    #   2x2 -> expert-sharded (E/2 per shard) + head-sharded attention
+    #   1x8 -> expert-sharded down to 1 expert/shard; heads fall back
+    case("qwen2-moe-a2.7b", "w4a4_lut", "2x2")
+    case("qwen2-moe-a2.7b", "w4a4_lut", "1x8")
+    # mixtral smoke (4 experts, SWA ring, GQA kv=2):
+    #   2x2 -> expert- AND head-sharded incl. the rolling-window ring
+    #   1x8 -> E % 8 != 0 and n_kv % 8 != 0: everything replicated, exact
+    case("mixtral-8x22b", "w8a8", "2x2")
+    case("mixtral-8x22b", "w8a8", "1x8")
+    print("ALL-OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_moe_bit_identical_subprocess():
+    """Sharded MoE expert banks: temperature-0 output bit-identical to the
+    single-device engine with routed experts split over the model axis
+    (replicated router => identical top-k), plus the non-divisible
+    fallbacks."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _MOE_SCRIPT], env=env,
                          capture_output=True, text=True, timeout=1800)
     assert out.returncode == 0, out.stderr[-4000:]
     assert "ALL-OK" in out.stdout, out.stdout

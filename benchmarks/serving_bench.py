@@ -7,6 +7,10 @@ Three sections:
     timed call and the reported tokens/s now come from the SAME invocation
     (the old harness timed a 2-token rerun while labelling it with a 16-token
     measurement).
+  * dense vs paged KV on a shared-prefix workload: the same request stream
+    through dense per-slot buffers and the paged pool (``serve.paged``) —
+    tokens/s, capacity vs allocated-page KV bytes, admission-padding waste
+    (prefill/admitted tokens), slot occupancy, and the prefix-hit rate.
   * Poisson-arrival continuous vs static batching: the same request stream
     (seeded exponential inter-arrivals, heterogeneous decode budgets) served
     by the slot Scheduler (admit-on-free-slot) vs grouped static batches
@@ -137,6 +141,69 @@ def _poisson_rows():
     ]
 
 
+def _paged_rows():
+    """Dense per-slot KV buffers vs the paged pool on a shared-prefix
+    workload (satellite of the ROADMAP ``[slots, bucket]`` item):
+
+      * ``kv_bytes`` — dense row: max_len *capacity*; paged row: peak
+        *allocated pages* (real residency — what actually scales with the
+        traffic);
+      * ``padding_waste`` — prefill_tokens / admitted_tokens of the fixed
+        [slots, bucket] admission shape (both engines pay it; recorded so
+        the cost is measured, not guessed);
+      * ``occupancy`` — mean fraction of live slots per decode round;
+      * ``prefix_hit_rate`` — fraction of prompt pages served from already
+        resident pages (paged only; nonzero on this workload by design).
+
+    On CPU the two rows' tokens/s are one-shot wall-clock measurements of
+    a tiny smoke model — run-to-run noise swamps the gather/scatter cost,
+    so the speed columns are not the signal here.  The stable committed
+    signal is the memory trade (allocated bytes vs capacity) + hit rate;
+    the TPU speed story is the ROADMAP paged-TPU item (gather fusion).
+    """
+    SLOTS, CHUNK, N = 4, 8, 16
+    rng = random.Random(0)
+    cfg = configs.get_config("qwen2-7b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    bases = [[rng.randrange(cfg.vocab) for _ in range(12)] for _ in range(3)]
+    prompts = [list(rng.choice(bases))
+               + [rng.randrange(cfg.vocab) for _ in range(rng.randint(0, 3))]
+               for _ in range(N)]
+    budgets = [24 if rng.random() < 0.15 else rng.randint(2, 8)
+               for _ in range(N)]
+    tokens = sum(budgets)
+    rows = []
+    for name, scfg in (
+            ("serve_workload_dense", ServeConfig(max_len=64)),
+            ("serve_workload_paged", ServeConfig(max_len=64, paged=True,
+                                                 page_size=4))):
+        eng = Engine(cfg, params, scfg)
+
+        def once():
+            sched = Scheduler(eng, slots=SLOTS, chunk=CHUNK,
+                              prompt_bucket="pow2")
+            sched.run([Request(prompt=p, max_new_tokens=b)
+                       for p, b in zip(prompts, budgets)])
+            return sched
+
+        once()                                     # warmup / compile
+        t0 = time.perf_counter()
+        sched = once()
+        dt = time.perf_counter() - t0
+        derived = (f"tokens_per_s={tokens / dt:.1f};slots={SLOTS};"
+                   f"chunk={CHUNK};requests={N};"
+                   f"kv_bytes={eng.kv_cache_bytes(SLOTS)};"
+                   f"padding_waste={sched.padding_waste:.2f};"
+                   f"occupancy={sched.mean_occupancy:.2f}")
+        if eng.paged:
+            derived += (f";prefix_hit_rate={eng.pool.prefix_hit_rate:.2f};"
+                        f"page_size={scfg.page_size};"
+                        f"peak_pages={eng.pool.peak_pages};"
+                        f"preemptions={eng.pool.preemptions}")
+        rows.append((name, dt * 1e6, derived))
+    return rows
+
+
 def _sharded_workload(engine, slots: int, chunk: int, prompts, budgets):
     """Drain one fixed request set through a fresh Scheduler; makespan (s)."""
     sched = Scheduler(engine, slots=slots, chunk=chunk, prompt_bucket="pow2")
@@ -200,7 +267,7 @@ def _sharded_rows(meshes=None):
 
 
 def run():
-    rows = _quant_sweep() + _poisson_rows()
+    rows = _quant_sweep() + _poisson_rows() + _paged_rows()
     if jax.device_count() > 1:
         rows += _sharded_rows()
     else:

@@ -150,6 +150,14 @@ def serving_cache_specs(cache_sds, data_axis: str | None,
     per-shard KV cache holds ``n_kv / tp`` heads.  Pass ``None`` for a
     size-1 axis — specs stay in the canonical (elided) form XLA hands back
     on computation outputs, preserving the no-retrace invariant.
+
+    The SAME specs cover both cache layouts because they were designed to
+    line up: dense KV leaves are ``[G, slots, T, H, D]`` and paged pools
+    (``serve.paged``) are ``[G, num_pages, page_size, H, D]`` — dim 1 is
+    the data-split axis either way (slots, or pool pages with shard-local
+    page ids) and dim 3 is the head axis.  Page tables themselves are
+    per-slot ``[slots, E]`` vectors and ride the engine's slot-state spec
+    (``P(data)``), not this tree.
     """
     def leaf(path, x):
         key = _leaf_key(path)

@@ -245,6 +245,39 @@ def _write_kv_slot(cache: jax.Array, new: jax.Array,
     )(cache, new.astype(cache.dtype), slot)
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache: ordered gather / per-row page-table writes.  The pool is a
+# shared [num_pages, page_size, ...] block store; each batch row owns a
+# fixed-shape [E] int32 page-table row.  Gathering the pages in table order
+# reconstructs the row's dense [T = E*page_size, ...] buffer with values
+# bit-identical to the dense cache (unmapped entries read the reserved null
+# page 0, whose junk stays behind the position mask), so the attention math
+# downstream is byte-for-byte the dense path.
+# ---------------------------------------------------------------------------
+
+def paged_gather(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """pool [P, ps, ...], table [B, E] -> dense [B, E*ps, ...] in logical
+    order (page j's rows land at positions [j*ps, (j+1)*ps))."""
+    B, E = table.shape
+    g = jnp.take(pool, table, axis=0)            # [B, E, ps, ...]
+    return g.reshape((B, E * pool.shape[1]) + pool.shape[2:])
+
+
+def paged_write(pool: jax.Array, table: jax.Array, slot: jax.Array,
+                new: jax.Array) -> jax.Array:
+    """One decode-token write through the page table.
+
+    pool [P, ps, ...]; table [B, E]; slot [B] int32 (the token's slot in the
+    row's logical buffer — absolute position, or ``pos % window`` for SWA
+    rings); new [B, 1, ...].  A free slot's table row is all zeros, so its
+    idempotent write lands in the null page; active rows own their current
+    page exclusively, so the scatter never collides across rows.
+    """
+    ps = pool.shape[1]
+    page = jnp.take_along_axis(table, (slot // ps)[:, None], axis=1)[:, 0]
+    return pool.at[page, slot % ps].set(new[:, 0].astype(pool.dtype))
+
+
 def decode_kv_positions(pos: jax.Array, T: int, rolling: bool) -> jax.Array:
     """Absolute positions of cache slots for per-sequence decode.
 
@@ -268,7 +301,8 @@ def decode_attention(p: Params, x: jax.Array, cache_k: jax.Array,
                      rope_theta: float = 10000.0, rope_mode: str = "rope",
                      mrope_sections: tuple[int, ...] = (),
                      rolling: bool = False,
-                     quant: str = "none", compute_dtype=jnp.bfloat16):
+                     quant: str = "none", compute_dtype=jnp.bfloat16,
+                     table: Optional[jax.Array] = None):
     """One decode step. x: [B, 1, d]; cache: [B, T, Hkv, D]; pos: scalar or
     per-sequence [B] int32 (continuous batching: slots at different depths).
 
@@ -277,9 +311,16 @@ def decode_attention(p: Params, x: jax.Array, cache_k: jax.Array,
     Mistral/Mixtral rolling cache); slot addressing is per-sequence
     ``pos[b] % T``.  A negative ``pos[b]`` marks a free slot: its write lands
     inside its own (free) row and every key stays masked.
+
+    ``table`` ([B, E] int32) switches the cache arguments to paged pools
+    ([P, page_size, Hkv, D]): the token write scatters through the row's
+    page table and attention runs over the ordered page gather — the dense
+    [B, T, Hkv, D] buffer reconstructed value-for-value, so the output is
+    bit-identical to the dense path.
     """
     B = x.shape[0]
-    T = cache_k.shape[1]
+    paged = table is not None
+    T = table.shape[1] * cache_k.shape[1] if paged else cache_k.shape[1]
     q = _proj_qkv(p, "wq", x, B, 1, n_heads, head_dim, quant, compute_dtype)
     k = _proj_qkv(p, "wk", x, B, 1, n_kv, head_dim, quant, compute_dtype)
     v = _proj_qkv(p, "wv", x, B, 1, n_kv, head_dim, quant, compute_dtype)
@@ -293,10 +334,16 @@ def decode_attention(p: Params, x: jax.Array, cache_k: jax.Array,
         q = apply_rope(q, posb, rope_theta)
         k = apply_rope(k, posb, rope_theta)
     slot = posv % T if rolling else jnp.clip(posv, 0, T - 1)
-    cache_k = _write_kv_slot(cache_k, k, slot)
-    cache_v = _write_kv_slot(cache_v, v, slot)
+    if paged:
+        cache_k = paged_write(cache_k, table, slot, k)
+        cache_v = paged_write(cache_v, table, slot, v)
+        dense_k = paged_gather(cache_k, table)
+        dense_v = paged_gather(cache_v, table)
+    else:
+        cache_k = dense_k = _write_kv_slot(cache_k, k, slot)
+        cache_v = dense_v = _write_kv_slot(cache_v, v, slot)
     k_pos = decode_kv_positions(posv, T, rolling)
-    out = full_attention(q, cache_k, cache_v, posb, k_pos, causal=True,
+    out = full_attention(q, dense_k, dense_v, posb, k_pos, causal=True,
                          window=window, logit_softcap=logit_softcap)
     y = _proj_out(p, out.astype(compute_dtype), B, 1, n_heads, head_dim,
                   quant, compute_dtype)
@@ -362,14 +409,19 @@ def decode_attention_int8(p: Params, x: jax.Array, cache: dict,
                           logit_softcap: Optional[float] = None,
                           rope_theta: float = 10000.0, rope_mode: str = "rope",
                           mrope_sections: tuple[int, ...] = (),
-                          quant: str = "none", compute_dtype=jnp.bfloat16):
+                          quant: str = "none", compute_dtype=jnp.bfloat16,
+                          table: Optional[jax.Array] = None):
     """One decode step over an int8-quantized cache.
 
     cache: {"k": s8[B,T,Hkv,D], "v": s8, "k_scale": f32[B,T,Hkv],
             "v_scale": f32[B,T,Hkv]}.  pos: scalar or per-sequence [B].
+    ``table`` switches the four cache leaves to paged pools
+    ([P, page_size, ...] — int8 codes AND their per-token-per-head scales
+    page together, so every page carries its own scales).
     """
     B = x.shape[0]
-    T = cache["k"].shape[1]
+    paged = table is not None
+    T = table.shape[1] * cache["k"].shape[1] if paged else cache["k"].shape[1]
     q = _proj_qkv(p, "wq", x, B, 1, n_heads, head_dim, quant, compute_dtype)
     k = _proj_qkv(p, "wk", x, B, 1, n_kv, head_dim, quant, compute_dtype)
     v = _proj_qkv(p, "wv", x, B, 1, n_kv, head_dim, quant, compute_dtype)
@@ -386,13 +438,17 @@ def decode_attention_int8(p: Params, x: jax.Array, cache: dict,
     v_new, vs_new = quantize_kv(v)
     slot = jnp.clip(posv, 0, T - 1)
     cache = dict(cache)
-    cache["k"] = _write_kv_slot(cache["k"], k_new, slot)
-    cache["v"] = _write_kv_slot(cache["v"], v_new, slot)
-    cache["k_scale"] = _write_kv_slot(cache["k_scale"], ks_new, slot)
-    cache["v_scale"] = _write_kv_slot(cache["v_scale"], vs_new, slot)
+    write = ((lambda c, n: paged_write(c, table, slot, n)) if paged
+             else (lambda c, n: _write_kv_slot(c, n, slot)))
+    cache["k"] = write(cache["k"], k_new)
+    cache["v"] = write(cache["v"], v_new)
+    cache["k_scale"] = write(cache["k_scale"], ks_new)
+    cache["v_scale"] = write(cache["v_scale"], vs_new)
+    dense = ((lambda c: paged_gather(c, table)) if paged else (lambda c: c))
     k_pos = decode_kv_positions(posv, T, rolling=False)
-    out = int8_kv_attention(q, cache["k"], cache["k_scale"], cache["v"],
-                            cache["v_scale"], posb, k_pos, window=window,
+    out = int8_kv_attention(q, dense(cache["k"]), dense(cache["k_scale"]),
+                            dense(cache["v"]), dense(cache["v_scale"]),
+                            posb, k_pos, window=window,
                             logit_softcap=logit_softcap)
     y = _proj_out(p, out.astype(compute_dtype), B, 1, n_heads, head_dim,
                   quant, compute_dtype)

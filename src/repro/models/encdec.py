@@ -186,6 +186,26 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     }
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     num_pages: int, page_size: int) -> dict:
+    """Paged form of :func:`init_cache`: the decoder self-attention K/V
+    become shared ``[L, num_pages, page_size, n_kv, head_dim]`` page pools
+    addressed through a per-slot page table (see ``serve.paged``).  The
+    cross-attention K/V stay dense — they are precomputed once per request
+    at full encoder length (``enc_seq``) and never grow."""
+    cd = cfg.cdtype
+    L = cfg.n_layers
+    if max_len % page_size:
+        raise ValueError(f"page_size ({page_size}) must divide max_len "
+                         f"({max_len})")
+    return {
+        "k": jnp.zeros((L, num_pages, page_size, cfg.n_kv, cfg.head_dim), cd),
+        "v": jnp.zeros((L, num_pages, page_size, cfg.n_kv, cfg.head_dim), cd),
+        "xk": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv, cfg.head_dim), cd),
+        "xv": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv, cfg.head_dim), cd),
+    }
+
+
 def precompute_cross_kv(params: dict, cfg: ModelConfig, enc_out: jax.Array,
                         cache: dict) -> dict:
     cd = cfg.cdtype
@@ -202,13 +222,19 @@ def precompute_cross_kv(params: dict, cfg: ModelConfig, enc_out: jax.Array,
 
 
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
-                cache: dict, pos: jax.Array):
+                cache: dict, pos: jax.Array, tables=None):
     """token: [B]; pos: scalar or per-sequence [B] int32.
-    Returns (logits [B, V], cache)."""
+    Returns (logits [B, V], cache).
+
+    ``tables`` (paged serving): ``(full_table [B, E], _)`` — the decoder
+    self-attention K/V leaves are then page pools (see ``init_paged_cache``)
+    and every write/read goes through the per-slot page-table row."""
     cd = cfg.cdtype
     B = token.shape[0]
     x = params["embed"]["emb"].astype(cd)[token][:, None, :]
-    T = cache["k"].shape[2]
+    full_t = tables[0] if tables is not None else None
+    T = (full_t.shape[1] * cache["k"].shape[2] if full_t is not None
+         else cache["k"].shape[2])
     posv = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (B,))
     pe = jnp.take(sinusoids(T, cfg.d_model).astype(cd),
                   jnp.clip(posv, 0, T - 1), axis=0)       # [B, d]
@@ -222,7 +248,7 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
         y, ck, cv = attn_lib.decode_attention(
             bp["self_attn"], h, ck, cv, posv, n_heads=cfg.n_heads,
             n_kv=cfg.n_kv, head_dim=cfg.head_dim, rope_mode="none",
-            quant=q, compute_dtype=cd)
+            quant=q, compute_dtype=cd, table=full_t)
         x = x + y
         h = layer_norm(bp["ln_x"], x)
         qh = linear(bp["cross_attn"]["wq"], h, q, cd).reshape(

@@ -528,17 +528,49 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> tuple:
     return tuple(caches)
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     num_pages: int, page_size: int) -> tuple:
+    """Paged form of :func:`init_cache`: every attention K/V leaf (incl.
+    int8-KV scale planes and zamba2's shared-attention K/V) becomes a shared
+    ``[G, num_pages, page_size, ...]`` page pool — per-slot addressing lives
+    in the scheduler's page tables, not here.  SWA ring layers use the same
+    pool shape (their pages are addressed through the ring table).
+    Recurrent (mamba2 / rwkv6) states have no sequence axis and stay dense
+    per-slot buffers of ``batch`` rows."""
+    G = cfg.n_groups
+    sds = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    caches = []
+    for spec, c in zip(cfg.pattern, sds):
+        out = {}
+        for key, leaf in c.items():
+            if key in ("k", "v", "shared_k", "shared_v"):
+                out[key] = jnp.zeros(
+                    (G, num_pages, page_size) + leaf.shape[3:], leaf.dtype)
+            elif key in ("k_scale", "v_scale"):
+                out[key] = jnp.zeros((G, num_pages, page_size, cfg.n_kv),
+                                     jnp.float32)
+            else:
+                out[key] = jnp.zeros(leaf.shape, leaf.dtype)
+        caches.append(out)
+    return tuple(caches)
+
+
 def _block_decode(bp: dict, cache: dict, spec: BlockSpec, cfg: ModelConfig,
-                  x: jax.Array, pos: jax.Array, shared_p: Optional[dict]):
+                  x: jax.Array, pos: jax.Array, shared_p: Optional[dict],
+                  tables=None):
     cd = cfg.cdtype
     q = _infer_quant(cfg)
+    # paged decode: attn cache leaves are [pages, page_size, ...] pools;
+    # full-length layers index through tables[0], SWA rings through
+    # tables[1] (exclusively-owned page-aligned windows)
+    full_t = tables[0] if tables is not None else None
     if spec.shared_attn and shared_p is not None:
         h = _norm(shared_p["ln"], x, cfg)
         y, ck, cv = attn_lib.decode_attention(
             shared_p["attn"], h, cache["shared_k"], cache["shared_v"], pos,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
             rope_theta=cfg.rope_theta, rope_mode=cfg.rope_mode,
-            quant=q, compute_dtype=cd)
+            quant=q, compute_dtype=cd, table=full_t)
         x = x + y
         h = _norm(shared_p["mlp_ln"], x, cfg)
         x = x + mlp(shared_p["mlp"], h, "swiglu", q, cd)
@@ -546,15 +578,20 @@ def _block_decode(bp: dict, cache: dict, spec: BlockSpec, cfg: ModelConfig,
     h = _norm(bp["ln1"], x, cfg)
     if spec.kind == "attn":
         window = cfg.window if spec.attn_type == "local" else None
-        rolling = (spec.attn_type == "local" and cfg.window is not None
-                   and cache["k"].shape[1] <= cfg.window)
+        is_local = spec.attn_type == "local" and cfg.window is not None
+        if tables is not None:
+            rolling = is_local
+            attn_t = tables[1] if is_local else full_t
+        else:
+            rolling = is_local and cache["k"].shape[1] <= cfg.window
+            attn_t = None
         if "k_scale" in cache:
             y, c8 = attn_lib.decode_attention_int8(
                 bp["attn"], h, cache, pos, n_heads=cfg.n_heads,
                 n_kv=cfg.n_kv, head_dim=cfg.head_dim, window=window,
                 logit_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
                 rope_mode=cfg.rope_mode, mrope_sections=cfg.mrope_sections,
-                quant=q, compute_dtype=cd)
+                quant=q, compute_dtype=cd, table=attn_t)
             if cfg.gemma_norms:
                 y = _norm(bp["post_attn_ln"], y, cfg)
             x = x + y
@@ -567,7 +604,7 @@ def _block_decode(bp: dict, cache: dict, spec: BlockSpec, cfg: ModelConfig,
             window=window, logit_softcap=cfg.attn_softcap,
             rope_theta=cfg.rope_theta, rope_mode=cfg.rope_mode,
             mrope_sections=cfg.mrope_sections, rolling=rolling,
-            quant=q, compute_dtype=cd)
+            quant=q, compute_dtype=cd, table=attn_t)
         if cfg.gemma_norms:
             y = _norm(bp["post_attn_ln"], y, cfg)
         x = x + y
@@ -618,24 +655,30 @@ def _finish_block_decode(bp, cache, spec, cfg, x, q, cd):
 
 
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
-                cache: tuple, pos: jax.Array) -> tuple[jax.Array, tuple]:
+                cache: tuple, pos: jax.Array,
+                tables=None) -> tuple[jax.Array, tuple]:
     """One token for the whole batch. token: [B] int32; pos: scalar int32 or
     per-sequence [B] int32 (continuous batching — each slot at its own depth;
-    negative marks a free slot whose keys stay masked)."""
+    negative marks a free slot whose keys stay masked).
+
+    ``tables`` (paged serving): a ``(full_table [B, E], ring_table [B, Er])``
+    pair of int32 page tables — the attention cache leaves are then shared
+    page pools instead of per-slot dense buffers (see ``serve.paged``)."""
     cd = cfg.cdtype
     x = params["embed"]["emb"].astype(cd)[token][:, None, :]    # [B,1,d]
     if cfg.embed_scale:
         x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
     shared_p = params.get("shared_attn")
 
-    new_caches = []
-    # scan over groups per pattern position jointly
+    # scan over groups per pattern position jointly (tables are
+    # scan-invariant: every group indexes the same per-slot page rows)
     def group_body(carry, scanned):
         x, = carry
         gp, gc = scanned                 # tuple(params), tuple(cache)
         out_caches = []
         for bp, c, spec in zip(gp, gc, cfg.pattern):
-            x, c = _block_decode(bp, c, spec, cfg, x, pos, shared_p)
+            x, c = _block_decode(bp, c, spec, cfg, x, pos, shared_p,
+                                 tables=tables)
             out_caches.append(c)
         return (x,), tuple(out_caches)
 

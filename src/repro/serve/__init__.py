@@ -33,11 +33,19 @@ admission/decode bodies compiled under ``shard_map`` over a (data, model)
 mesh — tensor-parallel integer-code matmuls along ``model``, an independent
 slot-pool shard per ``data`` index — with temperature-0 output bit-identical
 to the single-device engine.
+
+``ServeConfig(paged=True)`` swaps the dense per-slot KV buffers for the
+paged pool (``serve.paged``): shared per-layer page stores + fixed-shape
+per-slot page tables, prefix reuse via hash-chained page identity, and
+block-granular admission with deterministic preempt-and-requeue when the
+pool exhausts — still bit-identical at temperature 0, still retrace-free
+(tables change values, never shapes).
 """
 from repro.serve.engine import Engine, ServeConfig, sample_logits
+from repro.serve.paged import PagedLayout, PagePool
 from repro.serve.request import Request, RequestStatus
 from repro.serve.scheduler import Scheduler
 from repro.serve.sharded import ShardedEngine
 
 __all__ = ["Engine", "ServeConfig", "Request", "RequestStatus", "Scheduler",
-           "ShardedEngine", "sample_logits"]
+           "ShardedEngine", "PagePool", "PagedLayout", "sample_logits"]

@@ -41,6 +41,14 @@ class ServeConfig:
     top_p: float = 1.0            # 1.0 disables nucleus filtering
     seed: int = 0
     quant: Optional[str] = None   # convert weights to serving codes at load
+    # paged KV cache (serve.paged): per-layer page pools + per-slot page
+    # tables instead of dense [slots, max_len] buffers
+    paged: bool = False
+    page_size: int = 4            # tokens per page; must divide max_len
+                                  # (and the SWA ring length)
+    num_pages: int = 0            # total pool pages incl. per-shard null
+                                  # pages; 0 = worst-case auto-size
+    prefix_reuse: bool = True     # share identical prompt-prefix pages
 
 
 def sample_logits(logits: jax.Array, key, temperature: jax.Array,
@@ -103,6 +111,15 @@ def _write_rows(live: jax.Array, part: jax.Array,
     return jnp.where(m, part.astype(live.dtype), live)
 
 
+def _ring_positions(lengths: jax.Array, T: int) -> jax.Array:
+    """[B, T] absolute position held by each ring slot after stitching a
+    ``lengths``-token prompt (negative = slot empty) — the addressing
+    ``_ring_from_full`` and the paged ring scatter share."""
+    i = jnp.arange(T)[None]                       # [1, T]
+    L = lengths[:, None]                          # [B, 1]
+    return (L - 1) - ((L - 1 - i) % T)            # [B, T]
+
+
 def _ring_from_full(kv_full: jax.Array, lengths: jax.Array,
                     T: int) -> jax.Array:
     """Arrange full-length K/V [G, B, P, H, D] into per-row T-slot rings
@@ -111,17 +128,75 @@ def _ring_from_full(kv_full: jax.Array, lengths: jax.Array,
     with no valid token (length < T) are zeroed; their positions stay
     masked."""
     P = kv_full.shape[2]
-    i = jnp.arange(T)[None]                       # [1, T]
-    L = lengths[:, None]                          # [B, 1]
-    p = (L - 1) - ((L - 1 - i) % T)               # [B, T]
+    p = _ring_positions(lengths, T)               # [B, T]
     vals = jnp.take_along_axis(
         kv_full, jnp.clip(p, 0, P - 1)[None, :, :, None, None], axis=2)
     return jnp.where((p >= 0)[None, :, :, None, None], vals,
                      jnp.zeros((), kv_full.dtype))
 
 
+def _scatter_pages(pool: jax.Array, table: jax.Array, piece: jax.Array,
+                   valid: jax.Array) -> jax.Array:
+    """Stitch-time page scatter: write token rows of ``piece`` into the
+    pages their table rows name.
+
+    pool: [G, P, ps, ...]; table: [B, E]; piece: [G, B, L, ...] (L <= E*ps);
+    valid: [B, L] bool.  Invalid entries (unadmitted slots, pad tokens,
+    prefix-shared tokens) are routed to the reserved null page 0, so one
+    static-shape scatter covers the whole admission round; valid entries
+    target exclusively-owned pages, so duplicate indices only ever land on
+    the null page.
+    """
+    ps = pool.shape[2]
+    B, L = valid.shape
+    t = jnp.arange(L)
+    page = jnp.where(valid, table[:, t // ps], 0)          # [B, L]
+    off = jnp.broadcast_to(t % ps, (B, L))
+    vals = piece.reshape((piece.shape[0], B * L) + piece.shape[3:])
+    return pool.at[:, page.reshape(-1), off.reshape(-1)].set(
+        vals.astype(pool.dtype))
+
+
+def paged_layout(cfg, scfg: ServeConfig):
+    """The engine's page geometry (validated against cfg/scfg)."""
+    from repro.serve.paged import PagedLayout
+    return PagedLayout.build(cfg, scfg.max_len, scfg.page_size)
+
+
+def resolve_pages_per_shard(cfg, scfg: ServeConfig, batch: int,
+                            n_shards: int) -> int:
+    """Pool pages per data shard: ``scfg.num_pages / n_shards`` when set
+    (must divide), else the exhaustion-free worst case for ``batch`` slots."""
+    lay = paged_layout(cfg, scfg)
+    if scfg.num_pages:
+        if scfg.num_pages % n_shards:
+            raise ValueError(f"num_pages ({scfg.num_pages}) must divide "
+                             f"over the data axis ({n_shards})")
+        return scfg.num_pages // n_shards
+    if batch % n_shards:
+        raise ValueError(f"slots ({batch}) must divide over the data axis "
+                         f"({n_shards})")
+    return lay.auto_pages_per_shard(batch // n_shards)
+
+
+def cache_struct(cfg, scfg: ServeConfig, batch: int, n_shards: int = 1):
+    """ShapeDtypeStructs of the decode cache — dense per-slot buffers, or
+    page pools + dense recurrent state when ``scfg.paged``."""
+    from repro.models import encdec as _encdec
+    from repro.models import transformer as _transformer
+    mod = _encdec if getattr(cfg, "enc_dec", False) else _transformer
+    if not scfg.paged:
+        return jax.eval_shape(
+            lambda: mod.init_cache(cfg, batch, scfg.max_len))
+    total = resolve_pages_per_shard(cfg, scfg, batch, n_shards) * n_shards
+    return jax.eval_shape(
+        lambda: mod.init_paged_cache(cfg, batch, scfg.max_len, total,
+                                     scfg.page_size))
+
+
 class Engine:
-    def __init__(self, cfg, params, scfg: ServeConfig = ServeConfig()):
+    def __init__(self, cfg, params, scfg: ServeConfig = ServeConfig(), *,
+                 n_page_shards: int = 1):
         self.cfg = cfg
         if scfg.quant:
             # quantize + pack weight codes ONCE at engine construction (the
@@ -131,6 +206,20 @@ class Engine:
         self.params = params
         self.scfg = scfg
         self.is_encdec = getattr(cfg, "enc_dec", False)
+        # paged serving state (serve.paged): geometry validated up front,
+        # the PagePool itself is created by init_cache (it needs the slot
+        # count).  n_page_shards = 1 single-device; the sharded engine
+        # passes its data-axis size to split the pool page axis (and the
+        # slots) over the data mesh axis.
+        self.pool = None
+        self.n_page_shards = n_page_shards
+        if scfg.paged:
+            if self.is_encdec:
+                raise NotImplementedError(
+                    "paged serving drives decoder-only LMs through the "
+                    "scheduler; enc-dec decode supports page tables at the "
+                    "encdec.decode_step level only")
+            paged_layout(cfg, scfg)          # raises on bad page geometry
         mod = encdec if self.is_encdec else transformer
         self._mod = mod
         self._prefill = jax.jit(lambda p, *a: mod.prefill(p, cfg, *a))
@@ -158,20 +247,44 @@ class Engine:
 
     # -- scheduler-facing API ------------------------------------------------
 
+    @property
+    def paged(self) -> bool:
+        return bool(self.scfg.paged)
+
     def init_cache(self, batch: int):
-        """Zero decode buffers for ``batch`` slots at max_len (static shapes)."""
-        return self._mod.init_cache(self.cfg, batch, self.scfg.max_len)
+        """Zero decode buffers for ``batch`` slots (static shapes).  Paged:
+        page pools + dense recurrent state, plus a fresh host-side
+        ``PagePool`` (allocator + page tables) under ``self.pool``."""
+        if not self.paged:
+            return self._mod.init_cache(self.cfg, batch, self.scfg.max_len)
+        from repro.serve.paged import PagePool
+        per_shard = resolve_pages_per_shard(self.cfg, self.scfg, batch,
+                                            self.n_page_shards)
+        self.pool = PagePool(batch, paged_layout(self.cfg, self.scfg),
+                             pages_per_shard=per_shard,
+                             n_shards=self.n_page_shards,
+                             prefix_reuse=self.scfg.prefix_reuse)
+        return self._mod.init_paged_cache(
+            self.cfg, batch, self.scfg.max_len,
+            per_shard * self.n_page_shards, self.scfg.page_size)
 
     def _cache_sds(self, batch: int):
         """ShapeDtypeStructs of the decode cache (no device allocation)."""
-        return jax.eval_shape(
-            lambda: self._mod.init_cache(self.cfg, batch, self.scfg.max_len))
+        return cache_struct(self.cfg, self.scfg, batch, self.n_page_shards)
 
-    def kv_cache_bytes(self, batch: int) -> int:
-        """Bytes of the attention KV leaves (K/V + int8-KV scales + shared
-        attention K/V) of a ``batch``-slot cache.  The sharded engine
-        overrides this with the *per-shard* figure — the memory number the
-        serving bench reports next to tokens/s."""
+    def _paged_admit_args(self):
+        """Device snapshots of (full table, ring table, start_tok)."""
+        place = self.place_slot_state
+        return (place(jnp.asarray(self.pool.table)),
+                place(jnp.asarray(self.pool.ring)),
+                place(jnp.asarray(self.pool.start)))
+
+    def _paged_decode_args(self):
+        place = self.place_slot_state
+        return (place(jnp.asarray(self.pool.table)),
+                place(jnp.asarray(self.pool.ring)))
+
+    def _kv_leaf_bytes(self, batch: int) -> int:
         from repro.launch.specs import (KV_CACHE_LEAVES, KV_SCALE_LEAVES,
                                         _leaf_key)
         names = KV_CACHE_LEAVES | KV_SCALE_LEAVES
@@ -182,35 +295,96 @@ class Engine:
                 total += leaf.size * leaf.dtype.itemsize
         return total
 
+    def page_bytes(self, batch: int = 1) -> int:
+        """Bytes ONE page occupies summed across every KV pool leaf (all
+        groups and pattern positions)."""
+        if not self.paged:
+            raise ValueError("page_bytes is a paged-engine figure")
+        per_shard = resolve_pages_per_shard(self.cfg, self.scfg, batch,
+                                            self.n_page_shards)
+        return self._kv_leaf_bytes(batch) // (per_shard * self.n_page_shards)
+
+    def kv_cache_bytes(self, batch: int) -> int:
+        """KV memory figure for the serving bench: bytes of the attention
+        KV leaves (K/V + int8-KV scales + shared-attention K/V).
+
+        Dense engines report ``max_len`` *capacity* — every slot owns a
+        worst-case buffer.  Paged engines report *allocated residency*: the
+        peak number of in-use pool pages times the page footprint (the pool
+        backing store is larger, but untouched pages are reclaimable — the
+        number that scales with the workload is the allocated one).  The
+        sharded engine overrides this with the per-shard figure."""
+        if self.paged and self.pool is not None:
+            return self.pool.peak_pages * self.page_bytes(batch)
+        return self._kv_leaf_bytes(batch)
+
     def place_slot_state(self, x: jax.Array) -> jax.Array:
         """Device placement for per-slot ``[slots]`` vectors (identity here;
         the sharded engine pins them to the data axis so the compiled
         executors see one stable input sharding from round one)."""
         return x
 
-    def _stitch_impl(self, cache, pcache, lengths, mask):
+    def _stitch_impl(self, cache, pcache, lengths, mask, paged=()):
         """Cache-stitch-at-slot: write freshly prefilled rows into the masked
         batch slots of the live buffers.  pcache rows are slot-aligned: row b
         fills slot b where ``mask[b]``; other rows are untouched.  Static
-        shapes throughout (lengths and mask are traced vectors)."""
+        shapes throughout (lengths and mask are traced vectors).
+
+        ``paged`` = (full_table, ring_table, start_tok): KV rows scatter
+        into pool pages instead — full-length layers write tokens
+        [start_tok, length) of masked rows through the full table (tokens
+        below start_tok live in prefix-shared pages another admission
+        already filled), SWA rings arrange the window from the true length
+        and scatter through their exclusively-owned ring table.  Recurrent
+        state stays a dense masked row write either way.
+        """
         cfg = self.cfg
+        table = ring_t = start = None
+        if paged:
+            table, ring_t, start = paged
         out = []
         for spec, live, part in zip(cfg.pattern, cache, pcache):
             c = dict(live)
             if spec.kind == "attn":
                 is_local = spec.attn_type == "local" and bool(cfg.window)
-                T = live["k"].shape[2]
-                for key in ("k", "v"):
-                    piece = part[key]
+                if paged:
+                    Pb = part["k"].shape[2]
+                    t = jnp.arange(Pb)[None]
                     if is_local:
-                        piece = _ring_from_full(piece, lengths, T)
-                    if "k_scale" in live:            # int8 KV live buffers
-                        q, s = attn_lib.quantize_kv(piece)
-                        c[key] = _write_rows(live[key], q, mask)
-                        c[key + "_scale"] = _write_rows(live[key + "_scale"],
-                                                        s, mask)
+                        Tr = ring_t.shape[1] * self.scfg.page_size
+                        rv = mask[:, None] & (
+                            _ring_positions(lengths, Tr) >= 0)
                     else:
-                        c[key] = _write_rows(live[key], piece, mask)
+                        valid = (mask[:, None] & (t >= start[:, None])
+                                 & (t < lengths[:, None]))
+                    for key in ("k", "v"):
+                        piece = part[key]
+                        if is_local:
+                            piece = _ring_from_full(piece, lengths, Tr)
+                            c[key] = _scatter_pages(live[key], ring_t,
+                                                    piece, rv)
+                        elif "k_scale" in live:      # int8 KV pool
+                            q, s = attn_lib.quantize_kv(piece)
+                            c[key] = _scatter_pages(live[key], table, q,
+                                                    valid)
+                            c[key + "_scale"] = _scatter_pages(
+                                live[key + "_scale"], table, s, valid)
+                        else:
+                            c[key] = _scatter_pages(live[key], table,
+                                                    piece, valid)
+                else:
+                    T = live["k"].shape[2]
+                    for key in ("k", "v"):
+                        piece = part[key]
+                        if is_local:
+                            piece = _ring_from_full(piece, lengths, T)
+                        if "k_scale" in live:        # int8 KV live buffers
+                            q, s = attn_lib.quantize_kv(piece)
+                            c[key] = _write_rows(live[key], q, mask)
+                            c[key + "_scale"] = _write_rows(
+                                live[key + "_scale"], s, mask)
+                        else:
+                            c[key] = _write_rows(live[key], piece, mask)
             elif spec.kind == "mamba2":
                 c["h"] = _write_rows(live["h"], part["h"], mask)
                 c["conv"] = _write_rows(live["conv"], part["conv"], mask)
@@ -226,7 +400,16 @@ class Engine:
                                           mask)
             for key in ("shared_k", "shared_v"):
                 if key in live:
-                    c[key] = _write_rows(live[key], part[key], mask)
+                    if paged:
+                        valid = (mask[:, None]
+                                 & (jnp.arange(part[key].shape[2])[None]
+                                    >= start[:, None])
+                                 & (jnp.arange(part[key].shape[2])[None]
+                                    < lengths[:, None]))
+                        c[key] = _scatter_pages(live[key], table, part[key],
+                                                valid)
+                    else:
+                        c[key] = _write_rows(live[key], part[key], mask)
             out.append(c)
         return tuple(out)
 
@@ -242,25 +425,30 @@ class Engine:
         Returns (cache, tok, pos, done, tok0, done0) — tok0/done0 are the
         per-slot first tokens and immediately-finished flags the scheduler
         reads back for bookkeeping.  Compiles once per prompt bucket.
+
+        Paged engines additionally thread the page tables + per-slot
+        start_tok (snapshotted from ``self.pool``, which the scheduler's
+        block accounting updated before this call).
         """
         if self.is_encdec:
             raise NotImplementedError(
                 "continuous batching serves decoder-only LMs; enc-dec uses "
                 "Engine.generate")
         key = jax.random.PRNGKey(self.scfg.seed)
+        extra = self._paged_admit_args() if self.paged else ()
         return self._admit_fn(
             self.params, cache, jnp.asarray(prompts, jnp.int32),
             jnp.asarray(lengths, jnp.int32), jnp.asarray(mask, bool),
             jnp.asarray(budget_one, bool), eos, temperature, top_k, top_p,
-            tok, pos, done, key, jnp.int32(step0))
+            tok, pos, done, key, jnp.int32(step0), *extra)
 
     def _admit_impl(self, params, cache, prompts, lengths, mask, budget_one,
                     eos, temperature, top_k, top_p, tok, pos, done, key,
-                    step0):
+                    step0, *paged):
         from repro.dist import tp as tp_lib
         logits, pcache = self._mod.prefill(params, self.cfg, prompts,
                                            full_kv=True, length=lengths)
-        cache = self._stitch_impl(cache, pcache, lengths, mask)
+        cache = self._stitch_impl(cache, pcache, lengths, mask, paged)
         key = tp_lib.fold_in_data(key)   # per-data-shard sampling stream
         tok0 = sample_logits(logits, jax.random.fold_in(key, step0),
                              temperature, top_k, top_p)
@@ -287,20 +475,23 @@ class Engine:
             fn = self._build_scan_fn(chunk, greedy)
             self._scan_fns[(chunk, greedy)] = fn
         key = jax.random.PRNGKey(self.scfg.seed)
+        extra = self._paged_decode_args() if self.paged else ()
         return fn(self.params, cache, tok, pos, done, eos, temperature,
-                  top_k, top_p, key, jnp.int32(step0))
+                  top_k, top_p, key, jnp.int32(step0), *extra)
 
     def _make_decode_scan(self, chunk: int, greedy: bool):
         mod, cfg = self._mod, self.cfg
 
         def run(params, cache, tok, pos, done, eos, temperature, top_k,
-                top_p, key, step0):
+                top_p, key, step0, *paged):
             from repro.dist import tp as tp_lib
             key = tp_lib.fold_in_data(key)   # per-data-shard sampling stream
+            tables = paged if paged else None
 
             def step(carry, i):
                 cache, tok, pos, done = carry
-                logits, cache = mod.decode_step(params, cfg, tok, cache, pos)
+                logits, cache = mod.decode_step(params, cfg, tok, cache, pos,
+                                                tables=tables)
                 key_i = jax.random.fold_in(key, step0 + i)
                 if greedy:
                     nxt = sample_logits(logits, key_i, 0.0, 0, 1.0)
@@ -366,7 +557,13 @@ class Engine:
         ``use_scan=False`` runs the per-token Python loop (the reference the
         scanned decode is tested bit-exact against); both paths draw token i
         with ``fold_in(key, i)``, so they agree at any temperature.
+
+        On a paged engine the scan executors are compiled against page
+        pools, so ``generate`` always takes the python loop over a dense
+        prefill cache — it stays the dense bit-exactness oracle either way.
         """
+        if self.paged:
+            use_scan = False
         B, S = prompts.shape
         if self.is_encdec:
             logits, cache = self._prefill(self.params, frames, prompts)

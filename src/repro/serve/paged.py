@@ -1,0 +1,290 @@
+"""Paged KV-cache pool: host-side block allocator with prefix reuse.
+
+The serving analogue of the paper's trade — many small cheap units instead
+of one big expensive one: instead of a dense ``[slots, max_len]`` KV buffer
+per layer, every layer holds a shared pool of ``num_pages`` fixed-size pages
+(``[G, num_pages, page_size, n_kv, head_dim]``) and each decode slot owns a
+*page table* — a fixed-shape ``[slots, entries]`` int32 row of physical page
+ids.  Memory then scales with the tokens actually resident, not with the
+worst case, and identical prompt prefixes can map to the SAME physical
+pages.
+
+This module is the host-side half: allocation, refcounts, hash-chained
+prefix identity, and the numpy page tables the compiled executors index
+with.  The device-side half (ordered gather / scatter so temperature-0
+output stays bit-identical to the dense cache) lives in
+``models.attention`` + ``serve.engine``.
+
+Design points:
+
+  * **Page id 0 of every shard is the reserved null page.**  Unallocated
+    table entries are 0, and the compiled scatters route every masked /
+    free-slot write there, so a freed-and-reused page can never be
+    corrupted by a stale slot.  Usable pages per shard =
+    ``pages_per_shard - 1``.
+  * **Prefix reuse is hash-chained page identity**: page ``j`` of a prompt
+    is identified by ``(identity of page j-1, tokens of page j)``; only
+    FULL pages register (a partial tail is still being written).  A new
+    admission walks its chain against the registry and maps every leading
+    hit to the existing physical page (refcount++); the first miss — the
+    copy-on-write divergence point — and everything after it get fresh
+    pages which the admission prefill then fills.  Registered pages are
+    immutable afterwards (decode only writes at positions >= prompt
+    length), so sharing is safe; content is bit-identical across sharers
+    because every per-token computation in prefill is causal and row-wise.
+  * **SWA rings are page-aligned**: local-attention layers keep their
+    rolling ``min(max_len, window)``-slot ring, stored in pool pages
+    addressed through a separate per-slot ring table (ring content is a
+    function of the slot's own rolling history, so ring pages are never
+    shared).  Ring entries allocate lazily in write order, exactly like
+    full entries.
+  * **Sharding**: page ids are SHARD-LOCAL.  Under the sharded engine the
+    pool page axis splits over the data mesh axis; each data shard runs an
+    independent allocator + prefix registry over its own slots, and the
+    table rows it sees (batch axis also data-split) contain its local ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static geometry of the paged cache (everything shape-determining)."""
+    page_size: int
+    max_len: int
+    full_entries: int            # max_len // page_size
+    ring_entries: int            # min(max_len, window) // page_size, or 0
+    ring_len: int                # min(max_len, window), or 0
+
+    @staticmethod
+    def build(cfg, max_len: int, page_size: int) -> "PagedLayout":
+        if page_size < 1 or max_len % page_size:
+            raise ValueError(
+                f"page_size ({page_size}) must divide max_len ({max_len})")
+        has_ring = any(
+            spec.kind == "attn" and spec.attn_type == "local"
+            and bool(getattr(cfg, "window", None))
+            for spec in getattr(cfg, "pattern", ()))
+        ring_len = min(max_len, cfg.window) if has_ring else 0
+        if ring_len % page_size:
+            raise ValueError(
+                f"page_size ({page_size}) must divide the SWA ring length "
+                f"({ring_len} = min(max_len, window)) — rings are stored as "
+                "page-aligned windows")
+        return PagedLayout(page_size=page_size, max_len=max_len,
+                           full_entries=max_len // page_size,
+                           ring_entries=ring_len // page_size,
+                           ring_len=ring_len)
+
+    def auto_pages_per_shard(self, slots_per_shard: int) -> int:
+        """Worst-case capacity + the null page: exhaustion-free default."""
+        return slots_per_shard * (self.full_entries + self.ring_entries) + 1
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class _Shard:
+    """One data shard's allocator state (free heap, refcounts, registry)."""
+
+    def __init__(self, pages: int):
+        self.free = list(range(1, pages))        # id 0 = reserved null page
+        heapq.heapify(self.free)
+        self.ref = np.zeros((pages,), np.int32)
+        self.hash2page: dict = {}                # chain key -> page id
+        self.page_key: dict = {}                 # page id -> chain key
+
+    def alloc(self) -> int:
+        return heapq.heappop(self.free)
+
+    def decref(self, pid: int) -> bool:
+        """Drop one reference; True when the page was actually freed."""
+        self.ref[pid] -= 1
+        if self.ref[pid] > 0:
+            return False
+        key = self.page_key.pop(pid, None)
+        if key is not None and self.hash2page.get(key) == pid:
+            del self.hash2page[key]
+        heapq.heappush(self.free, pid)
+        return True
+
+
+class PagePool:
+    """Block allocator + page tables for one engine's slot pool.
+
+    All methods are host-side and deterministic (lowest-id-first allocation,
+    FIFO-order admission gating is the caller's job).  ``table`` / ``ring``
+    / ``start`` are plain numpy arrays the engine snapshots to device per
+    dispatch.
+    """
+
+    def __init__(self, slots: int, layout: PagedLayout, *,
+                 pages_per_shard: Optional[int] = None, n_shards: int = 1,
+                 prefix_reuse: bool = True):
+        if slots % n_shards:
+            raise ValueError(f"slots ({slots}) must divide over page shards "
+                             f"({n_shards})")
+        self.layout = layout
+        self.slots = slots
+        self.n_shards = n_shards
+        self.slots_per_shard = slots // n_shards
+        if pages_per_shard is None:
+            pages_per_shard = layout.auto_pages_per_shard(
+                self.slots_per_shard)
+        if pages_per_shard < 2:
+            raise ValueError("pages_per_shard must be >= 2 (one null page "
+                             "+ at least one usable page)")
+        self.pages_per_shard = pages_per_shard
+        self.prefix_reuse = prefix_reuse
+        self._shards = [_Shard(pages_per_shard) for _ in range(n_shards)]
+        E = max(layout.full_entries, 1)
+        self.table = np.zeros((slots, E), np.int32)
+        self.ring = np.zeros((slots, max(layout.ring_entries, 1)), np.int32)
+        self.start = np.zeros((slots,), np.int32)   # first stitched token
+        self.n_full = [0] * slots
+        self.n_ring = [0] * slots
+        # stats
+        self.allocated_pages = 0                 # unique in-use pages, now
+        self.peak_pages = 0
+        self.prefix_hits = 0                     # prompt pages mapped shared
+        self.prefix_fresh = 0                    # prompt pages freshly filled
+        self.preemptions = 0                     # bumped by the scheduler
+        self._peak_per_shard = 0
+
+    # -- geometry ------------------------------------------------------------
+
+    def shard_of(self, slot: int) -> int:
+        return slot // self.slots_per_shard
+
+    def free_pages(self, shard: int) -> int:
+        return len(self._shards[shard].free)
+
+    @property
+    def peak_pages_per_shard(self) -> int:
+        """Peak unique in-use pages on the busiest shard (the per-shard
+        residency figure the sharded engine reports)."""
+        return getattr(self, "_peak_per_shard", 0)
+
+    def _entries_for(self, n_tokens: int) -> tuple[int, int]:
+        """(full entries, ring entries) needed to hold ``n_tokens``."""
+        lay = self.layout
+        nf = min(_ceil_div(n_tokens, lay.page_size), lay.full_entries)
+        nr = 0
+        if lay.ring_entries:
+            nr = min(_ceil_div(min(n_tokens, lay.ring_len), lay.page_size),
+                     lay.ring_entries)
+        return nf, nr
+
+    # -- admission / growth / release ---------------------------------------
+
+    def admit(self, slot: int, tokens: Sequence[int]) -> Optional[int]:
+        """Map ``slot`` onto pages holding ``tokens`` (the prompt, or prompt
+        + already-emitted tokens on a preemption resume).
+
+        Walks the hash chain over the FULL prompt pages and shares every
+        leading hit; allocates fresh pages for the divergence tail and the
+        ring.  Returns the first token index the admission prefill must
+        stitch (``start_tok`` — everything before it lives in shared pages),
+        or None when the shard has too few free pages (the caller gates
+        admission / preempts).  Leaves no state behind on failure.
+        """
+        assert self.n_full[slot] == 0 and self.n_ring[slot] == 0, \
+            f"slot {slot} already mapped"
+        sh = self._shards[self.shard_of(slot)]
+        L = len(tokens)
+        nf, nr = self._entries_for(L)
+        ps = self.layout.page_size
+        keys, key = [], None
+        for j in range(L // ps):                 # full pages only
+            key = (key, tuple(int(t) for t in tokens[j * ps:(j + 1) * ps]))
+            keys.append(key)
+        shared: list[int] = []
+        if self.prefix_reuse:
+            for key in keys:
+                pid = sh.hash2page.get(key)
+                if pid is None:
+                    break
+                shared.append(pid)
+        fresh = nf - len(shared)
+        if len(sh.free) < fresh + nr:
+            return None
+        row = self.table[slot]
+        for j, pid in enumerate(shared):
+            sh.ref[pid] += 1
+            row[j] = pid
+        for j in range(len(shared), nf):
+            pid = sh.alloc()
+            sh.ref[pid] = 1
+            row[j] = pid
+            if self.prefix_reuse and j < len(keys):   # full page: register
+                sh.hash2page[keys[j]] = pid
+                sh.page_key[pid] = keys[j]
+        for j in range(nr):
+            pid = sh.alloc()
+            sh.ref[pid] = 1
+            self.ring[slot, j] = pid
+        self.n_full[slot], self.n_ring[slot] = nf, nr
+        start = len(shared) * ps
+        self.start[slot] = start
+        self.prefix_hits += len(shared)
+        self.prefix_fresh += fresh
+        self._bump(fresh + nr)
+        return start
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s mapping to cover ``n_tokens`` positions (called
+        before every decode chunk).  Atomic: allocates nothing on failure."""
+        sh = self._shards[self.shard_of(slot)]
+        nf, nr = self._entries_for(n_tokens)
+        extra_f = max(0, nf - self.n_full[slot])
+        extra_r = max(0, nr - self.n_ring[slot])
+        if len(sh.free) < extra_f + extra_r:
+            return False
+        for j in range(self.n_full[slot], nf):
+            pid = sh.alloc()
+            sh.ref[pid] = 1
+            self.table[slot, j] = pid
+        for j in range(self.n_ring[slot], nr):
+            pid = sh.alloc()
+            sh.ref[pid] = 1
+            self.ring[slot, j] = pid
+        self.n_full[slot] = max(self.n_full[slot], nf)
+        self.n_ring[slot] = max(self.n_ring[slot], nr)
+        self._bump(extra_f + extra_r)
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return every page ``slot`` references (shared pages survive while
+        other sharers hold them) and point the slot back at the null page so
+        its idempotent free-slot decode writes can never corrupt anything."""
+        sh = self._shards[self.shard_of(slot)]
+        freed = 0
+        for j in range(self.n_full[slot]):
+            freed += sh.decref(int(self.table[slot, j]))
+        for j in range(self.n_ring[slot]):
+            freed += sh.decref(int(self.ring[slot, j]))
+        self.table[slot] = 0
+        self.ring[slot] = 0
+        self.start[slot] = 0
+        self.n_full[slot] = self.n_ring[slot] = 0
+        self.allocated_pages -= freed
+
+    def _bump(self, n: int) -> None:
+        self.allocated_pages += n
+        self.peak_pages = max(self.peak_pages, self.allocated_pages)
+        per = max(self.pages_per_shard - 1 - len(s.free)
+                  for s in self._shards)
+        self._peak_per_shard = max(self._peak_per_shard, per)
+
+    # -- stats ---------------------------------------------------------------
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        total = self.prefix_hits + self.prefix_fresh
+        return self.prefix_hits / total if total else 0.0

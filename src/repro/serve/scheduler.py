@@ -22,6 +22,16 @@ Static-shape invariants (TPU-friendly, no retrace after warmup):
     done, EOS id, sampling params) are all traced ``[slots]`` vectors; free
     slots carry the negative-position sentinel, which keeps every one of
     their keys masked.
+
+With a paged engine (``ServeConfig(paged=True)``) the scheduler also runs
+the block accounting: admission is gated on free pool pages (FIFO, no
+skip-ahead), every decode round first maps pages for the chunk ahead, and
+when the pool runs dry the *youngest* slot is deterministically preempted
+and requeued at the queue head with its emitted tokens intact — its
+re-admission prefills prompt + emitted and continues bit-exactly, so
+temperature-0 transcripts match an uncontended run.  Page tables are fixed
+``[slots, entries]`` int32 arrays whose VALUES change round to round, so
+none of the executors above ever retrace.
 """
 from __future__ import annotations
 
@@ -83,6 +93,83 @@ class Scheduler:
         self.queue: Deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * slots
         self.finished: List[Request] = []
+        # paged block accounting: admission order per slot (preemption picks
+        # the youngest), monotone admission counter
+        self._admit_seq = [0] * slots
+        self._admit_counter = 0
+        # serving telemetry (the bench commits these): admission padding
+        # waste = prefill_tokens / admitted_tokens (prefill always runs the
+        # fixed [slots, bucket] shape), per-round slot occupancy as a
+        # running sum (bounded state — a long-running server never grows it)
+        self.stats = {"rounds": 0, "admission_rounds": 0,
+                      "prefill_tokens": 0, "admitted_tokens": 0,
+                      "emitted_tokens": 0, "occupancy_sum": 0.0,
+                      "preemptions": 0}
+
+    # -- paged helpers -------------------------------------------------------
+
+    @staticmethod
+    def _seq(req: Request) -> List[int]:
+        """The token sequence a (re-)admission must prefill: the prompt plus
+        everything already emitted (non-empty only on a preemption resume)."""
+        return list(req.prompt) + [int(t) for t in req.tokens]
+
+    def _free_on_device(self, freed: List[int]) -> None:
+        """Mark freed slots done with the negative-position sentinel."""
+        fm = np.zeros((self.n_slots,), bool)
+        fm[freed] = True
+        fm = self.engine.place_slot_state(jnp.asarray(fm))
+        self.done = self.done | fm
+        self.pos = jnp.where(fm, -1, self.pos)
+
+    def _preempt_youngest(self) -> tuple[int, Request]:
+        """Deterministic preemption: evict the most recently admitted slot,
+        release its pages, and hand the request back (its emitted tokens are
+        kept — re-admission prefills prompt + emitted and continues, so
+        temperature-0 transcripts match an uncontended run)."""
+        victim = max((s for s, r in enumerate(self.slots) if r is not None),
+                     key=lambda s: self._admit_seq[s])
+        req = self.slots[victim]
+        self.slots[victim] = None
+        self.engine.pool.release(victim)
+        self._reset_slot_sampling(victim)
+        req.status = RequestStatus.QUEUED
+        req.slot = None
+        self.stats["preemptions"] += 1
+        self.engine.pool.preemptions += 1
+        return victim, req
+
+    def _ensure_chunk_pages(self) -> None:
+        """Grow every active slot's page mapping to cover the next decode
+        chunk; when the pool runs dry, preempt-and-requeue youngest-first
+        until the remaining slots fit (or one sequence alone exhausts the
+        pool, which is a configuration error)."""
+        pool = self.engine.pool
+        max_len = self.engine.scfg.max_len
+        freed, evicted = [], []
+        while True:
+            active = [(s, r) for s, r in enumerate(self.slots)
+                      if r is not None]
+            need = [(s, min(len(r.prompt) + len(r.tokens) + self.chunk - 1,
+                            max_len)) for s, r in active]
+            failed = next((s for s, n in need if not pool.ensure(s, n)),
+                          None)
+            if failed is None:
+                break
+            if len(active) == 1:
+                raise RuntimeError(
+                    "KV page pool exhausted by a single sequence — "
+                    "raise ServeConfig.num_pages (or lower max_len)")
+            slot, req = self._preempt_youngest()
+            evicted.append(req)
+            freed.append(slot)
+        if evicted:
+            # requeue so original FIFO order survives: we evicted
+            # youngest-first, so appendleft in eviction order puts the
+            # oldest evictee at the queue head
+            for req in evicted:
+                self.queue.appendleft(req)
+            self._free_on_device(freed)
 
     # -- admission -----------------------------------------------------------
 
@@ -120,44 +207,68 @@ class Scheduler:
     def _admit(self, now=None) -> int:
         """Fill free slots from the queue head in ONE fused dispatch
         (batched prefill + masked stitch + first-token sampling + slot-state
-        merge); returns #admissions."""
+        merge); returns #admissions.  Paged engines gate admission on free
+        pool pages — candidates that don't fit go back to the queue head in
+        FIFO order (no skip-ahead, so ordering stays deterministic)."""
         free = [s for s in range(self.n_slots) if self.slots[s] is None]
         take = [self.queue.popleft()
                 for _ in range(min(len(free), len(self.queue)))]
         if self.engine.has_recurrent_state and take:
             # recurrent states must prefill unpadded: admit only the leading
             # run of equal-length requests, requeue the rest (FIFO order)
-            L0 = len(take[0].prompt)
+            L0 = len(self._seq(take[0]))
             for i, r in enumerate(take):
-                if len(r.prompt) != L0:
+                if len(self._seq(r)) != L0:
                     for r2 in reversed(take[i:]):
                         self.queue.appendleft(r2)
                     take = take[:i]
                     break
         admitted = list(zip(free, take))
+        if self.engine.paged and admitted:
+            fits = []
+            for i, (slot, req) in enumerate(admitted):
+                if self.engine.pool.admit(slot, self._seq(req)) is None:
+                    if (not fits
+                            and not any(r is not None for r in self.slots)
+                            and self.engine.pool.allocated_pages == 0):
+                        raise RuntimeError(
+                            "request needs more KV pages than the whole "
+                            "pool holds — raise ServeConfig.num_pages")
+                    for _, r in reversed(admitted[i:]):
+                        self.queue.appendleft(r)
+                    admitted = fits
+                    break
+                fits.append((slot, req))
         if not admitted:
             return 0
         R = self.n_slots
         # the bucket never exceeds max_len: submit() guarantees every prompt
         # fits, and the live buffers are max_len slots long
-        P = min(max(_bucket_len(len(r.prompt), self.prompt_bucket)
+        P = min(max(_bucket_len(len(self._seq(r)), self.prompt_bucket)
                     for _, r in admitted), self.engine.scfg.max_len)
         prompts = np.zeros((R, P), np.int32)
         lengths = np.ones((R,), np.int32)
         mask = np.zeros((R,), bool)
         budget_one = np.zeros((R,), bool)
         for slot, req in admitted:
-            L = len(req.prompt)
-            prompts[slot, :L] = req.prompt
+            seq = self._seq(req)
+            L = len(seq)
+            prompts[slot, :L] = seq
             lengths[slot] = L
             mask[slot] = True
             # <=1: budget-0 requests also finish at admission (their slot is
-            # never occupied; the sampled token is simply not emitted)
-            budget_one[slot] = req.max_new_tokens <= 1
+            # never occupied; the sampled token is simply not emitted).
+            # ``remaining`` (not max_new_tokens) so preemption resumes with
+            # a partially spent budget admit correctly.
+            budget_one[slot] = req.remaining <= 1
             (self._temp_h[slot], self._topk_h[slot],
              self._topp_h[slot]) = self._sampling_for(req)
             self._eos_h[slot] = -1 if req.eos_id is None else int(req.eos_id)
         self._push_sampling_state()
+        self.stats["admission_rounds"] += 1
+        self.stats["prefill_tokens"] += R * P
+        self.stats["admitted_tokens"] += int(
+            sum(lengths[s] for s, _ in admitted))
         (self.cache, self.tok, self.pos, self.done, tok0,
          done0) = self.engine.admit_batch(
             self.cache, prompts, lengths, mask, budget_one, self.eos,
@@ -170,7 +281,9 @@ class Scheduler:
         for slot, req in admitted:
             req.status = RequestStatus.RUNNING
             req.slot = slot
-            if req.max_new_tokens >= 1:
+            self._admit_counter += 1
+            self._admit_seq[slot] = self._admit_counter
+            if req.remaining >= 1:
                 req.emit(int(tok0_h[slot]))
             if done0_h[slot]:
                 eos = self._eos_h[slot]
@@ -179,6 +292,8 @@ class Scheduler:
                            else "length", now)
                 self.finished.append(req)
                 self._reset_slot_sampling(slot)
+                if self.engine.paged:
+                    self.engine.pool.release(slot)
             else:
                 self.slots[slot] = req
         return len(admitted)
@@ -196,6 +311,20 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slots)
 
+    @property
+    def padding_waste(self) -> float:
+        """prefill_tokens / admitted_tokens across all admission rounds —
+        how many padded prefill tokens the fixed [slots, bucket] admission
+        shape cost per useful prompt token (1.0 = no waste)."""
+        a = self.stats["admitted_tokens"]
+        return self.stats["prefill_tokens"] / a if a else 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Mean fraction of slots holding live requests per decode round."""
+        n = self.stats["rounds"]
+        return self.stats["occupancy_sum"] / n if n else 0.0
+
     def step(self, now=None) -> int:
         """One scheduling round: admit into free slots, decode one chunk,
         retire finished sequences.  Returns the number of useful tokens
@@ -203,6 +332,15 @@ class Scheduler:
         self._admit(now)
         if not any(r is not None for r in self.slots):
             return 0
+        if self.engine.paged:
+            # block accounting: map pages for the chunk ahead; preempts
+            # youngest-first when the pool is exhausted
+            self._ensure_chunk_pages()
+            if not any(r is not None for r in self.slots):
+                return 0
+        self.stats["rounds"] += 1
+        self.stats["occupancy_sum"] += (
+            sum(r is not None for r in self.slots) / self.n_slots)
         # host mirrors let us pick the argmax-only decode variant statically
         greedy = all(t <= 0.0 and k == 0 and p >= 1.0 for t, k, p in
                      zip(self._temp_h, self._topk_h, self._topp_h))
@@ -232,13 +370,12 @@ class Scheduler:
                 self.finished.append(req)
                 self.slots[slot] = None
                 self._reset_slot_sampling(slot)
+                if self.engine.paged:
+                    self.engine.pool.release(slot)
                 freed.append(slot)
         if freed:
-            fm = np.zeros((self.n_slots,), bool)
-            fm[freed] = True
-            fm = self.engine.place_slot_state(jnp.asarray(fm))
-            self.done = self.done | fm
-            self.pos = jnp.where(fm, -1, self.pos)
+            self._free_on_device(freed)
+        self.stats["emitted_tokens"] += emitted
         return emitted
 
     def run(self, requests: Sequence[Request] = (), now=None,

@@ -30,7 +30,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.dist import tp as tp_lib
 from repro.launch.specs import serving_cache_specs
-from repro.models import transformer
+from repro.serve import engine as engine_lib
 from repro.serve.engine import Engine, ServeConfig
 from repro.serve.quantize import quantize_params_for_serving
 
@@ -78,13 +78,20 @@ class ShardedEngine(Engine):
         # the form XLA hands back on computation outputs, so round-tripped
         # slot state / caches never change the executors' cache signature
         self._dspec = P(data_axis) if self.n_data > 1 else P()
+        # the struct covers BOTH layouts: dense [G, slots, T, H, D] rows and
+        # paged [G, pages, page_size, H, D] pools put their data-split axis
+        # (slots / pages) at dim 1 and their head axis at dim 3, so one spec
+        # tree serves either
         self._cache_specs = serving_cache_specs(
-            jax.eval_shape(lambda: transformer.init_cache(
-                cfg, self.n_data, scfg.max_len)),
+            engine_lib.cache_struct(cfg, scfg, self.n_data, self.n_data),
             data_axis if self.n_data > 1 else None,
             model_axis if self.head_sharded else None)
+        # paged serving: the pool page axis splits over the data axis —
+        # each data shard runs an independent allocator + prefix registry
+        # over shard-local page ids
         super().__init__(cfg, params,
-                         dataclasses.replace(scfg, quant=None))
+                         dataclasses.replace(scfg, quant=None),
+                         n_page_shards=self.n_data)
         self.scfg = scfg                     # keep the quant label visible
         self.params = jax.device_put(
             self.params, jax.tree_util.tree_map(
@@ -116,6 +123,10 @@ class ShardedEngine(Engine):
                     d, d, d, d,                     # eos, temp, top_k, top_p
                     d, d, d,                        # tok, pos, done
                     P(), P())                       # key, step0
+        if self.scfg.paged:
+            # page tables + start_tok split with the slots they describe
+            # (table VALUES are shard-local page ids)
+            in_specs += (d, d, d)
         out_specs = (self._cache_specs, d, d, d, d, d)
         return self._shard_jit(self._admit_impl, in_specs, out_specs)
 
@@ -125,6 +136,8 @@ class ShardedEngine(Engine):
                     d, d, d,                        # tok, pos, done
                     d, d, d, d,                     # eos, temp, top_k, top_p
                     P(), P())                       # key, step0
+        if self.scfg.paged:
+            in_specs += (d, d)                      # full + ring page tables
         out_specs = (self._cache_specs, d, d, d,
                      d, d)                # tokens/dones [slots, chunk]
         return self._shard_jit(self._make_decode_scan(chunk, greedy),
@@ -149,9 +162,19 @@ class ShardedEngine(Engine):
         """PER-SHARD bytes of the attention KV leaves: the data axis splits
         the ``batch`` slots and — when head-sharded — the model axis splits
         the KV heads, so the figure shrinks by ``n_data * n_model`` on
-        divisible configs (vs ``n_data`` alone with replicated heads)."""
+        divisible configs (vs ``n_data`` alone with replicated heads).
+
+        Paged engines report per-shard *allocated residency* instead: the
+        busiest shard's peak in-use pages times the per-shard page
+        footprint (pages hold ``n_kv / n_model`` local heads when
+        head-sharded)."""
         from repro.launch.specs import (KV_CACHE_LEAVES, KV_SCALE_LEAVES,
                                         _leaf_key)
+        if self.paged and self.pool is not None:
+            per_page = self.page_bytes(batch)
+            if self.head_sharded:
+                per_page //= self.n_model
+            return self.pool.peak_pages_per_shard * per_page
         names = KV_CACHE_LEAVES | KV_SCALE_LEAVES
         sds = self._cache_sds(batch)
         # the engine's live specs are batch-independent (same leaf names and

@@ -1,0 +1,431 @@
+"""Paged KV-cache pool: allocator units, bit-exactness vs the dense oracle,
+prefix reuse, pool exhaustion -> deterministic preempt-and-requeue, and the
+no-retrace executor invariants.
+
+The paged engine must be *indistinguishable* from the dense engine at
+temperature 0: page tables only change WHERE bytes live, never what the
+attention math reads — the ordered page gather reconstructs the dense
+[B, T, H, D] buffer value-for-value (see ``serve.paged``).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve import (Engine, PagedLayout, PagePool, Request, Scheduler,
+                         ServeConfig)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# allocator units (pure host-side, no jax)
+# ---------------------------------------------------------------------------
+
+def _layout(max_len=32, ps=4, window=None):
+    cfg = configs.get_config("qwen2-7b", smoke=True)
+    if window is not None:
+        cfg = dataclasses.replace(
+            cfg, window=window,
+            pattern=(T.BlockSpec(attn_type="local"),))
+    return PagedLayout.build(cfg, max_len, ps)
+
+
+def test_page_pool_alloc_release_roundtrip():
+    pool = PagePool(2, _layout(), pages_per_shard=9)
+    assert pool.admit(0, list(range(10))) == 0        # 3 pages (10 tokens)
+    assert pool.allocated_pages == 3
+    assert pool.table[0, 0] != 0 and pool.table[0, 3] == 0
+    assert pool.ensure(0, 14)                          # grow to 4 pages
+    assert pool.allocated_pages == 4
+    assert pool.ensure(0, 14)                          # idempotent
+    assert pool.allocated_pages == 4
+    pool.release(0)
+    assert pool.allocated_pages == 0
+    assert (pool.table[0] == 0).all() and pool.n_full[0] == 0
+    assert pool.peak_pages == 4
+
+
+def test_page_pool_prefix_sharing_refcounts():
+    pool = PagePool(3, _layout(), pages_per_shard=32)
+    base = list(range(100, 108))                       # 2 full pages
+    assert pool.admit(0, base + [1, 2]) == 0           # fresh: 3 pages
+    assert pool.admit(1, base + [3]) == 8              # shares the 2 full
+    assert pool.prefix_hits == 2
+    assert (pool.table[0][:2] == pool.table[1][:2]).all()
+    assert pool.table[0][2] != pool.table[1][2]        # divergence page: own
+    # slot 0 releases; shared pages survive for slot 1
+    pool.release(0)
+    assert pool.admit(2, base + [4]) == 8              # still shareable
+    pool.release(1)
+    pool.release(2)
+    assert pool.allocated_pages == 0
+    # fully released prefixes are forgotten: next admit is fresh
+    assert pool.admit(0, base + [5]) == 0
+
+
+def test_page_pool_exhaustion_is_atomic():
+    pool = PagePool(2, _layout(), pages_per_shard=4)   # 3 usable pages
+    assert pool.admit(0, list(range(8))) == 0          # 2 pages
+    assert pool.admit(1, list(range(50, 59))) is None  # needs 3 > 1 free
+    assert pool.n_full[1] == 0 and (pool.table[1] == 0).all()
+    assert not pool.ensure(0, 32)                      # needs 8 total
+    assert pool.n_full[0] == 2                         # untouched
+    pool.release(0)
+    assert pool.allocated_pages == 0
+
+
+def test_page_pool_sharded_ids_are_local():
+    pool = PagePool(4, _layout(), pages_per_shard=8, n_shards=2)
+    assert pool.admit(0, list(range(6))) == 0          # shard 0
+    assert pool.admit(2, list(range(6))) == 0          # shard 1: NO sharing
+    assert pool.prefix_hits == 0                       # cross-shard miss
+    # both shards hand out the same local ids starting at 1
+    assert pool.table[0, 0] == pool.table[2, 0] == 1
+    # same-shard sharing still works
+    assert pool.admit(3, list(range(6))) == 4
+    assert pool.prefix_hits == 1
+
+
+def test_paged_layout_validation():
+    cfg = configs.get_config("qwen2-7b", smoke=True)
+    with pytest.raises(ValueError, match="page_size"):
+        PagedLayout.build(cfg, 30, 4)
+    gem = configs.get_config("gemma2-2b", smoke=True)  # window 8
+    with pytest.raises(ValueError, match="ring"):
+        PagedLayout.build(gem, 32, 16)   # divides max_len, not the ring
+    lay = PagedLayout.build(gem, 32, 4)
+    assert lay.ring_entries == 2 and lay.full_entries == 8
+
+
+# ---------------------------------------------------------------------------
+# paged engine == dense oracle (temperature 0)
+# ---------------------------------------------------------------------------
+
+def _params(arch, **over):
+    cfg = dataclasses.replace(configs.get_config(arch, smoke=True),
+                              compute_dtype="float32", **over)
+    return cfg, T.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _drive_staggered(eng, prompts, new, slots=2, chunk=2, bucket="pow2"):
+    sched = Scheduler(eng, slots=slots, chunk=chunk, prompt_bucket=bucket)
+    reqs = [Request(prompt=np.asarray(p).tolist(), max_new_tokens=new)
+            for p in prompts]
+    sched.submit(reqs[0])
+    if len(reqs) > 1:
+        sched.submit(reqs[1])
+    sched.step()
+    for r in reqs[2:]:
+        sched.submit(r)
+    while sched.has_work:
+        sched.step()
+    return sched, [r.tokens for r in reqs]
+
+
+@pytest.mark.parametrize("arch,S", [("qwen2-7b", 6), ("gemma2-2b", 4),
+                                    ("gemma2-2b", 12)])
+def test_paged_scheduler_matches_dense_oracle(arch, S):
+    """Staggered paged admission emits the same tokens as the dense
+    python-loop generate — incl. gemma SWA rings as page-aligned windows
+    for prompts shorter AND longer than the window."""
+    cfg, params = _params(arch)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, S), 0, cfg.vocab)
+    oracle = Engine(cfg, params, ServeConfig(max_len=32))
+    want = np.asarray(
+        oracle.generate(prompts, max_new_tokens=5, use_scan=False)[:, S:])
+    eng = Engine(cfg, params,
+                 ServeConfig(max_len=32, paged=True, page_size=4))
+    _, got = _drive_staggered(eng, prompts, 5)
+    for i, toks in enumerate(got):
+        assert toks == want[i].tolist(), (arch, S, i)
+    assert eng.pool.allocated_pages == 0           # everything released
+    sizes = (eng._admit_fn._cache_size(),
+             *(f._cache_size() for f in eng._scan_fns.values()))
+    assert all(s == 1 for s in sizes), sizes       # no-retrace invariant
+
+
+def test_paged_int8_kv_matches_dense_scheduler():
+    """int8-KV pools page the codes AND the per-token-per-head scales; the
+    oracle is the dense scheduler (int8 live KV has no generate analogue)."""
+    cfg, params = _params("qwen2-7b", kv_quant="int8")
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 6), 0, cfg.vocab)
+    dense = Engine(cfg, params, ServeConfig(max_len=32))
+    _, want = _drive_staggered(dense, prompts, 5)
+    eng = Engine(cfg, params,
+                 ServeConfig(max_len=32, paged=True, page_size=4))
+    _, got = _drive_staggered(eng, prompts, 5)
+    assert got == want
+
+
+def test_paged_recurrent_hybrid_matches_dense_oracle():
+    """zamba2: paged shared-attention K/V + dense mamba recurrent state
+    (exact-length admission) — mixed paged/dense leaves in one stitch."""
+    cfg, params = _params("zamba2-2.7b")
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
+    oracle = Engine(cfg, params, ServeConfig(max_len=32))
+    want = np.asarray(
+        oracle.generate(prompts, max_new_tokens=4, use_scan=False)[:, 6:])
+    eng = Engine(cfg, params,
+                 ServeConfig(max_len=32, paged=True, page_size=4))
+    assert eng.has_recurrent_state
+    _, got = _drive_staggered(eng, prompts, 4)
+    for i, toks in enumerate(got):
+        assert toks == want[i].tolist(), i
+
+
+# ---------------------------------------------------------------------------
+# prefix reuse
+# ---------------------------------------------------------------------------
+
+def test_prefix_reuse_shares_pages_and_stays_exact():
+    """Requests sharing an 8-token prefix map to the same physical pages
+    (nonzero hit rate, fewer peak pages) and still emit exactly the dense
+    oracle's tokens."""
+    cfg, params = _params("qwen2-7b")
+    base = list(range(1, 9))                          # 2 full pages at ps=4
+    prompts = [base + [20 + i] for i in range(4)]
+    oracle = Engine(cfg, params, ServeConfig(max_len=32))
+    want = np.asarray(oracle.generate(
+        jnp.asarray(prompts, jnp.int32), max_new_tokens=4,
+        use_scan=False)[:, 9:])
+    eng = Engine(cfg, params,
+                 ServeConfig(max_len=32, paged=True, page_size=4))
+    sched = Scheduler(eng, slots=4, chunk=2, prompt_bucket="pow2")
+    reqs = [Request(prompt=p, max_new_tokens=4) for p in prompts]
+    sched.run(reqs)
+    for i, r in enumerate(reqs):
+        assert r.tokens == want[i].tolist(), i
+    assert eng.pool.prefix_hits > 0
+    assert eng.pool.prefix_hit_rate > 0.3
+    # 4 sequences x 4 pages dense-equivalent; sharing must beat that
+    assert eng.pool.peak_pages < 16
+    assert eng.pool.allocated_pages == 0
+
+
+def test_prefix_reuse_disabled_allocates_everything():
+    cfg, params = _params("qwen2-7b")
+    base = list(range(1, 9))
+    eng = Engine(cfg, params,
+                 ServeConfig(max_len=32, paged=True, page_size=4,
+                             prefix_reuse=False))
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="pow2")
+    sched.run([Request(prompt=base + [20 + i], max_new_tokens=2)
+               for i in range(2)])
+    assert eng.pool.prefix_hits == 0
+
+
+# ---------------------------------------------------------------------------
+# pool exhaustion: deterministic preempt-and-requeue
+# ---------------------------------------------------------------------------
+
+def test_pool_exhaustion_preempts_youngest_and_stays_exact():
+    """When the allocator runs dry mid-decode the scheduler preempts the
+    youngest slot, requeues it (keeping its emitted tokens), and the final
+    transcripts are token-identical to an uncontended run."""
+    cfg, params = _params("qwen2-7b")
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (3, 6), 0, cfg.vocab)
+    oracle = Engine(cfg, params, ServeConfig(max_len=32))
+    want = np.asarray(
+        oracle.generate(prompts, max_new_tokens=12, use_scan=False)[:, 6:])
+    # 3 slots x ceil(18/4) = 15 pages uncontended; 10 usable forces eviction
+    eng = Engine(cfg, params,
+                 ServeConfig(max_len=32, paged=True, page_size=4,
+                             num_pages=11))
+    sched = Scheduler(eng, slots=3, chunk=2, prompt_bucket="pow2")
+    reqs = [Request(prompt=np.asarray(p).tolist(), max_new_tokens=12)
+            for p in prompts]
+    sched.run(reqs)
+    for i, r in enumerate(reqs):
+        assert r.tokens == want[i].tolist(), (i, r.tokens, want[i].tolist())
+    assert sched.stats["preemptions"] > 0          # pool really was contended
+    assert eng.pool.allocated_pages == 0
+    # decode executors never retrace (admit recompiles only per NEW bucket:
+    # the resumed sequence is longer, so one extra bucket is legal)
+    assert all(f._cache_size() == 1 for f in eng._scan_fns.values())
+
+
+def test_single_oversized_request_raises():
+    cfg, params = _params("qwen2-7b")
+    eng = Engine(cfg, params,
+                 ServeConfig(max_len=32, paged=True, page_size=4,
+                             num_pages=3))
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="pow2")
+    with pytest.raises(RuntimeError, match="num_pages"):
+        sched.run([Request(prompt=list(range(1, 13)), max_new_tokens=4)])
+
+
+# ---------------------------------------------------------------------------
+# memory accounting
+# ---------------------------------------------------------------------------
+
+def test_paged_kv_bytes_below_dense_capacity():
+    cfg, params = _params("qwen2-7b")
+    dense = Engine(cfg, params, ServeConfig(max_len=32))
+    eng = Engine(cfg, params,
+                 ServeConfig(max_len=32, paged=True, page_size=4))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
+    _drive_staggered(eng, prompts, 4)
+    # short sequences resident: allocated pages well under max_len capacity
+    assert 0 < eng.kv_cache_bytes(2) < dense.kv_cache_bytes(2)
+    # page_bytes * total pages == pool capacity bytes
+    assert eng.page_bytes(2) * (eng.pool.pages_per_shard
+                                * eng.pool.n_shards) \
+        == eng._kv_leaf_bytes(2)
+
+
+# ---------------------------------------------------------------------------
+# encdec: page-table-indexed self-attention decode
+# ---------------------------------------------------------------------------
+
+def test_encdec_paged_decode_matches_dense():
+    from repro.models import encdec as E
+    cfg = dataclasses.replace(
+        configs.get_config("whisper-large-v3", smoke=True),
+        compute_dtype="float32")
+    params = E.init_params(jax.random.PRNGKey(0), cfg)
+    B, S, max_len, ps = 2, 4, 16, 4
+    frames = jax.random.normal(jax.random.PRNGKey(1),
+                               (B, cfg.enc_seq, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    logits, cache = E.prefill(params, cfg, frames, toks)
+    dense = dict(cache)
+    for k in ("k", "v"):
+        buf = jnp.zeros(cache[k].shape[:2] + (max_len,) + cache[k].shape[3:],
+                        cache[k].dtype)
+        dense[k] = jax.lax.dynamic_update_slice_in_dim(buf, cache[k], 0,
+                                                       axis=2)
+    E_ent = max_len // ps
+    paged = E.init_paged_cache(cfg, B, max_len, B * E_ent + 1, ps)
+    table = np.arange(1, B * E_ent + 1, dtype=np.int32).reshape(B, E_ent)
+    pool_k, pool_v = np.array(paged["k"]), np.array(paged["v"])
+    dk, dv = np.asarray(dense["k"]), np.asarray(dense["v"])
+    for b in range(B):
+        for j in range(E_ent):
+            pool_k[:, table[b, j]] = dk[:, b, j * ps:(j + 1) * ps]
+            pool_v[:, table[b, j]] = dv[:, b, j * ps:(j + 1) * ps]
+    paged = {**paged, "k": jnp.asarray(pool_k), "v": jnp.asarray(pool_v),
+             "xk": dense["xk"], "xv": dense["xv"]}
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    l_d, _ = E.decode_step(params, cfg, tok, dense, pos)
+    l_p, c_p = E.decode_step(params, cfg, tok, paged, pos,
+                             tables=(jnp.asarray(table), None))
+    np.testing.assert_array_equal(np.asarray(l_d), np.asarray(l_p))
+    # the new token's K row landed in its page slot
+    pg, off = int(table[0, S // ps]), S % ps
+    assert np.abs(np.asarray(c_p["k"])[:, pg, off]).sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+def test_paged_engine_guard_rails():
+    cfg, params = _params("qwen2-7b")
+    with pytest.raises(ValueError, match="page_size"):
+        Engine(cfg, params, ServeConfig(max_len=30, paged=True, page_size=4))
+    gem, gparams = _params("gemma2-2b")
+    with pytest.raises(ValueError, match="ring"):
+        Engine(gem, gparams, ServeConfig(max_len=32, paged=True,
+                                         page_size=16))
+    # generate() on a paged engine silently takes the dense python loop
+    eng = Engine(cfg, params, ServeConfig(max_len=32, paged=True,
+                                          page_size=4))
+    dense = Engine(cfg, params, ServeConfig(max_len=32))
+    prompts = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(eng.generate(prompts, 4)),
+        np.asarray(dense.generate(prompts, 4, use_scan=False)))
+
+
+# ---------------------------------------------------------------------------
+# sharded paged engine (8 fake CPU devices in a subprocess — the CI recipe)
+# ---------------------------------------------------------------------------
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, numpy as np
+    from repro import configs
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import transformer as T
+    from repro.serve import Engine, Request, Scheduler, ServeConfig, \\
+        ShardedEngine
+
+    def case(arch, quant, mesh_spec, kv_quant="none", bucket="pow2",
+             shared_prefix=False):
+        cfg = dataclasses.replace(
+            configs.get_config(arch, smoke=True, quant=quant),
+            compute_dtype="float32", kv_quant=kv_quant)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        if shared_prefix:
+            base = list(range(1, 9))
+            plist = [base + [20 + i] for i in range(4)]
+            prompts = jax.numpy.asarray(plist, jax.numpy.int32)
+        else:
+            prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 6), 0,
+                                         cfg.vocab)
+        dense_scfg = ServeConfig(max_len=32, quant=quant)
+        ref = Engine(cfg, params, dense_scfg)
+        if kv_quant == "none":
+            want = np.asarray(ref.generate(
+                prompts, 5, use_scan=False)[:, prompts.shape[1]:])
+        else:
+            rs = Scheduler(ref, slots=4, chunk=2, prompt_bucket=bucket)
+            rr = [Request(prompt=np.asarray(prompts[i]).tolist(),
+                          max_new_tokens=5) for i in range(4)]
+            rs.run(rr)
+            want = np.asarray([r.tokens for r in rr])
+        scfg = ServeConfig(max_len=32, quant=quant, paged=True, page_size=4)
+        eng = ShardedEngine(cfg, params, scfg,
+                            mesh=make_serving_mesh(mesh_spec))
+        sched = Scheduler(eng, slots=4, chunk=2, prompt_bucket=bucket)
+        reqs = [Request(prompt=np.asarray(prompts[i]).tolist(),
+                        max_new_tokens=5) for i in range(4)]
+        sched.submit(reqs[0]); sched.submit(reqs[1]); sched.step()
+        sched.submit(reqs[2]); sched.submit(reqs[3])
+        while sched.has_work:
+            sched.step()
+        for i, r in enumerate(reqs):
+            assert r.tokens == want[i].tolist(), \\
+                (arch, mesh_spec, i, r.tokens, want[i].tolist())
+        sizes = (eng._admit_fn._cache_size(),
+                 *(f._cache_size() for f in eng._scan_fns.values()))
+        assert all(s == 1 for s in sizes), (arch, mesh_spec, sizes)
+        if shared_prefix:
+            assert eng.pool.prefix_hits > 0, "prefix reuse never fired"
+        assert eng.pool.allocated_pages == 0
+        # per-shard residency: head sharding shrinks the page footprint too
+        print("OK", arch, quant, mesh_spec, "kv=" + kv_quant,
+              "per_shard_bytes=", eng.kv_cache_bytes(4),
+              "head_sharded=", eng.head_sharded, flush=True)
+
+    case("qwen2-7b", "w4a4_lut", "2x2", shared_prefix=True)
+    case("qwen2-7b", "w4a4_lut", "1x8")
+    case("gemma2-2b", "w8a8", "2x2")                 # paged SWA rings
+    case("qwen2-7b", "w4a4_lut", "2x2", kv_quant="int8")
+    print("ALL-OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_paged_bit_identical_subprocess():
+    """Dense Engine vs paged ShardedEngine on 2x2 / 1x8: bit-identical
+    transcripts, page pools split over the data axis (shard-local ids),
+    prefix reuse live under sharding, executors compile once."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "ALL-OK" in out.stdout, out.stdout

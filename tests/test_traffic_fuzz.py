@@ -116,3 +116,111 @@ def test_randomized_traffic_differential_subprocess():
                          capture_output=True, text=True, timeout=1800)
     assert out.returncode == 0, out.stderr[-4000:]
     assert "ALL-OK" in out.stdout, out.stdout
+
+
+_PAGED_TRAFFIC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, random
+    import jax, numpy as np
+    from repro import configs
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import transformer as T
+    from repro.serve import Engine, Request, Scheduler, ServeConfig, \\
+        ShardedEngine
+
+    N_STREAMS = max(1, int(os.environ.get("REPRO_FUZZ_EXAMPLES", "8")) // 8)
+    MAX_LEN, SLOTS, CHUNK = 32, 4, 3
+
+    def make_stream(cfg, seed):
+        # shared-prefix traffic: a small set of base prefixes (page-aligned
+        # AND unaligned lengths) that many requests extend — prefix reuse
+        # must fire, not just be smoke-tested.  The first four requests
+        # share base 0 with budgets long enough to coexist (sharing needs
+        # the sharer's pages RESIDENT), the rest is randomized.
+        rng = random.Random(seed)
+        bases = [[rng.randrange(cfg.vocab) for _ in range(L)]
+                 for L in (8, 6, 12)]
+        reqs = [dict(prompt=list(bases[0]) + [rng.randrange(cfg.vocab)
+                                              for _ in range(i)],
+                     max_new_tokens=6 + i, eos_id=None, temperature=0.0)
+                for i in range(4)]
+        for _ in range(rng.randint(4, 8)):
+            if rng.random() < 0.7:
+                p = list(rng.choice(bases))
+                p += [rng.randrange(cfg.vocab)
+                      for _ in range(rng.randint(0, 4))]
+            else:
+                p = [rng.randrange(cfg.vocab)
+                     for _ in range(rng.randint(1, 10))]
+            budget = rng.choice([0, 1, 2, 3, 5, 8, 12])
+            eos = rng.randrange(cfg.vocab) if rng.random() < 0.3 else None
+            reqs.append(dict(prompt=p, max_new_tokens=budget, eos_id=eos,
+                             temperature=0.0))
+        plan = [4] + [rng.randint(0, 3) for _ in range(4 * len(reqs))]
+        return reqs, plan
+
+    def drive(engine, specs, plan, bucket):
+        sched = Scheduler(engine, slots=SLOTS, chunk=CHUNK,
+                          prompt_bucket=bucket)
+        reqs = [Request(**s) for s in specs]
+        i, p = 0, 0
+        while i < len(reqs) or sched.has_work:
+            take = plan[p % len(plan)]; p += 1
+            for _ in range(min(take, len(reqs) - i)):
+                sched.submit(reqs[i]); i += 1
+            if not sched.has_work and i < len(reqs):
+                sched.submit(reqs[i]); i += 1
+            sched.step()
+        assert all(s is None for s in sched.slots) and not sched.queue
+        return sched, [(r.tokens, r.finish_reason) for r in reqs]
+
+    hits = preempts = 0
+    for s in range(N_STREAMS):
+        for mesh_spec, bucket, pages in (("2x2", "pow2", 0),
+                                         ("1x8", "exact", 0),
+                                         ("2x2", "pow2", 11)):
+            # pages=11 (vs the 33-page worst case): the four coexisting
+            # shared-base requests alone need 12 unique pages, so the pool
+            # must preempt — eviction is fuzzed alongside prefix reuse
+            cfg = dataclasses.replace(
+                configs.get_config("qwen2-7b", smoke=True, quant="w4a4_lut"),
+                compute_dtype="float32")
+            params = T.init_params(jax.random.PRNGKey(0), cfg)
+            specs, plan = make_stream(cfg, 1000 + s)
+            dense = ServeConfig(max_len=MAX_LEN, quant="w4a4_lut")
+            _, want = drive(Engine(cfg, params, dense), specs, plan, bucket)
+            paged = dataclasses.replace(dense, paged=True, page_size=4,
+                                        num_pages=pages)
+            peng = Engine(cfg, params, paged)
+            _, got = drive(peng, specs, plan, bucket)
+            assert got == want, ("paged-1dev", mesh_spec, s)
+            hits += peng.pool.prefix_hits
+            preempts += peng.pool.preemptions
+            if pages == 0:      # sharded pool sizes must divide the mesh
+                seng = ShardedEngine(cfg, params, paged,
+                                     mesh=make_serving_mesh(mesh_spec))
+                _, got_s = drive(seng, specs, plan, bucket)
+                assert got_s == want, ("paged-sharded", mesh_spec, s)
+                hits += seng.pool.prefix_hits
+            print("OK", mesh_spec, "bucket=", bucket, "pages=", pages,
+                  flush=True)
+    assert hits > 0, "prefix reuse never fired across the fuzz streams"
+    assert preempts > 0, "the contended pool never forced a preemption"
+    print("ALL-OK hits=", hits, "preempts=", preempts)
+""")
+
+
+@pytest.mark.slow
+def test_paged_traffic_differential_subprocess():
+    """Shared-prefix request streams through the dense Engine, the paged
+    Engine, and the paged ShardedEngine (2x2 / 1x8): transcripts must match
+    token for token at temperature 0 while prefix reuse AND pool-exhaustion
+    preemption actually fire (asserted, not just smoke-tested)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _PAGED_TRAFFIC_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "ALL-OK" in out.stdout, out.stdout

@@ -11,6 +11,10 @@ Three sections:
     through dense per-slot buffers and the paged pool (``serve.paged``) —
     tokens/s, capacity vs allocated-page KV bytes, admission-padding waste
     (prefill/admitted tokens), slot occupancy, and the prefix-hit rate.
+  * overload QoS (``serve_overload_*``): a logical-clock arrival trace that
+    outpaces a small paged pool — deterministic watermark shedding, deadline
+    expiry, latency percentiles of the survivors, and the snapshot/replay
+    recovery overhead under injected NaN faults.
   * Poisson-arrival continuous vs static batching: the same request stream
     (seeded exponential inter-arrivals, heterogeneous decode budgets) served
     by the slot Scheduler (admit-on-free-slot) vs grouped static batches
@@ -204,6 +208,99 @@ def _paged_rows():
     return rows
 
 
+def _overload_rows():
+    """Deadline/priority QoS under sustained overload (serve.scheduler fault
+    tolerance): arrivals outpace a deliberately small paged pool, so the
+    watermark shedder and deadline expiry must do the dropping.
+
+    The drive loop runs on a LOGICAL clock (one tick per scheduling round,
+    two arrivals per tick) — every robustness decision (shed choice, expiry,
+    preemption victim) is a pure function of that clock, so the row reports
+    ``deterministic=1`` only after replaying the identical trace and getting
+    identical per-request outcomes.  Latency percentiles are in ticks (flat
+    p99 = survivors are served promptly *because* the excess was shed at
+    admission instead of timing out in queue).  The companion
+    ``serve_overload_faulted`` row reruns the trace with seeded NaN faults +
+    per-round snapshots: the recovery-overhead measurement (wall-clock ratio
+    + replay rounds) for the crash-recovery path."""
+    from repro.serve.faults import Fault, FaultPlan
+
+    SLOTS, CHUNK, S, N = 2, 4, 6, 24
+    rng = random.Random(0)
+    cfg = configs.get_config("qwen2-7b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    # num_pages well under the worst-case auto-size: decode saturates the
+    # pool, so the watermark shedder (not luck) does the dropping
+    eng = Engine(cfg, params, ServeConfig(max_len=32, paged=True,
+                                          page_size=4, num_pages=13))
+    prompts = [[rng.randrange(cfg.vocab) for _ in range(S)] for _ in range(N)]
+    budgets = [rng.randint(4, 12) for _ in range(N)]
+    prios = [rng.randint(0, 1) for _ in range(N)]
+    # half the low-priority requests carry tight deadlines (arrival + 4
+    # ticks): under overload they either get served quickly or expire
+    arrivals = [i / 3.0 for i in range(N)]
+    deadlines = [arrivals[i] + 4.0 if prios[i] == 0 and rng.random() < 0.5
+                 else None for i in range(N)]
+
+    def drive(**sched_kw):
+        sched = Scheduler(eng, slots=SLOTS, chunk=CHUNK,
+                          prompt_bucket="pow2", shed_watermark=0.6,
+                          overload_queue=3, **sched_kw)
+        reqs = [Request(prompt=p, max_new_tokens=b, priority=pr, deadline=d)
+                for p, b, pr, d in zip(prompts, budgets, prios, deadlines)]
+        idx, t = 0, 0.0
+        t0 = time.perf_counter()
+        while idx < N or sched.has_work:
+            while idx < N and arrivals[idx] <= t:
+                sched.submit(reqs[idx], now=t)
+                idx += 1
+            sched.step(now=t)
+            t += 1.0
+            if t > 4096:
+                raise RuntimeError("overload bench failed to drain")
+        dt = time.perf_counter() - t0
+        sched.check_drained()
+        return sched, reqs, dt
+
+    drive()                                          # warmup / compile
+    sched, reqs, dt = drive()
+    outcomes = [r.finish_reason for r in reqs]
+    sched2, reqs2, _ = drive()                       # identical logical trace
+    deterministic = int(outcomes == [r.finish_reason for r in reqs2]
+                        and sched.stats["shed"] == sched2.stats["shed"])
+    served = [r for r in reqs if r.finish_reason in ("eos", "length")]
+    lats = sorted(r.finish_time - r.arrival_time for r in served)
+    p50 = lats[len(lats) // 2]
+    p99 = lats[min(len(lats) - 1, int(len(lats) * 0.99))]
+    tokens = sum(len(r.tokens) for r in served)
+    rows = [("serve_overload_shedding", dt * 1e6,
+             f"tokens_per_s={tokens / dt:.1f};requests={N};slots={SLOTS};"
+             f"served={len(served)};shed={sched.stats['shed']};"
+             f"timed_out={sched.stats['timed_out']};"
+             f"preemptions={sched.stats['preemptions']};"
+             f"p50_latency_ticks={p50:.1f};p99_latency_ticks={p99:.1f};"
+             f"deterministic={deterministic}")]
+
+    # recovery overhead: the same trace with per-round snapshots and two
+    # injected NaN rounds — the differential suites prove transcripts stay
+    # token-identical; this row prices that guarantee
+    plan = FaultPlan([Fault(site="decode", index=3, kind="nan_logits"),
+                      Fault(site="decode", index=9, kind="nan_logits")])
+    eng.set_fault_plan(plan)
+    try:
+        fsched, _, fdt = drive(snapshot_interval=1, max_retries=4)
+    finally:
+        eng.set_fault_plan(None)
+    rows.append(
+        ("serve_overload_faulted", fdt * 1e6,
+         f"recoveries={fsched.stats['recoveries']};"
+         f"rounds={fsched.stats['rounds']};clean_rounds={sched.stats['rounds']};"
+         f"snapshot_overhead={fdt / dt:.2f}x;faults=2;"
+         f"shed={fsched.stats['shed']};"
+         f"timed_out={fsched.stats['timed_out']}"))
+    return rows
+
+
 def _sharded_workload(engine, slots: int, chunk: int, prompts, budgets):
     """Drain one fixed request set through a fresh Scheduler; makespan (s)."""
     sched = Scheduler(engine, slots=slots, chunk=chunk, prompt_bucket="pow2")
@@ -267,7 +364,7 @@ def _sharded_rows(meshes=None):
 
 
 def run():
-    rows = _quant_sweep() + _poisson_rows() + _paged_rows()
+    rows = _quant_sweep() + _poisson_rows() + _paged_rows() + _overload_rows()
     if jax.device_count() > 1:
         rows += _sharded_rows()
     else:

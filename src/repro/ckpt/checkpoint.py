@@ -63,11 +63,21 @@ def _flatten_with_paths(tree):
     return paths, leaves, treedef
 
 
+def tree_to_host(tree: Any) -> Any:
+    """Gather every leaf to host as a materialized ``np.ndarray`` (sharded
+    globals gather fully).  Shared by the serializer below and the serving
+    scheduler's rolling fault-recovery snapshots — a host copy is the only
+    safe snapshot under buffer donation (a device reference would alias the
+    very buffer the next dispatch overwrites)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: np.asarray(jax.device_get(leaf)), tree)
+
+
 def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
          async_save: bool = False) -> threading.Thread | None:
     """Serialize ``tree`` (gathered to host) atomically under ``ckpt_dir``."""
     paths, leaves, _ = _flatten_with_paths(tree)
-    host_leaves = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
+    host_leaves = jax.tree_util.tree_leaves(tree_to_host(leaves))
 
     def _write():
         final = os.path.join(ckpt_dir, f"step_{step:08d}")

@@ -40,12 +40,23 @@ per-slot page tables, prefix reuse via hash-chained page identity, and
 block-granular admission with deterministic preempt-and-requeue when the
 pool exhausts — still bit-identical at temperature 0, still retrace-free
 (tables change values, never shapes).
+
+Fault tolerance (``serve.faults`` + scheduler hooks): requests carry
+logical-time ``deadline``/``priority``; the scheduler expires, sheds, and
+preempts deterministically from the caller's ``now=`` clock; a seeded
+``FaultPlan`` injects NaN/page-table/dispatch/stall faults at the two engine
+dispatch sites, and detection (finite-logits + cache-finiteness + pool
+audits) plus rolling host snapshots give token-identical replay recovery.
 """
 from repro.serve.engine import Engine, ServeConfig, sample_logits
+from repro.serve.faults import (CacheCorruption, EngineFault, Fault,
+                                FaultPlan, InjectedFault)
 from repro.serve.paged import PagedLayout, PagePool
 from repro.serve.request import Request, RequestStatus
 from repro.serve.scheduler import Scheduler
 from repro.serve.sharded import ShardedEngine
 
 __all__ = ["Engine", "ServeConfig", "Request", "RequestStatus", "Scheduler",
-           "ShardedEngine", "PagePool", "PagedLayout", "sample_logits"]
+           "ShardedEngine", "PagePool", "PagedLayout", "sample_logits",
+           "FaultPlan", "Fault", "EngineFault", "InjectedFault",
+           "CacheCorruption"]

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.models import attention as attn_lib
 from repro.models import encdec, transformer
+from repro.serve.faults import CacheCorruption
 
 NEG_INF = -1e30
 
@@ -49,6 +50,11 @@ class ServeConfig:
     num_pages: int = 0            # total pool pages incl. per-shard null
                                   # pages; 0 = worst-case auto-size
     prefix_reuse: bool = True     # share identical prompt-prefix pages
+    # invariant guards (serve.faults): audit the page pool before every
+    # dispatch and have the scheduler act on the finite-logits flags the
+    # compiled executors always report (the flags cost one cheap on-device
+    # reduction either way; this gates the host-side checks/raises)
+    guards: bool = True
 
 
 def sample_logits(logits: jax.Array, key, temperature: jax.Array,
@@ -157,6 +163,28 @@ def _scatter_pages(pool: jax.Array, table: jax.Array, piece: jax.Array,
         vals.astype(pool.dtype))
 
 
+_FLOAT_KV_KEYS = ("k", "v", "shared_k", "shared_v", "k_scale", "v_scale")
+
+
+def _cache_finite(cache) -> jax.Array:
+    """Scalar AND of ``isfinite`` over every floating-dtype attention cache
+    leaf.  The finite-logits guard alone cannot see KV corruption on
+    integer-code matmul paths (casting a NaN activation to int codes yields
+    finite garbage), so decode also audits the cache itself once per chunk.
+    Int leaves (quantized KV codes, page tables) are finite by construction
+    and skipped."""
+    layers = cache if isinstance(cache, (list, tuple)) else [cache]
+    ok = jnp.bool_(True)
+    for layer in layers:
+        if not isinstance(layer, dict):
+            continue
+        for key in _FLOAT_KV_KEYS:
+            leaf = layer.get(key)
+            if leaf is not None and jnp.issubdtype(leaf.dtype, jnp.floating):
+                ok = ok & jnp.isfinite(leaf).all()
+    return ok
+
+
 def paged_layout(cfg, scfg: ServeConfig):
     """The engine's page geometry (validated against cfg/scfg)."""
     from repro.serve.paged import PagedLayout
@@ -228,6 +256,9 @@ class Engine:
             p, cfg, t, c, pos), donate_argnums=2)
         self._admit_fn = self._build_admit_fn()
         self._scan_fns: dict[tuple, callable] = {}
+        # fault injection (serve.faults): a FaultPlan applied at the two
+        # dispatch sites; None in production
+        self.faults = None
         # attention KV tolerates right-padded prompt buckets (pad keys stay
         # position-masked until decode overwrites them); SSM/RWKV recurrent
         # states do NOT — the recurrence integrates pad embeddings — so the
@@ -323,6 +354,37 @@ class Engine:
         the sharded engine pins them to the data axis so the compiled
         executors see one stable input sharding from round one)."""
         return x
+
+    def place_cache(self, cache):
+        """Device placement for a (host-restored) decode cache tree
+        (identity here; the sharded engine re-pins the canonical cache
+        shardings so restored state never changes executor signatures)."""
+        return jax.tree_util.tree_map(jnp.asarray, cache)
+
+    def serving_state_shardings(self):
+        """Shardings for the {"cache", "tok", "pos", "done"} serving-state
+        tree a disk restore re-places (None = default placement; the
+        sharded engine returns its canonical NamedSharding tree)."""
+        return None
+
+    # -- fault injection + invariant guards (serve.faults) -------------------
+
+    def set_fault_plan(self, plan) -> None:
+        """Install a ``FaultPlan`` applied at every dispatch (None clears)."""
+        self.faults = plan
+
+    def _fault_site(self, site: str, cache, pos):
+        """Apply due injected faults, then audit the page pool so corrupted
+        tables are caught host-side BEFORE they are snapshotted to device
+        (where the scatter/gather would silently clamp them)."""
+        if self.faults is not None:
+            cache = self.faults.apply(site, self, cache, pos)
+        if self.paged and self.scfg.guards and self.pool is not None:
+            errs = self.pool.validate()
+            if errs:
+                raise CacheCorruption(
+                    "page pool audit failed: " + "; ".join(errs[:3]))
+        return cache
 
     def _stitch_impl(self, cache, pcache, lengths, mask, paged=()):
         """Cache-stitch-at-slot: write freshly prefilled rows into the masked
@@ -422,9 +484,11 @@ class Engine:
         prompts: [slots, P] int32 right-padded to the bucket (dummy rows for
         slots that stay empty); lengths/mask/budget_one: per-slot vectors
         (budget_one marks requests whose whole budget is the first token).
-        Returns (cache, tok, pos, done, tok0, done0) — tok0/done0 are the
-        per-slot first tokens and immediately-finished flags the scheduler
-        reads back for bookkeeping.  Compiles once per prompt bucket.
+        Returns (cache, tok, pos, done, tok0, done0, ok0) — tok0/done0 are
+        the per-slot first tokens and immediately-finished flags the
+        scheduler reads back for bookkeeping; ok0 is the per-slot
+        finite-logits guard (False = the sampled row's logits were
+        non-finite, i.e. poisoned state).  Compiles once per prompt bucket.
 
         Paged engines additionally thread the page tables + per-slot
         start_tok (snapshotted from ``self.pool``, which the scheduler's
@@ -434,6 +498,7 @@ class Engine:
             raise NotImplementedError(
                 "continuous batching serves decoder-only LMs; enc-dec uses "
                 "Engine.generate")
+        cache = self._fault_site("admit", cache, pos)
         key = jax.random.PRNGKey(self.scfg.seed)
         extra = self._paged_admit_args() if self.paged else ()
         return self._admit_fn(
@@ -452,12 +517,14 @@ class Engine:
         key = tp_lib.fold_in_data(key)   # per-data-shard sampling stream
         tok0 = sample_logits(logits, jax.random.fold_in(key, step0),
                              temperature, top_k, top_p)
+        # finite-logits guard on the sampled rows (free rows report healthy)
+        ok0 = jnp.isfinite(logits).all(axis=-1) | ~mask
         done0 = ((eos >= 0) & (tok0 == eos)) | budget_one
         active = mask & ~done0
         tok = jnp.where(mask, tok0, tok)
         pos = jnp.where(mask, jnp.where(active, lengths, -1), pos)
         done = jnp.where(mask, ~active, done)
-        return cache, tok, pos, done, tok0, done0
+        return cache, tok, pos, done, tok0, done0, ok0
 
     def decode_chunk(self, cache, tok, pos, done, eos, temperature, top_k,
                      top_p, step0: int, chunk: int, greedy: bool = False):
@@ -468,12 +535,16 @@ class Engine:
         statically) compiles an argmax-only variant that skips the per-token
         vocab sort; its tokens are bit-identical to the general path's.
 
-        Returns (cache, tok, pos, done, tokens [B, chunk], dones [B, chunk]).
+        Returns (cache, tok, pos, done, tokens [B, chunk], dones [B, chunk],
+        ok [B]) — ok is the per-slot finite-logits guard over the whole
+        chunk (False = some live step of that slot sampled from non-finite
+        logits).
         """
         fn = self._scan_fns.get((chunk, greedy))
         if fn is None:
             fn = self._build_scan_fn(chunk, greedy)
             self._scan_fns[(chunk, greedy)] = fn
+        cache = self._fault_site("decode", cache, pos)
         key = jax.random.PRNGKey(self.scfg.seed)
         extra = self._paged_decode_args() if self.paged else ()
         return fn(self.params, cache, tok, pos, done, eos, temperature,
@@ -489,9 +560,12 @@ class Engine:
             tables = paged if paged else None
 
             def step(carry, i):
-                cache, tok, pos, done = carry
+                cache, tok, pos, done, ok = carry
                 logits, cache = mod.decode_step(params, cfg, tok, cache, pos,
                                                 tables=tables)
+                # finite-logits guard: rows already done (or free) before
+                # this step never sampled these logits — ignore them
+                ok = ok & (jnp.isfinite(logits).all(axis=-1) | done)
                 key_i = jax.random.fold_in(key, step0 + i)
                 if greedy:
                     nxt = sample_logits(logits, key_i, 0.0, 0, 1.0)
@@ -501,11 +575,28 @@ class Engine:
                 nxt = jnp.where(done, tok, nxt)
                 pos = jnp.where(done, pos, pos + 1)
                 done = done | ((nxt == eos) & (eos >= 0))
-                return (cache, nxt, pos, done), (nxt, done)
+                return (cache, nxt, pos, done, ok), (nxt, done)
 
-            (cache, tok, pos, done), (toks, dones) = jax.lax.scan(
-                step, (cache, tok, pos, done), jnp.arange(chunk))
-            return cache, tok, pos, done, toks.T, dones.T
+            ok = jnp.ones(tok.shape, bool)
+            (cache, tok, pos, done, ok), (toks, dones) = jax.lax.scan(
+                step, (cache, tok, pos, done, ok), jnp.arange(chunk))
+            # cache-finiteness guard: quantized (integer-code) matmul paths
+            # launder NaN activations into finite garbage codes, so poisoned
+            # KV can yield wrong-but-FINITE logits the guard above never
+            # sees.  Sweep the float attention leaves once per chunk; a
+            # non-finite value anywhere fails every slot (recovery replays
+            # the whole batch from the snapshot regardless).  Under tensor
+            # parallelism each shard holds a head slice, so the verdict must
+            # be all-reduced over the model axis — the ok out-spec is
+            # model-replicated and an unreduced miss on the clean shards
+            # would mask the poisoned one.
+            cache_ok = _cache_finite(cache)
+            axis = tp_lib.model_axis()
+            if axis is not None:
+                cache_ok = jax.lax.pmin(
+                    cache_ok.astype(jnp.int32), axis).astype(bool)
+            ok = ok & cache_ok
+            return cache, tok, pos, done, toks.T, dones.T, ok
 
         return run
 
@@ -584,9 +675,9 @@ class Engine:
             temp = jnp.full((B,), sc.temperature, jnp.float32)
             top_k = jnp.full((B,), sc.top_k, jnp.int32)
             top_p = jnp.full((B,), sc.top_p, jnp.float32)
-            *_, ys, _ = self.decode_chunk(cache, tok, pos, done, eos, temp,
-                                          top_k, top_p, 1,
-                                          max_new_tokens - 1, greedy=greedy)
+            ys = self.decode_chunk(cache, tok, pos, done, eos, temp,
+                                   top_k, top_p, 1,
+                                   max_new_tokens - 1, greedy=greedy)[4]
             out = jnp.concatenate([tok[:, None], ys], axis=1)
         else:
             toks = [tok]

@@ -288,3 +288,153 @@ class PagePool:
     def prefix_hit_rate(self) -> float:
         total = self.prefix_hits + self.prefix_fresh
         return self.prefix_hits / total if total else 0.0
+
+    @property
+    def usable_pages(self) -> int:
+        """Total allocatable pages across shards (null pages excluded)."""
+        return self.n_shards * (self.pages_per_shard - 1)
+
+    @property
+    def saturation(self) -> float:
+        """Fraction of usable pages currently allocated — the quantity the
+        scheduler's shed watermark is compared against."""
+        return self.allocated_pages / self.usable_pages
+
+    # -- invariant audit / leak telemetry ------------------------------------
+
+    def _in_use(self, shard: int) -> dict:
+        """page id -> reference count recomputed from the slot mappings."""
+        refs: dict = {}
+        lo = shard * self.slots_per_shard
+        for slot in range(lo, lo + self.slots_per_shard):
+            for j in range(self.n_full[slot]):
+                pid = int(self.table[slot, j])
+                refs[pid] = refs.get(pid, 0) + 1
+            for j in range(self.n_ring[slot]):
+                pid = int(self.ring[slot, j])
+                refs[pid] = refs.get(pid, 0) + 1
+        return refs
+
+    def validate(self) -> list:
+        """Cheap host-side audit of the allocator invariants; returns a list
+        of problem strings (empty = healthy).  The engine runs this before
+        every dispatch on a paged engine — an out-of-range or stale table
+        entry is caught BEFORE the compiled scatter/gather would silently
+        clamp it into corrupting a live page."""
+        errs = []
+        P = self.pages_per_shard
+        for s in range(self.n_shards):
+            sh = self._shards[s]
+            refs = self._in_use(s)
+            for pid in refs:
+                if not 0 < pid < P:
+                    errs.append(f"shard {s}: table entry {pid} out of "
+                                f"range (0, {P})")
+            want = np.zeros((P,), np.int32)
+            for pid, n in refs.items():
+                if 0 < pid < P:
+                    want[pid] = n
+            bad = np.flatnonzero(want != sh.ref)
+            if bad.size:
+                errs.append(
+                    f"shard {s}: refcount mismatch at pages "
+                    f"{bad[:4].tolist()} (mapped {want[bad[:4]].tolist()} "
+                    f"vs recorded {sh.ref[bad[:4]].tolist()})")
+            free = set(sh.free)
+            overlap = free & {p for p in refs if 0 < p < P}
+            if overlap:
+                errs.append(f"shard {s}: free-list/in-use overlap "
+                            f"{sorted(overlap)[:4]}")
+            if len(free) != len(sh.free):
+                errs.append(f"shard {s}: duplicate free-list entries")
+        total = sum(len(self._in_use(s)) for s in range(self.n_shards))
+        if not errs and total != self.allocated_pages:
+            errs.append(f"allocated_pages {self.allocated_pages} != "
+                        f"{total} pages mapped by slots")
+        return errs
+
+    def leaked_pages(self) -> list:
+        """Pages still holding references that NO slot mapping reaches —
+        i.e. real leaks (shared prefix pages held by live sharers are
+        reachable, so they don't count).  Returns (shard, page) tuples.
+        At scheduler drain this and ``allocated_pages`` must both be
+        empty/zero."""
+        leaks = []
+        for s in range(self.n_shards):
+            reachable = set(self._in_use(s))
+            for pid in range(1, self.pages_per_shard):
+                if self._shards[s].ref[pid] > 0 and pid not in reachable:
+                    leaks.append((s, pid))
+        return leaks
+
+    # -- snapshot / restore ---------------------------------------------------
+
+    @staticmethod
+    def _key_to_prefix(key) -> list:
+        """Flatten a nested chain key ((...), page_tokens) to the flat token
+        prefix it identifies — the JSON/msgpack-serializable canonical form."""
+        pages = []
+        while key is not None:
+            key, toks = key
+            pages.append(list(toks))
+        return [t for page in reversed(pages) for t in page]
+
+    def _key_from_prefix(self, prefix) -> tuple:
+        ps = self.layout.page_size
+        key = None
+        for j in range(len(prefix) // ps):
+            key = (key, tuple(int(t) for t in prefix[j * ps:(j + 1) * ps]))
+        return key
+
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of the complete allocator state (tables,
+        free lists, refcounts, prefix registry, stats) — what the
+        scheduler's snapshot/checkpoint carries for crash recovery."""
+        return {
+            "table": self.table.tolist(),
+            "ring": self.ring.tolist(),
+            "start": self.start.tolist(),
+            "n_full": list(self.n_full),
+            "n_ring": list(self.n_ring),
+            "shards": [{
+                "free": sorted(sh.free),
+                "ref": sh.ref.tolist(),
+                "registry": [[self._key_to_prefix(key), int(pid)]
+                             for key, pid in sh.hash2page.items()],
+            } for sh in self._shards],
+            "stats": {
+                "allocated_pages": self.allocated_pages,
+                "peak_pages": self.peak_pages,
+                "prefix_hits": self.prefix_hits,
+                "prefix_fresh": self.prefix_fresh,
+                "preemptions": self.preemptions,
+                "peak_per_shard": self._peak_per_shard,
+            },
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore :meth:`state_dict` in place (geometry must match)."""
+        self.table = np.asarray(state["table"], np.int32)
+        self.ring = np.asarray(state["ring"], np.int32)
+        self.start = np.asarray(state["start"], np.int32)
+        self.n_full = list(state["n_full"])
+        self.n_ring = list(state["n_ring"])
+        if len(state["shards"]) != self.n_shards:
+            raise ValueError("page-pool shard count mismatch")
+        for sh, rec in zip(self._shards, state["shards"]):
+            sh.free = list(rec["free"])
+            heapq.heapify(sh.free)
+            sh.ref = np.asarray(rec["ref"], np.int32)
+            sh.hash2page = {}
+            sh.page_key = {}
+            for prefix, pid in rec["registry"]:
+                key = self._key_from_prefix(prefix)
+                sh.hash2page[key] = int(pid)
+                sh.page_key[int(pid)] = key
+        st = state["stats"]
+        self.allocated_pages = int(st["allocated_pages"])
+        self.peak_pages = int(st["peak_pages"])
+        self.prefix_hits = int(st["prefix_hits"])
+        self.prefix_fresh = int(st["prefix_fresh"])
+        self.preemptions = int(st["preemptions"])
+        self._peak_per_shard = int(st["peak_per_shard"])

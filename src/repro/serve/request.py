@@ -5,11 +5,26 @@ batch neighbours: the prompt, a decode budget, an optional EOS id, per-request
 sampling knobs, and an optional streaming callback invoked as tokens are
 emitted.  Status moves QUEUED -> RUNNING -> FINISHED; ``finish_reason``
 records why decode stopped ("eos" | "length").
+
+Fault tolerance adds three terminal statuses the scheduler can impose:
+
+  * TIMED_OUT — the request's ``deadline`` passed (in the scheduler's
+    LOGICAL clock, the ``now=`` values the caller threads through
+    ``submit``/``step`` — never wall clock, so replays are exact);
+  * SHED — deterministic admission-control overload shedding picked this
+    request (lowest priority first, then least deadline slack);
+  * FAILED — the request was in flight across more than ``max_retries``
+    fault recoveries and was dropped instead of retried again.
+
+``deadline`` is a logical-time instant (same units as ``now``), ``priority``
+an integer where HIGHER survives shedding longer.  Both must be finite —
+validated here and again at ``Scheduler.submit``.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import math
 from typing import Callable, List, Optional, Sequence
 
 
@@ -17,6 +32,20 @@ class RequestStatus(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
     FINISHED = "finished"
+    TIMED_OUT = "timed_out"
+    SHED = "shed"
+    FAILED = "failed"
+
+
+# finish_reason -> terminal status (anything else finishes FINISHED)
+_REASON_STATUS = {
+    "timed_out": RequestStatus.TIMED_OUT,
+    "shed": RequestStatus.SHED,
+    "failed": RequestStatus.FAILED,
+}
+
+_TERMINAL = frozenset((RequestStatus.FINISHED, RequestStatus.TIMED_OUT,
+                       RequestStatus.SHED, RequestStatus.FAILED))
 
 
 @dataclasses.dataclass
@@ -30,6 +59,9 @@ class Request:
     top_p: Optional[float] = None
     # streaming: called with (request, token) for every emitted token
     on_token: Optional[Callable[["Request", int], None]] = None
+    # fault tolerance / QoS: logical-time deadline + shedding priority
+    deadline: Optional[float] = None
+    priority: int = 0
 
     # -- scheduler-managed state --------------------------------------------
     status: RequestStatus = RequestStatus.QUEUED
@@ -38,6 +70,7 @@ class Request:
     slot: Optional[int] = None            # decode slot while RUNNING
     arrival_time: Optional[float] = None  # set by the scheduler on submit
     finish_time: Optional[float] = None
+    retries: int = 0                      # fault recoveries survived in flight
 
     def __post_init__(self):
         # budget 0 is legal (score-the-prompt / warmup requests): the
@@ -46,14 +79,28 @@ class Request:
             raise ValueError("max_new_tokens must be >= 0")
         if len(self.prompt) < 1:
             raise ValueError("prompt must be non-empty")
+        if self.deadline is not None and not math.isfinite(self.deadline):
+            raise ValueError(f"deadline must be finite, got {self.deadline}")
+        if not math.isfinite(self.priority):
+            raise ValueError(f"priority must be finite, got {self.priority}")
 
     @property
     def done(self) -> bool:
-        return self.status == RequestStatus.FINISHED
+        return self.status in _TERMINAL
 
     @property
     def remaining(self) -> int:
         return self.max_new_tokens - len(self.tokens)
+
+    def slack(self, now: Optional[float]) -> float:
+        """Logical time to spare before the deadline; +inf when the request
+        has no deadline (or the caller runs without a clock).  The scheduler
+        preempts the MOST-slack slot (it can be requeued and still make its
+        deadline) and sheds the LEAST-slack queued request (it was going to
+        miss anyway)."""
+        if self.deadline is None or now is None:
+            return math.inf
+        return self.deadline - now
 
     def emit(self, token: int) -> None:
         """Record one generated token (and stream it)."""
@@ -62,7 +109,7 @@ class Request:
             self.on_token(self, int(token))
 
     def finish(self, reason: str, now: Optional[float] = None) -> None:
-        self.status = RequestStatus.FINISHED
+        self.status = _REASON_STATUS.get(reason, RequestStatus.FINISHED)
         self.finish_reason = reason
         self.finish_time = now
         self.slot = None

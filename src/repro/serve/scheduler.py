@@ -26,22 +26,58 @@ Static-shape invariants (TPU-friendly, no retrace after warmup):
 With a paged engine (``ServeConfig(paged=True)``) the scheduler also runs
 the block accounting: admission is gated on free pool pages (FIFO, no
 skip-ahead), every decode round first maps pages for the chunk ahead, and
-when the pool runs dry the *youngest* slot is deterministically preempted
-and requeued at the queue head with its emitted tokens intact — its
-re-admission prefills prompt + emitted and continues bit-exactly, so
-temperature-0 transcripts match an uncontended run.  Page tables are fixed
-``[slots, entries]`` int32 arrays whose VALUES change round to round, so
-none of the executors above ever retrace.
+when the pool runs dry a slot is deterministically preempted and requeued
+at the queue head with its emitted tokens intact — its re-admission
+prefills prompt + emitted and continues bit-exactly, so temperature-0
+transcripts match an uncontended run.  Page tables are fixed ``[slots,
+entries]`` int32 arrays whose VALUES change round to round, so none of the
+executors above ever retrace.
+
+Fault tolerance (serve.faults + serve.request):
+
+  * **Logical time only.**  Every robustness decision — deadline expiry,
+    shed ordering, preemption slack — reads the ``now=`` values the caller
+    threads through ``submit``/``step``/``run``, never wall clock, so a
+    transcript replays bit-for-bit.
+  * **Deadlines**: requests whose ``deadline`` passed finish ``timed_out``
+    (queued or mid-decode) instead of emitting forever.
+  * **Load shedding**: when the page pool (or, dense, the slot map)
+    saturates past ``shed_watermark`` and more than ``overload_queue``
+    requests wait, the excess is shed deterministically — lowest priority
+    first, then least deadline slack, then latest submitted.
+  * **Preemption ordering**: when the pool exhausts mid-decode and any
+    active request carries a deadline, the victim is the MOST-slack slot
+    (it can be requeued and still make its deadline); youngest-first is
+    the tie-break and the no-deadline fallback.
+  * **Detection + recovery**: the engine's finite-logits guard and
+    ``PagePool.validate()`` surface corrupted state as
+    :class:`~repro.serve.faults.CacheCorruption`; with
+    ``snapshot_interval > 0`` the scheduler keeps a host-side rolling
+    :meth:`snapshot` and on any :class:`~repro.serve.faults.EngineFault`
+    restores it and replays — in-flight requests carry a bounded
+    ``retries`` count and are dropped (status ``failed``) past
+    ``max_retries``.  Injected dispatch failures roll back locally and
+    simply re-dispatch.  Streaming callbacks never observe poisoned
+    tokens (detection precedes ``emit``), but a recovery may replay
+    tokens already streamed before the snapshot — at-least-once delivery.
+  * **Crash recovery**: :meth:`save` / :meth:`load` round-trip the whole
+    serving state (caches, slot vectors, queue, page tables, allocator,
+    PRNG step) through ``ckpt.checkpoint``, so a fresh process resumes
+    mid-stream and continues token-identically.
 """
 from __future__ import annotations
 
 import collections
+import math
 from typing import Deque, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt import checkpoint as ckpt_lib
 from repro.serve.engine import Engine
+from repro.serve.faults import CacheCorruption, EngineFault, InjectedFault
 from repro.serve.request import Request, RequestStatus
 
 
@@ -61,7 +97,10 @@ class Scheduler:
     """FIFO admission over a fixed slot map; ``Engine`` executes the batch."""
 
     def __init__(self, engine: Engine, slots: int = 4, chunk: int = 8,
-                 prompt_bucket="pow2"):
+                 prompt_bucket="pow2", *, max_retries: int = 2,
+                 snapshot_interval: int = 0,
+                 shed_watermark: Optional[float] = None,
+                 overload_queue: Optional[int] = None):
         if engine.is_encdec:
             raise NotImplementedError(
                 "continuous batching serves decoder-only LMs")
@@ -75,6 +114,12 @@ class Scheduler:
         if engine.has_recurrent_state:
             prompt_bucket = "exact"
         self.prompt_bucket = prompt_bucket
+        # fault tolerance / overload policy
+        self.max_retries = max_retries
+        self.snapshot_interval = snapshot_interval
+        self.shed_watermark = shed_watermark
+        self.overload_queue = slots if overload_queue is None else \
+            overload_queue
         scfg = engine.scfg
         self.cache = engine.init_cache(slots)
         # per-slot device state ([slots] vectors; free slot: pos=-1, done);
@@ -93,10 +138,17 @@ class Scheduler:
         self.queue: Deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * slots
         self.finished: List[Request] = []
-        # paged block accounting: admission order per slot (preemption picks
-        # the youngest), monotone admission counter
+        # paged block accounting: admission order per slot (preemption
+        # tie-breaks pick the youngest), monotone admission counter
         self._admit_seq = [0] * slots
         self._admit_counter = 0
+        # fault-recovery state: rolling snapshot + requests submitted since
+        # it was taken (restore re-queues them so no submission is lost)
+        self._snap = None
+        self._submit_log: List[Request] = []
+        self._submit_count = 0
+        self._ticks = 0
+        self._retries_since_progress = 0
         # serving telemetry (the bench commits these): admission padding
         # waste = prefill_tokens / admitted_tokens (prefill always runs the
         # fixed [slots, bucket] shape), per-round slot occupancy as a
@@ -104,7 +156,8 @@ class Scheduler:
         self.stats = {"rounds": 0, "admission_rounds": 0,
                       "prefill_tokens": 0, "admitted_tokens": 0,
                       "emitted_tokens": 0, "occupancy_sum": 0.0,
-                      "preemptions": 0}
+                      "preemptions": 0, "shed": 0, "timed_out": 0,
+                      "recoveries": 0, "dispatch_retries": 0, "failed": 0}
 
     # -- paged helpers -------------------------------------------------------
 
@@ -122,13 +175,17 @@ class Scheduler:
         self.done = self.done | fm
         self.pos = jnp.where(fm, -1, self.pos)
 
-    def _preempt_youngest(self) -> tuple[int, Request]:
-        """Deterministic preemption: evict the most recently admitted slot,
-        release its pages, and hand the request back (its emitted tokens are
-        kept — re-admission prefills prompt + emitted and continues, so
-        temperature-0 transcripts match an uncontended run)."""
+    def _preempt_victim(self, now_v) -> tuple[int, Request]:
+        """Deterministic preemption: evict the slot with the MOST deadline
+        slack (it can be requeued and still make its deadline; no-deadline
+        requests have infinite slack and go first), tie-broken — and, when
+        nothing carries a deadline, replaced — by youngest-first.  The
+        victim's pages are released and the request keeps its emitted
+        tokens: re-admission prefills prompt + emitted and continues, so
+        temperature-0 transcripts match an uncontended run."""
         victim = max((s for s, r in enumerate(self.slots) if r is not None),
-                     key=lambda s: self._admit_seq[s])
+                     key=lambda s: (self.slots[s].slack(now_v),
+                                    self._admit_seq[s]))
         req = self.slots[victim]
         self.slots[victim] = None
         self.engine.pool.release(victim)
@@ -139,11 +196,11 @@ class Scheduler:
         self.engine.pool.preemptions += 1
         return victim, req
 
-    def _ensure_chunk_pages(self) -> None:
+    def _ensure_chunk_pages(self, now_v=None) -> None:
         """Grow every active slot's page mapping to cover the next decode
-        chunk; when the pool runs dry, preempt-and-requeue youngest-first
-        until the remaining slots fit (or one sequence alone exhausts the
-        pool, which is a configuration error)."""
+        chunk; when the pool runs dry, preempt-and-requeue (most-slack /
+        youngest first) until the remaining slots fit (or one sequence
+        alone exhausts the pool, which is a configuration error)."""
         pool = self.engine.pool
         max_len = self.engine.scfg.max_len
         freed, evicted = [], []
@@ -160,13 +217,13 @@ class Scheduler:
                 raise RuntimeError(
                     "KV page pool exhausted by a single sequence — "
                     "raise ServeConfig.num_pages (or lower max_len)")
-            slot, req = self._preempt_youngest()
+            slot, req = self._preempt_victim(now_v)
             evicted.append(req)
             freed.append(slot)
         if evicted:
-            # requeue so original FIFO order survives: we evicted
-            # youngest-first, so appendleft in eviction order puts the
-            # oldest evictee at the queue head
+            # requeue so original FIFO order survives: we evicted in
+            # decreasing expendability, so appendleft in eviction order puts
+            # the least expendable evictee at the queue head
             for req in evicted:
                 self.queue.appendleft(req)
             self._free_on_device(freed)
@@ -174,18 +231,40 @@ class Scheduler:
     # -- admission -----------------------------------------------------------
 
     def submit(self, request: Request, now=None) -> Request:
-        """Queue a request.  ``now`` (here and in ``step``/``run``) may be a
-        timestamp or a zero-arg clock callable — the callable is read at the
-        bookkeeping moment, so finish times stamp after the decode chunk
-        that produced the final token."""
+        """Validate and queue a request.  ``now`` (here and in ``step``/
+        ``run``) may be a timestamp or a zero-arg clock callable — the
+        callable is read at the bookkeeping moment, so finish times stamp
+        after the decode chunk that produced the final token.  Malformed
+        requests are rejected HERE with a clear ``ValueError`` — not as a
+        shape error (or a silent hang) deep inside admission."""
         L = len(request.prompt)
         max_len = self.engine.scfg.max_len
+        if request.max_new_tokens < 0:
+            raise ValueError(
+                f"max_new_tokens must be >= 0, got {request.max_new_tokens}")
+        if L > max_len:
+            raise ValueError(
+                f"prompt length ({L}) exceeds max_len ({max_len})")
         if L + request.max_new_tokens > max_len:
             raise ValueError(
                 f"prompt ({L}) + max_new_tokens ({request.max_new_tokens}) "
                 f"exceeds max_len ({max_len})")
+        if request.deadline is not None and (
+                not isinstance(request.deadline, (int, float))
+                or not math.isfinite(request.deadline)):
+            raise ValueError(
+                f"deadline must be a finite logical time, got "
+                f"{request.deadline!r}")
+        if not isinstance(request.priority, (int, float)) or \
+                not math.isfinite(request.priority):
+            raise ValueError(
+                f"priority must be finite, got {request.priority!r}")
         request.arrival_time = now() if callable(now) else now
         request.status = RequestStatus.QUEUED
+        self._submit_count += 1
+        request._seq = self._submit_count
+        if self.snapshot_interval:
+            self._submit_log.append(request)
         self.queue.append(request)
         return request
 
@@ -209,7 +288,10 @@ class Scheduler:
         (batched prefill + masked stitch + first-token sampling + slot-state
         merge); returns #admissions.  Paged engines gate admission on free
         pool pages — candidates that don't fit go back to the queue head in
-        FIFO order (no skip-ahead, so ordering stays deterministic)."""
+        FIFO order (no skip-ahead, so ordering stays deterministic).  An
+        injected dispatch failure rolls the admission back locally (pages
+        released, candidates requeued in order) and re-raises for the retry
+        path."""
         free = [s for s in range(self.n_slots) if self.slots[s] is None]
         take = [self.queue.popleft()
                 for _ in range(min(len(free), len(self.queue)))]
@@ -265,16 +347,35 @@ class Scheduler:
              self._topp_h[slot]) = self._sampling_for(req)
             self._eos_h[slot] = -1 if req.eos_id is None else int(req.eos_id)
         self._push_sampling_state()
+        try:
+            (self.cache, self.tok, self.pos, self.done, tok0, done0,
+             ok0) = self.engine.admit_batch(
+                self.cache, prompts, lengths, mask, budget_one, self.eos,
+                self.temperature, self.top_k, self.top_p, self.tok, self.pos,
+                self.done, self._step)
+        except InjectedFault:
+            # the dispatch never ran: release this admission's pages, put
+            # the candidates back at the queue head in FIFO order, and let
+            # the retry path re-dispatch an identical round
+            for slot, _ in admitted:
+                if self.engine.paged:
+                    self.engine.pool.release(slot)
+                self._reset_slot_sampling(slot)
+            self._push_sampling_state()
+            for _, req in reversed(admitted):
+                self.queue.appendleft(req)
+            raise
+        self._step += 1
         self.stats["admission_rounds"] += 1
         self.stats["prefill_tokens"] += R * P
         self.stats["admitted_tokens"] += int(
             sum(lengths[s] for s, _ in admitted))
-        (self.cache, self.tok, self.pos, self.done, tok0,
-         done0) = self.engine.admit_batch(
-            self.cache, prompts, lengths, mask, budget_one, self.eos,
-            self.temperature, self.top_k, self.top_p, self.tok, self.pos,
-            self.done, self._step)
-        self._step += 1
+        if self.engine.scfg.guards:
+            ok0_h = np.asarray(ok0)
+            bad = [s for s, _ in admitted if not ok0_h[s]]
+            if bad:
+                raise CacheCorruption(
+                    f"non-finite logits at admission for slots {bad}")
         tok0_h, done0_h = np.asarray(tok0), np.asarray(done0)
         if callable(now):
             now = now()
@@ -305,6 +406,248 @@ class Scheduler:
         self.top_k = place(jnp.asarray(self._topk_h, jnp.int32))
         self.top_p = place(jnp.asarray(self._topp_h, jnp.float32))
 
+    # -- deadlines & load shedding (logical time only) ------------------------
+
+    def _retire(self, req: Request, reason: str, now_v) -> None:
+        """Terminal bookkeeping shared by expiry/shed/failure paths."""
+        slot = req.slot
+        req.finish(reason, now_v)
+        self.finished.append(req)
+        if slot is not None:
+            self.slots[slot] = None
+            self._reset_slot_sampling(slot)
+            if self.engine.paged:
+                self.engine.pool.release(slot)
+
+    def _expire_deadlines(self, now_v) -> None:
+        """Finish every request whose logical deadline passed — queued ones
+        without running, mid-decode ones with their partial transcript —
+        with status ``timed_out``.  No-op when the caller runs clockless."""
+        if now_v is None:
+            return
+        expired = [r for r in self.queue
+                   if r.deadline is not None and r.deadline <= now_v]
+        if expired:
+            gone = set(map(id, expired))
+            self.queue = collections.deque(
+                r for r in self.queue if id(r) not in gone)
+        freed = []
+        for s, r in enumerate(self.slots):
+            if r is not None and r.deadline is not None \
+                    and r.deadline <= now_v:
+                expired.append(r)
+                freed.append(s)
+        for r in expired:
+            self._retire(r, "timed_out", now_v)
+            self.stats["timed_out"] += 1
+        if freed:
+            self._free_on_device(freed)
+
+    def _shed_overload(self, now_v) -> None:
+        """Deterministic admission control: when the page pool (or, dense,
+        the slot map) saturates past ``shed_watermark`` and more than
+        ``overload_queue`` requests wait, shed the excess — lowest priority
+        first, then least deadline slack (it was going to miss anyway),
+        then latest submitted.  Same state + same watermark => same shed
+        set, replayable bit-for-bit."""
+        if self.shed_watermark is None or not self.queue:
+            return
+        if self.engine.paged:
+            saturation = self.engine.pool.saturation
+        else:
+            saturation = sum(r is not None for r in self.slots) / self.n_slots
+        if saturation < self.shed_watermark:
+            return
+        excess = len(self.queue) - self.overload_queue
+        if excess <= 0:
+            return
+        order = sorted(self.queue,
+                       key=lambda r: (r.priority, r.slack(now_v),
+                                      -getattr(r, "_seq", 0)))
+        victims = set(map(id, order[:excess]))
+        self.queue = collections.deque(
+            r for r in self.queue if id(r) not in victims)
+        for r in order[:excess]:
+            self._retire(r, "shed", now_v)
+            self.stats["shed"] += 1
+
+    # -- snapshot / restore / crash recovery ----------------------------------
+
+    def snapshot(self) -> dict:
+        """Host-side copy of the COMPLETE serving state: decode caches,
+        slot vectors, sampling mirrors, PRNG step, queue/slot request
+        states, page-pool allocator, telemetry.  Everything a restore needs
+        to replay token-identically; per-request ``retries`` deliberately
+        stays OUT (it must survive restores, or the retry bound would reset
+        with every recovery)."""
+        reqs = [r for r in self.queue] + \
+               [r for r in self.slots if r is not None]
+        return {
+            "cache": ckpt_lib.tree_to_host(self.cache),
+            "tok": np.asarray(self.tok), "pos": np.asarray(self.pos),
+            "done": np.asarray(self.done),
+            "eos_h": list(self._eos_h), "temp_h": list(self._temp_h),
+            "topk_h": list(self._topk_h), "topp_h": list(self._topp_h),
+            "step": self._step,
+            "admit_seq": list(self._admit_seq),
+            "admit_counter": self._admit_counter,
+            "queue": list(self.queue),
+            "slots": list(self.slots),
+            "finished_len": len(self.finished),
+            "req_state": [(r, r.status, list(r.tokens), r.finish_reason,
+                           r.finish_time, r.slot) for r in reqs],
+            "pool": (self.engine.pool.state_dict()
+                     if self.engine.paged else None),
+            "stats": dict(self.stats),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Reinstate a :meth:`snapshot` — device state re-placed through the
+        engine (sharded placements pinned, so executors never retrace),
+        request objects mutated back in place, allocator reloaded.
+        Requests submitted AFTER the snapshot rejoin the queue tail in
+        submit order, so recovery never drops a submission."""
+        eng = self.engine
+        self.cache = eng.place_cache(snap["cache"])
+        self.tok = eng.place_slot_state(jnp.asarray(snap["tok"]))
+        self.pos = eng.place_slot_state(jnp.asarray(snap["pos"]))
+        self.done = eng.place_slot_state(jnp.asarray(snap["done"]))
+        self._eos_h = list(snap["eos_h"])
+        self._temp_h = list(snap["temp_h"])
+        self._topk_h = list(snap["topk_h"])
+        self._topp_h = list(snap["topp_h"])
+        self._push_sampling_state()
+        self._step = snap["step"]
+        self._admit_seq = list(snap["admit_seq"])
+        self._admit_counter = snap["admit_counter"]
+        self.queue = collections.deque(snap["queue"])
+        self.slots = list(snap["slots"])
+        del self.finished[snap["finished_len"]:]
+        for r, status, toks, reason, ftime, slot in snap["req_state"]:
+            r.status = status
+            r.tokens = list(toks)
+            r.finish_reason = reason
+            r.finish_time = ftime
+            r.slot = slot
+        if snap["pool"] is not None:
+            eng.pool.load_state(snap["pool"])
+        self.stats = dict(snap["stats"])
+        for r in self._submit_log:       # post-snapshot submissions survive
+            r.status = RequestStatus.QUEUED
+            r.tokens = []
+            r.finish_reason = None
+            r.finish_time = None
+            r.slot = None
+            self.queue.append(r)
+
+    def _recover(self, err: EngineFault, now_v) -> None:
+        """Bounded-retry fault recovery.  Dispatch failures already rolled
+        back locally — count and re-dispatch next round.  Corruption
+        restores the rolling snapshot, charges one retry to every
+        in-flight request, and drops (status ``failed``) any that crossed
+        ``max_retries`` — deterministic, since the charge set and the
+        restore are both functions of the replayed state."""
+        self._retries_since_progress += 1
+        if self._retries_since_progress > self.max_retries:
+            raise err
+        if isinstance(err, InjectedFault):
+            self.stats["recoveries"] += 1
+            self.stats["dispatch_retries"] += 1
+            return
+        if self._snap is None:
+            raise RuntimeError(
+                "corrupted serving state detected but snapshots are "
+                "disabled — construct Scheduler(snapshot_interval=1) to "
+                "enable recovery") from err
+        affected = [r for r in self.slots if r is not None]
+        self.restore(self._snap)     # also rewinds stats to the snapshot
+        self.stats["recoveries"] += 1
+        for r in affected:
+            r.retries += 1
+            if r.retries > self.max_retries:
+                # Request is a value-eq dataclass: filter by IDENTITY
+                if any(q is r for q in self.queue):
+                    self.queue = collections.deque(
+                        q for q in self.queue if q is not r)
+                if r.slot is not None and self.slots[r.slot] is r:
+                    self._free_on_device([r.slot])
+                self._retire(r, "failed", now_v)
+                self.stats["failed"] += 1
+
+    def save(self, ckpt_dir: str, step: Optional[int] = None):
+        """Write the whole serving state as a committed ``ckpt.checkpoint``
+        (atomic dir, msgpack+zstd arrays, JSON manifest): the crash-
+        recovery path.  Streaming callbacks (``on_token``) are process-
+        local and are NOT serialized — a restored request streams only
+        from its restore point on."""
+        tree = {"cache": self.cache, "tok": self.tok, "pos": self.pos,
+                "done": self.done}
+        recs = {
+            "queue": [_req_record(r) for r in self.queue],
+            "slots": [None if r is None else _req_record(r)
+                      for r in self.slots],
+            "finished": [_req_record(r) for r in self.finished],
+        }
+        extra = {"serving": {
+            "step": self._step, "ticks": self._ticks,
+            "eos_h": self._eos_h, "temp_h": self._temp_h,
+            "topk_h": self._topk_h, "topp_h": self._topp_h,
+            "admit_seq": self._admit_seq,
+            "admit_counter": self._admit_counter,
+            "submit_count": self._submit_count,
+            "stats": self.stats,
+            "pool": (self.engine.pool.state_dict()
+                     if self.engine.paged else None),
+            "geometry": {"slots": self.n_slots, "chunk": self.chunk,
+                         "max_len": self.engine.scfg.max_len,
+                         "paged": self.engine.paged},
+            **recs,
+        }}
+        return ckpt_lib.save(ckpt_dir, self._ticks if step is None
+                               else step, tree, extra=extra)
+
+    def load(self, ckpt_dir: str, step: Optional[int] = None) -> None:
+        """Restore :meth:`save` state into this (freshly constructed)
+        scheduler — same engine config / slot count / chunk.  Requests are
+        rebuilt as new ``Request`` objects (find them in ``queue`` /
+        ``slots`` / ``finished``); decode then continues token-identically
+        to the uninterrupted run."""
+        tree = {"cache": self.cache, "tok": self.tok, "pos": self.pos,
+                "done": self.done}
+        restored, extra = ckpt_lib.restore(
+            ckpt_dir, tree, step=step,
+            shardings=self.engine.serving_state_shardings())
+        s = extra["serving"]
+        geo = s["geometry"]
+        if (geo["slots"], geo["chunk"], geo["max_len"], geo["paged"]) != \
+                (self.n_slots, self.chunk, self.engine.scfg.max_len,
+                 self.engine.paged):
+            raise ValueError(
+                f"serving-checkpoint geometry {geo} does not match this "
+                "scheduler/engine")
+        self.cache = self.engine.place_cache(restored["cache"])
+        self.tok = self.engine.place_slot_state(restored["tok"])
+        self.pos = self.engine.place_slot_state(restored["pos"])
+        self.done = self.engine.place_slot_state(restored["done"])
+        self._eos_h = list(s["eos_h"])
+        self._temp_h = list(s["temp_h"])
+        self._topk_h = list(s["topk_h"])
+        self._topp_h = list(s["topp_h"])
+        self._push_sampling_state()
+        self._step = s["step"]
+        self._ticks = s["ticks"]
+        self._admit_seq = list(s["admit_seq"])
+        self._admit_counter = s["admit_counter"]
+        self._submit_count = s["submit_count"]
+        self.stats = dict(s["stats"])
+        if s["pool"] is not None:
+            self.engine.pool.load_state(s["pool"])
+        self.queue = collections.deque(
+            _req_from_record(d) for d in s["queue"])
+        self.slots = [None if d is None else _req_from_record(d)
+                      for d in s["slots"]]
+        self.finished = [_req_from_record(d) for d in s["finished"]]
+
     # -- the scheduling loop -------------------------------------------------
 
     @property
@@ -326,30 +669,56 @@ class Scheduler:
         return self.stats["occupancy_sum"] / n if n else 0.0
 
     def step(self, now=None) -> int:
-        """One scheduling round: admit into free slots, decode one chunk,
-        retire finished sequences.  Returns the number of useful tokens
-        emitted this round."""
+        """One scheduling round: expire deadlines, shed overload, (maybe)
+        snapshot, admit into free slots, decode one chunk, retire finished
+        sequences.  Returns the number of useful tokens emitted this round
+        (0 on a recovered fault — the retry replays next round)."""
+        now_v = now() if callable(now) else now
+        self._expire_deadlines(now_v)
+        self._shed_overload(now_v)
+        if self.snapshot_interval and \
+                self._ticks % self.snapshot_interval == 0:
+            self._snap = self.snapshot()
+            self._submit_log.clear()
+        self._ticks += 1
+        try:
+            emitted = self._step_inner(now, now_v)
+        except EngineFault as err:
+            self._recover(err, now_v)
+            return 0
+        self._retries_since_progress = 0
+        return emitted
+
+    def _step_inner(self, now, now_v) -> int:
         self._admit(now)
         if not any(r is not None for r in self.slots):
             return 0
         if self.engine.paged:
             # block accounting: map pages for the chunk ahead; preempts
-            # youngest-first when the pool is exhausted
-            self._ensure_chunk_pages()
+            # most-slack/youngest-first when the pool is exhausted
+            self._ensure_chunk_pages(now_v)
             if not any(r is not None for r in self.slots):
                 return 0
-        self.stats["rounds"] += 1
-        self.stats["occupancy_sum"] += (
-            sum(r is not None for r in self.slots) / self.n_slots)
         # host mirrors let us pick the argmax-only decode variant statically
         greedy = all(t <= 0.0 and k == 0 and p >= 1.0 for t, k, p in
                      zip(self._temp_h, self._topk_h, self._topp_h))
         (self.cache, self.tok, self.pos, self.done, toks,
-         dones) = self.engine.decode_chunk(
+         dones, ok) = self.engine.decode_chunk(
             self.cache, self.tok, self.pos, self.done, self.eos,
             self.temperature, self.top_k, self.top_p, self._step, self.chunk,
             greedy=greedy)
         self._step += self.chunk
+        if self.engine.scfg.guards:
+            ok_h = np.asarray(ok)
+            if not ok_h.all():
+                # poisoned logits never reach a streaming callback:
+                # detection precedes every emit below
+                raise CacheCorruption(
+                    "non-finite logits in decode for slots "
+                    f"{np.flatnonzero(~ok_h).tolist()}")
+        self.stats["rounds"] += 1
+        self.stats["occupancy_sum"] += (
+            sum(r is not None for r in self.slots) / self.n_slots)
         toks_h, dones_h = np.asarray(toks), np.asarray(dones)
         if callable(now):      # stamp finish times after the chunk completed
             now = now()
@@ -378,6 +747,18 @@ class Scheduler:
         self.stats["emitted_tokens"] += emitted
         return emitted
 
+    def check_drained(self) -> None:
+        """Leak telemetry at drain: with no work left, the page pool must
+        hold ZERO allocated pages outside the reserved null pages, and no
+        page may be referenced without a slot mapping reaching it."""
+        if self.has_work or not self.engine.paged:
+            return
+        pool = self.engine.pool
+        leaked = pool.leaked_pages()
+        assert pool.allocated_pages == 0 and not leaked, (
+            f"page leak at drain: {pool.allocated_pages} pages still "
+            f"allocated, unreachable={leaked}")
+
     def run(self, requests: Sequence[Request] = (), now=None,
             max_rounds: int = 100_000) -> List[Request]:
         """Submit ``requests`` and drive rounds until everything finishes."""
@@ -390,4 +771,35 @@ class Scheduler:
             if rounds > max_rounds:
                 raise RuntimeError("scheduler failed to drain "
                                    f"({len(self.queue)} queued)")
+        if self.engine.scfg.guards:
+            self.check_drained()
         return self.finished
+
+
+def _req_record(r: Request) -> dict:
+    """JSON-able snapshot of one request (``on_token`` dropped)."""
+    return {"prompt": [int(t) for t in r.prompt],
+            "max_new_tokens": r.max_new_tokens,
+            "eos_id": r.eos_id, "temperature": r.temperature,
+            "top_k": r.top_k, "top_p": r.top_p,
+            "deadline": r.deadline, "priority": r.priority,
+            "status": r.status.value, "tokens": list(r.tokens),
+            "finish_reason": r.finish_reason, "slot": r.slot,
+            "arrival_time": r.arrival_time, "finish_time": r.finish_time,
+            "retries": r.retries, "seq": getattr(r, "_seq", 0)}
+
+
+def _req_from_record(d: dict) -> Request:
+    r = Request(prompt=d["prompt"], max_new_tokens=d["max_new_tokens"],
+                eos_id=d["eos_id"], temperature=d["temperature"],
+                top_k=d["top_k"], top_p=d["top_p"],
+                deadline=d["deadline"], priority=d["priority"])
+    r.status = RequestStatus(d["status"])
+    r.tokens = list(d["tokens"])
+    r.finish_reason = d["finish_reason"]
+    r.slot = d["slot"]
+    r.arrival_time = d["arrival_time"]
+    r.finish_time = d["finish_time"]
+    r.retries = d["retries"]
+    r._seq = d["seq"]
+    return r

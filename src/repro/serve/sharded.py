@@ -127,7 +127,8 @@ class ShardedEngine(Engine):
             # page tables + start_tok split with the slots they describe
             # (table VALUES are shard-local page ids)
             in_specs += (d, d, d)
-        out_specs = (self._cache_specs, d, d, d, d, d)
+        out_specs = (self._cache_specs, d, d, d, d, d,
+                     d)                              # ok0 finite-logits guard
         return self._shard_jit(self._admit_impl, in_specs, out_specs)
 
     def _build_scan_fn(self, chunk: int, greedy: bool):
@@ -139,7 +140,8 @@ class ShardedEngine(Engine):
         if self.scfg.paged:
             in_specs += (d, d)                      # full + ring page tables
         out_specs = (self._cache_specs, d, d, d,
-                     d, d)                # tokens/dones [slots, chunk]
+                     d, d,                # tokens/dones [slots, chunk]
+                     d)                   # ok finite-logits guard
         return self._shard_jit(self._make_decode_scan(chunk, greedy),
                                in_specs, out_specs)
 
@@ -157,6 +159,18 @@ class ShardedEngine(Engine):
 
     def place_slot_state(self, x):
         return jax.device_put(x, NamedSharding(self.mesh, self._dspec))
+
+    def place_cache(self, cache):
+        """Re-pin a host-restored cache tree onto the canonical cache
+        shardings (restores never change the executors' input signature)."""
+        return jax.device_put(cache, jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), self._cache_specs))
+
+    def serving_state_shardings(self):
+        dsh = NamedSharding(self.mesh, self._dspec)
+        return {"cache": jax.tree_util.tree_map(
+                    lambda s: NamedSharding(self.mesh, s), self._cache_specs),
+                "tok": dsh, "pos": dsh, "done": dsh}
 
     def kv_cache_bytes(self, batch: int) -> int:
         """PER-SHARD bytes of the attention KV leaves: the data axis splits

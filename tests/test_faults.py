@@ -1,0 +1,266 @@
+"""Fault injection + recovery differentials.
+
+The contract under test: for EVERY FaultPlan category (NaN logits, page-table
+corruption, dispatch failure, host stall), a scheduler with snapshots enabled
+recovers such that every non-shed request's transcript is token-identical to
+the fault-free run — on the single-device Engine, the paged engine, and the
+2x2 ShardedEngine.  Plus the guard units: corruption is DETECTED (not served),
+poisoned tokens never reach streaming callbacks, retry bounds drop requests
+deterministically, and recovery without snapshots fails loudly.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve import Engine, Request, Scheduler, ServeConfig
+from repro.serve.faults import (CacheCorruption, Fault, FaultPlan,
+                                InjectedFault, KINDS)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _engine(arch="qwen2-7b", max_len=32, **scfg):
+    cfg = dataclasses.replace(configs.get_config(arch, smoke=True),
+                              compute_dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params, Engine(cfg, params,
+                               ServeConfig(max_len=max_len, **scfg))
+
+
+def _reqs(cfg, n=4, S=5, budget=6):
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (n, S), 0, cfg.vocab)
+    return [Request(prompt=np.asarray(prompts[i]).tolist(),
+                    max_new_tokens=budget) for i in range(n)]
+
+
+def _transcripts(reqs):
+    return [(r.finish_reason, list(r.tokens)) for r in reqs]
+
+
+def _run(eng, cfg, plan=None, **sched_kw):
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact",
+                      **sched_kw)
+    eng.set_fault_plan(plan)
+    reqs = _reqs(cfg)
+    try:
+        sched.run(reqs, max_rounds=64)
+    finally:
+        eng.set_fault_plan(None)
+    return sched, _transcripts(reqs)
+
+
+# ---------------------------------------------------------------------------
+# the differential: every category, dense and paged, vs the fault-free run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("site", ["admit", "decode"])
+def test_single_fault_differential_dense(kind, site):
+    cfg, params, eng = _engine()
+    _, want = _run(eng, cfg)
+    plan = FaultPlan([Fault(site=site, index=1, kind=kind, duration=0.001)])
+    sched, got = _run(eng, cfg, plan, snapshot_interval=1, max_retries=3)
+    assert got == want
+    assert not plan.pending
+    if kind in ("dispatch",) or (kind == "nan_logits"
+                                 and not plan.faults[0].skipped):
+        assert sched.stats["recoveries"] >= 1
+    if kind == "page_table":                 # dense engine: no pool to corrupt
+        assert plan.faults[0].skipped
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_single_fault_differential_paged(kind):
+    cfg, params, eng = _engine(paged=True, page_size=4)
+    _, want = _run(eng, cfg)
+    plan = FaultPlan([Fault(site="decode", index=1, kind=kind,
+                            duration=0.001)])
+    sched, got = _run(eng, cfg, plan, snapshot_interval=1, max_retries=3)
+    assert got == want
+    assert not plan.pending and not plan.faults[0].skipped
+    if kind in ("nan_logits", "page_table", "dispatch"):
+        assert sched.stats["recoveries"] >= 1
+
+
+def test_seeded_chaos_plan_differential():
+    """A multi-fault random plan (seed from REPRO_FAULT_SEED — the chaos CI
+    job sweeps it) still converges to the fault-free transcripts."""
+    seed = int(os.environ.get("REPRO_FAULT_SEED", "0"))
+    cfg, params, eng = _engine(paged=True, page_size=4)
+    _, want = _run(eng, cfg)
+    plan = FaultPlan.random(seed, n=4, max_index=8, slots=2, duration=0.001)
+    sched, got = _run(eng, cfg, plan, snapshot_interval=1, max_retries=8)
+    assert got == want
+    # faults drawn past the run's dispatch count legitimately never fire;
+    # everything that came due must have been consumed
+    assert all(f.index >= plan.counters[f.site] for f in plan.pending)
+
+
+# ---------------------------------------------------------------------------
+# detection guards
+# ---------------------------------------------------------------------------
+
+def test_nan_poison_is_detected_not_served():
+    """Without recovery (snapshots off), the finite-logits guard must FAIL
+    the run rather than serve argmax-of-NaN tokens."""
+    cfg, params, eng = _engine()
+    plan = FaultPlan([Fault(site="decode", index=1, kind="nan_logits")])
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    eng.set_fault_plan(plan)
+    try:
+        with pytest.raises(RuntimeError, match="snapshot"):
+            sched.run(_reqs(cfg), max_rounds=64)
+    finally:
+        eng.set_fault_plan(None)
+
+
+def test_page_table_corruption_caught_by_pool_audit():
+    cfg, params, eng = _engine(paged=True, page_size=4)
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    plan = FaultPlan([Fault(site="decode", index=1, kind="page_table")])
+    eng.set_fault_plan(plan)
+    try:
+        with pytest.raises(RuntimeError, match="snapshot"):
+            sched.run(_reqs(cfg), max_rounds=64)
+    finally:
+        eng.set_fault_plan(None)
+
+
+def test_streaming_callbacks_never_see_poisoned_tokens():
+    """Detection precedes emission: the token streams of a faulted run are
+    exactly the fault-free streams even though a NaN round executed."""
+    cfg, params, eng = _engine()
+    clean = []
+    reqs = _reqs(cfg)
+    for r in reqs:
+        r.on_token = lambda rq, t: clean.append((id(rq), t))
+    Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact").run(
+        reqs, max_rounds=64)
+    streamed = []
+    reqs2 = _reqs(cfg)
+    pairs = {id(r2): id(r1) for r1, r2 in zip(reqs, reqs2)}
+    for r in reqs2:
+        r.on_token = lambda rq, t: streamed.append((pairs[id(rq)], t))
+    eng.set_fault_plan(FaultPlan([Fault(site="decode", index=1,
+                                        kind="nan_logits")]))
+    try:
+        Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact",
+                  snapshot_interval=1).run(reqs2, max_rounds=64)
+    finally:
+        eng.set_fault_plan(None)
+    # at-least-once delivery: replays may repeat a prefix, but every stream
+    # is a sequence of prefixes of the clean stream — no foreign token ever
+    by_req_clean, by_req = {}, {}
+    for k, t in clean:
+        by_req_clean.setdefault(k, []).append(t)
+    for k, t in streamed:
+        by_req.setdefault(k, []).append(t)
+    for k, toks in by_req.items():
+        want = by_req_clean[k]
+        # the final len(want) tokens must be the clean stream, and every
+        # streamed token must appear at a valid replay offset
+        assert toks[-len(want):] == want
+
+
+def test_retry_bound_drops_request_as_failed():
+    """Corruption recurring past max_retries fails the in-flight requests
+    deterministically instead of retrying forever."""
+    cfg, params, eng = _engine()
+    # three NaN faults at well-separated decode indices: each fires in its
+    # own round, so the global retries-since-progress counter resets between
+    # them while the per-request retry count accumulates to the bound
+    plan = FaultPlan([Fault(site="decode", index=i, kind="nan_logits")
+                      for i in (1, 3, 5)])
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact",
+                      snapshot_interval=1, max_retries=2)
+    reqs = _reqs(cfg, n=2, budget=10)
+    eng.set_fault_plan(plan)
+    try:
+        sched.run(reqs, max_rounds=64)
+    finally:
+        eng.set_fault_plan(None)
+    assert sched.stats["recoveries"] == 3
+    assert sched.stats["failed"] == 2
+    assert all(r.finish_reason == "failed" and r.retries > 2 for r in reqs)
+
+
+def test_dispatch_fault_rolls_back_admission_atomically():
+    """An injected admit failure releases the candidates' pages and requeues
+    them in order — the retry admits an identical round."""
+    cfg, params, eng = _engine(paged=True, page_size=4)
+    _, want = _run(eng, cfg)
+    plan = FaultPlan([Fault(site="admit", index=0, kind="dispatch")])
+    sched, got = _run(eng, cfg, plan, snapshot_interval=1)
+    assert got == want
+    assert sched.stats["dispatch_retries"] == 1
+
+
+def test_fault_plan_seeded_reproducibility():
+    a = FaultPlan.random(7, n=5)
+    b = FaultPlan.random(7, n=5)
+    assert [(f.site, f.index, f.kind, f.slot) for f in a.faults] == \
+           [(f.site, f.index, f.kind, f.slot) for f in b.faults]
+    c = FaultPlan.random(8, n=5)
+    assert [(f.site, f.index, f.kind) for f in a.faults] != \
+           [(f.site, f.index, f.kind) for f in c.faults]
+
+
+# ---------------------------------------------------------------------------
+# sharded 2x2 differential (subprocess: needs 4+ fake CPU devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_fault_differential_subprocess():
+    script = textwrap.dedent("""
+        import dataclasses, jax, numpy as np
+        from jax.sharding import Mesh
+        from repro import configs
+        from repro.models import transformer as T
+        from repro.serve import Request, Scheduler, ServeConfig, ShardedEngine
+        from repro.serve.faults import Fault, FaultPlan
+
+        cfg = dataclasses.replace(configs.get_config("qwen2-7b", smoke=True),
+                                  compute_dtype="float32")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                    ("data", "model"))
+        scfg = ServeConfig(max_len=32, quant="w4a4_lut", paged=True,
+                           page_size=4)
+
+        def run(plan):
+            eng = ShardedEngine(cfg, params, scfg, mesh=mesh)
+            sched = Scheduler(eng, slots=4, chunk=2, prompt_bucket="exact",
+                              snapshot_interval=1, max_retries=6)
+            eng.set_fault_plan(plan)
+            prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 5), 0,
+                                         cfg.vocab)
+            reqs = [Request(prompt=np.asarray(prompts[i]).tolist(),
+                            max_new_tokens=6) for i in range(4)]
+            sched.run(reqs, max_rounds=64)
+            return sched, [(r.finish_reason, list(r.tokens)) for r in reqs]
+
+        _, want = run(None)
+        for kind in ("nan_logits", "page_table", "dispatch", "stall"):
+            plan = FaultPlan([Fault(site="decode", index=1, kind=kind,
+                                    duration=0.001)])
+            sched, got = run(plan)
+            assert got == want, (kind, got, want)
+            assert not plan.pending
+            if kind != "stall":
+                assert sched.stats["recoveries"] >= 1, kind
+        print("SHARDED_FAULTS_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SHARDED_FAULTS_OK" in out.stdout

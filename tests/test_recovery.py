@@ -1,0 +1,346 @@
+"""Crash recovery: serving-state checkpoints round-trip mid-stream.
+
+A scheduler saved mid-decode and loaded into a FRESH engine + scheduler (and,
+in the subprocess variant, a fresh process) must continue every in-flight
+request token-identically to the uninterrupted run — dense and paged engines,
+gemma2 SWA ring caches, int8-quantized KV, and the page-pool allocator +
+prefix registry all included.  Plus the deadline / shedding / validation
+satellites: logical-time expiry, deterministic shed sets, slack-aware
+preemption ordering, submit rejection, and drain leak telemetry.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve import Engine, Request, Scheduler, ServeConfig
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _make(arch="qwen2-7b", max_len=32, kv_quant=None, **scfg):
+    cfg = dataclasses.replace(configs.get_config(arch, smoke=True),
+                              compute_dtype="float32")
+    if kv_quant is not None:
+        cfg = dataclasses.replace(cfg, kv_quant=kv_quant)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params, ServeConfig(max_len=max_len, **scfg)
+
+
+def _reqs(cfg, n=4, S=5, budget=8):
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (n, S), 0, cfg.vocab)
+    return [Request(prompt=np.asarray(prompts[i]).tolist(),
+                    max_new_tokens=budget) for i in range(n)]
+
+
+def _drain(sched, max_rounds=64):
+    rounds = 0
+    while sched.has_work:
+        sched.step()
+        rounds += 1
+        assert rounds <= max_rounds
+    return [(r.finish_reason, list(r.tokens)) for r in
+            (list(sched.finished) + [r for r in sched.slots if r])]
+
+
+# ---------------------------------------------------------------------------
+# disk save/load round-trips (fresh engine + scheduler)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,scfg_kw,kv_quant", [
+    ("qwen2-7b", {}, None),
+    ("qwen2-7b", {"paged": True, "page_size": 4}, None),
+    ("gemma2-2b", {}, None),                       # SWA ring caches
+    ("qwen2-7b", {}, "int8"),                      # quantized KV + scales
+])
+def test_save_load_continues_token_identically(tmp_path, arch, scfg_kw,
+                                               kv_quant):
+    cfg, params, scfg = _make(arch, kv_quant=kv_quant, **scfg_kw)
+    reqs = _reqs(cfg)
+
+    # uninterrupted reference
+    eng = Engine(cfg, params, scfg)
+    ref = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    for r in _reqs(cfg):
+        ref.submit(r)
+    want = sorted(_drain(ref))
+
+    # interrupted: a few rounds, save mid-stream, "crash"
+    eng_a = Engine(cfg, params, scfg)
+    a = Scheduler(eng_a, slots=2, chunk=2, prompt_bucket="exact")
+    for r in reqs:
+        a.submit(r)
+    a.step()
+    a.step()
+    assert a.has_work                   # genuinely mid-stream
+    a.save(str(tmp_path))
+
+    # fresh engine + scheduler (new params object, new executors)
+    eng_b = Engine(cfg, T.init_params(jax.random.PRNGKey(0), cfg), scfg)
+    b = Scheduler(eng_b, slots=2, chunk=2, prompt_bucket="exact")
+    b.load(str(tmp_path))
+    got = sorted(_drain(b))
+    assert got == want
+
+
+def test_save_load_roundtrips_pool_allocator(tmp_path):
+    """The paged allocator (tables, rings, free lists, refcounts, prefix
+    registry, stats) survives the disk round-trip exactly."""
+    cfg, params, scfg = _make(paged=True, page_size=4)
+    eng = Engine(cfg, params, scfg)
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    for r in _reqs(cfg):
+        sched.submit(r)
+    sched.step()
+    sched.step()
+    state_a = eng.pool.state_dict()
+    sched.save(str(tmp_path))
+    eng2 = Engine(cfg, params, scfg)
+    b = Scheduler(eng2, slots=2, chunk=2, prompt_bucket="exact")
+    b.load(str(tmp_path))
+    assert eng2.pool.state_dict() == state_a
+    assert eng2.pool.validate() == []
+
+
+def test_load_rejects_geometry_mismatch(tmp_path):
+    cfg, params, scfg = _make()
+    eng = Engine(cfg, params, scfg)
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched.submit(_reqs(cfg, n=1)[0])
+    sched.step()
+    sched.save(str(tmp_path))
+    other = Scheduler(Engine(cfg, params, scfg), slots=4, chunk=2)
+    with pytest.raises(ValueError, match="geometry"):
+        other.load(str(tmp_path))
+
+
+@pytest.mark.slow
+def test_save_load_fresh_process_subprocess(tmp_path):
+    """The full crash-recovery story: save in process A, restore in a brand
+    new process B, continue token-identically (paged engine)."""
+    common = textwrap.dedent("""
+        import dataclasses, jax, numpy as np
+        from repro import configs
+        from repro.models import transformer as T
+        from repro.serve import Engine, Request, Scheduler, ServeConfig
+        cfg = dataclasses.replace(configs.get_config("qwen2-7b", smoke=True),
+                                  compute_dtype="float32")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        scfg = ServeConfig(max_len=32, paged=True, page_size=4)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 5), 0,
+                                     cfg.vocab)
+        reqs = [Request(prompt=np.asarray(prompts[i]).tolist(),
+                        max_new_tokens=8) for i in range(4)]
+        def drain(s):
+            while s.has_work:
+                s.step()
+            return sorted((r.finish_reason, tuple(r.tokens))
+                          for r in s.finished)
+    """)
+    save_script = common + textwrap.dedent(f"""
+        ref = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2,
+                        prompt_bucket="exact")
+        for r in [Request(prompt=list(r.prompt), max_new_tokens=8)
+                  for r in reqs]:
+            ref.submit(r)
+        print("WANT", drain(ref))
+        s = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2,
+                      prompt_bucket="exact")
+        for r in reqs:
+            s.submit(r)
+        s.step(); s.step()
+        assert s.has_work
+        s.save({str(tmp_path)!r})
+        print("SAVED_OK")
+    """)
+    load_script = common + textwrap.dedent(f"""
+        s = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2,
+                      prompt_bucket="exact")
+        s.load({str(tmp_path)!r})
+        done = drain(s)
+        print("GOT", done)
+        print("LOADED_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    a = subprocess.run([sys.executable, "-c", save_script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert a.returncode == 0 and "SAVED_OK" in a.stdout, a.stderr[-4000:]
+    b = subprocess.run([sys.executable, "-c", load_script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert b.returncode == 0 and "LOADED_OK" in b.stdout, b.stderr[-4000:]
+    want = next(l for l in a.stdout.splitlines() if l.startswith("WANT"))
+    got = next(l for l in b.stdout.splitlines() if l.startswith("GOT"))
+    assert want.split(" ", 1)[1] == got.split(" ", 1)[1]
+
+
+def test_host_snapshot_restore_is_exact():
+    """The in-memory rolling snapshot restores device state, request state,
+    and the allocator bit-exactly (the fault-recovery primitive)."""
+    cfg, params, scfg = _make(paged=True, page_size=4)
+    eng = Engine(cfg, params, scfg)
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    reqs = _reqs(cfg)
+    for r in reqs:
+        sched.submit(r)
+    sched.step()
+    snap = sched.snapshot()
+    mid = [(r.status, list(r.tokens)) for r in reqs]
+    pool_mid = eng.pool.state_dict()
+    want = sorted(_drain(sched))
+    # everything mutated since the snapshot rewinds
+    sched.restore(snap)
+    assert [(r.status, list(r.tokens)) for r in reqs] == mid
+    assert eng.pool.state_dict() == pool_mid
+    assert sorted(_drain(sched)) == want
+
+
+# ---------------------------------------------------------------------------
+# deadlines / shedding / preemption satellites (logical time throughout)
+# ---------------------------------------------------------------------------
+
+def test_deadline_expiry_queued_and_running():
+    cfg, params, scfg = _make()
+    eng = Engine(cfg, params, scfg)
+    sched = Scheduler(eng, slots=1, chunk=2, prompt_bucket="exact")
+    r_run = Request(prompt=[1, 2, 3], max_new_tokens=12, deadline=5.0)
+    r_q = Request(prompt=[4, 5, 6], max_new_tokens=4, deadline=1.0)
+    sched.submit(r_run, now=0.0)
+    sched.submit(r_q, now=0.0)
+    sched.step(now=0.0)                  # r_run admitted, r_q queued
+    assert r_run.status.value == "running"
+    sched.step(now=2.0)                  # r_q's deadline passed while queued
+    assert r_q.status.value == "timed_out" and r_q.tokens == []
+    sched.step(now=6.0)                  # r_run expires mid-decode
+    assert r_run.status.value == "timed_out"
+    assert 0 < len(r_run.tokens) < 12    # partial transcript retained
+    assert r_run.finish_time == 6.0
+    assert not sched.has_work
+    assert sched.stats["timed_out"] == 2
+
+
+def test_clockless_run_never_expires():
+    cfg, params, scfg = _make()
+    sched = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2,
+                      prompt_bucket="exact")
+    req = Request(prompt=[1, 2, 3], max_new_tokens=4, deadline=0.5)
+    sched.run([req])                     # no now= anywhere
+    assert req.finish_reason == "length" and len(req.tokens) == 4
+
+
+def test_shedding_is_deterministic_and_priority_ordered():
+    """Saturated slots + overlong queue: the shed set is exactly the lowest
+    (priority, slack, -submit order) tail, and two identical runs shed the
+    identical set."""
+    def run_once():
+        cfg, params, scfg = _make()
+        sched = Scheduler(Engine(cfg, params, scfg), slots=1, chunk=2,
+                          prompt_bucket="exact", shed_watermark=1.0,
+                          overload_queue=2)
+        keep = Request(prompt=[1, 2, 3], max_new_tokens=8)
+        sched.submit(keep, now=0.0)
+        sched.step(now=0.0)              # slot saturated
+        waiting = [Request(prompt=[10 + i, 2, 3], max_new_tokens=2,
+                           priority=p, deadline=d)
+                   for i, (p, d) in enumerate(
+                       [(1, None), (0, 9.0), (0, 3.0), (1, 2.0)])]
+        for r in waiting:
+            sched.submit(r, now=1.0)
+        sched.step(now=1.0)              # 4 queued > overload_queue=2
+        return [r.status.value for r in waiting]
+    got = run_once()
+    # shed 2: priority-0 requests go first, least slack first
+    assert got == ["queued", "shed", "shed", "queued"]
+    assert run_once() == got             # deterministic replay
+
+
+def test_no_shedding_below_watermark():
+    cfg, params, scfg = _make()
+    sched = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2,
+                      prompt_bucket="exact", shed_watermark=1.0,
+                      overload_queue=1)
+    reqs = _reqs(cfg, n=6, budget=3)
+    for r in reqs:
+        sched.submit(r, now=0.0)
+    while sched.has_work:
+        sched.step(now=0.0)
+    assert all(r.finish_reason == "length" for r in reqs[:2])
+    assert sched.stats["shed"] < 6       # below-watermark rounds admit
+
+
+def test_preemption_prefers_most_slack_victim():
+    """Pool exhaustion evicts the slot that can best afford the requeue —
+    the one with the MOST deadline slack — not simply the youngest."""
+    cfg, params, scfg = _make(paged=True, page_size=4, num_pages=13)
+    eng = Engine(cfg, params, scfg)
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    # 4 prompt + 24 new = 28 tokens = 7 pages per slot; two slots want 14
+    # pages of the 12 usable (13 minus the null page) — the pool MUST
+    # preempt someone mid-decode
+    tight = Request(prompt=[1, 2, 3, 4], max_new_tokens=24, deadline=100.0)
+    loose = Request(prompt=[5, 6, 7, 8], max_new_tokens=24, deadline=1e6)
+    sched.submit(tight, now=0.0)
+    sched.submit(loose, now=0.0)
+    preempted = []
+    orig = sched._preempt_victim
+
+    def spy(now_v):
+        slot, req = orig(now_v)
+        preempted.append(req)
+        return slot, req
+    sched._preempt_victim = spy
+    while sched.has_work:
+        sched.step(now=0.0)
+    assert preempted and all(r is loose for r in preempted)
+    assert tight.finish_reason == "length" and len(tight.tokens) == 24
+    assert loose.finish_reason == "length" and len(loose.tokens) == 24
+
+
+# ---------------------------------------------------------------------------
+# submit validation + leak telemetry satellites
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_malformed_requests():
+    cfg, params, scfg = _make(max_len=16)
+    sched = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        Request(prompt=[1], max_new_tokens=-1)
+    r = Request(prompt=[1], max_new_tokens=1)
+    r.max_new_tokens = -2                # mutated after construction
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sched.submit(r)
+    with pytest.raises(ValueError, match="prompt length"):
+        sched.submit(Request(prompt=list(range(17)), max_new_tokens=0))
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        sched.submit(Request(prompt=list(range(10)), max_new_tokens=10))
+    with pytest.raises(ValueError, match="deadline"):
+        Request(prompt=[1], deadline=float("nan"))
+    with pytest.raises(ValueError, match="priority"):
+        Request(prompt=[1], priority=float("inf"))
+    r2 = Request(prompt=[1], max_new_tokens=1)
+    r2.deadline = float("inf")
+    with pytest.raises(ValueError, match="deadline"):
+        sched.submit(r2)
+    assert not sched.queue               # nothing malformed got queued
+
+
+def test_drain_leak_telemetry():
+    cfg, params, scfg = _make(paged=True, page_size=4)
+    eng = Engine(cfg, params, scfg)
+    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched.run(_reqs(cfg))
+    assert eng.pool.allocated_pages == 0
+    assert eng.pool.leaked_pages() == []
+    sched.check_drained()                # and the assertion agrees
+    # a synthetic leak IS caught: bump a refcount with no slot mapping
+    eng.pool._shards[0].ref[2] += 1
+    assert eng.pool.leaked_pages() == [(0, 2)]
+    with pytest.raises(AssertionError, match="leak"):
+        sched.check_drained()
+    eng.pool._shards[0].ref[2] -= 1

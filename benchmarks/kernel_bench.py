@@ -93,8 +93,6 @@ def run():
                       .block_until_ready())
     t_ga = _median_ms(lambda: gather(ab_codes, wb_packed)
                       .block_until_ready())
-    if autotune:
-        ops.set_autotune(None)
     yield ("kernel_lutmul_onehot_interpret_256", t_oh * 1e3,
            f"gop_per_call={ab_gops:.3f}")
     yield ("kernel_lutmul_gather_interpret_256", t_ga * 1e3,
@@ -102,11 +100,67 @@ def run():
     yield ("kernel_lutmul_onehot_vs_gather", t_oh * 1e3,
            f"speedup={t_ga / t_oh:.2f}x exact_vs_ref={exact}")
 
-    # fused-epilogue path: quantize + matmul + dequant in one kernel call
+    # ---- dequant epilogue: fused vs unfused, winner recorded --------------
+    # ``quantized_matmul`` consults ``pick_variant`` (cached per op/shape);
+    # the bench seeds that cache with an explicit A/B under autotune so the
+    # committed row's ``derived`` records which variant actually ran — on
+    # interpret hosts the unfused epilogue wins (the fused kernel's VMEM
+    # scratch + in-kernel epilogue cost more than the XLA-fused rescale),
+    # on real pallas the fused path does.  Both are bit-identical.
     xq = jnp.asarray(rng.normal(size=(AB_M, AB_K)), jnp.float32)
     wq = jnp.asarray(rng.normal(size=(AB_K, AB_N)), jnp.float32)
-    fused = jax.jit(lambda x, w: ops.quantized_matmul(
+    if autotune:
+        aq, asc = ops.quantize_activations(xq, 4)
+        wqq, wsc = ops.quantize_weights(wq, 4, pack=True)
+        ops.pick_variant(
+            "lutmul", AB_M, AB_K, AB_N, "interpret",
+            bench_fns={
+                "fused": lambda: ops._fused_lut(
+                    aq.astype(jnp.uint8) & 0xF, wqq, asc, wsc, a_signed=True,
+                    be="interpret",
+                    out_dtype=jnp.float32).block_until_ready(),
+                "unfused": lambda: (
+                    ops.lutmul(aq.astype(jnp.uint8) & 0xF, wqq, a_signed=True,
+                               backend="interpret").astype(jnp.float32)
+                    * asc * wsc).block_until_ready(),
+            })
+    dequant = jax.jit(lambda x, w: ops.quantized_matmul(
         x, w, mode="w4a4_lut", backend="interpret",
         compute_dtype=jnp.float32))
-    yield ("kernel_lutmul_fused_dequant_interpret_256", lambda: fused(
-        xq, wq).block_until_ready(), f"gop_per_call={ab_gops:.3f}")
+    variant = ops.pick_variant("lutmul", AB_M, AB_K, AB_N, "interpret")
+    yield ("kernel_lutmul_fused_dequant_interpret_256", lambda: dequant(
+        xq, wq).block_until_ready(),
+        f"gop_per_call={ab_gops:.3f} variant={variant}")
+
+    # ---- cost-vs-bits curve: tmac scales with planes, one-hot is flat -----
+    # tmac contracts P weight bitplanes against an activation-group table
+    # (MAC cost ~ P * (2^g / g) * K), so w2 halves the w4 work and ternary
+    # sits between w1 and w2; one-hot always contracts the full 4-bit
+    # product table (cost ~ 16K/4 per code = flat in weight bits).  The
+    # sub-4-bit codes are valid int4 codes, so the one-hot rows run the SAME
+    # quantized weights nibble-packed — an apples-to-apples flat reference.
+    from repro.core.lut import decode_planes, unpack_bitplanes
+    ab_signed = jnp.asarray(ab)                   # tmac takes signed codes
+    for spec in (4, 2, "ternary", 1):
+        label = spec if spec == "ternary" else f"w{spec}"
+        planes, _ = ops.quantize_weights_planes(wq, spec)
+        ops.lutmul_tmac(ab_signed, planes, spec, abits=4,
+                        backend="interpret")      # populate the block cache
+        tmac_fn = jax.jit(lambda a, p, s=spec: ops.lutmul_tmac(
+            a, p, s, abits=4, backend="interpret"))
+        dec = decode_planes(unpack_bitplanes(planes), spec)
+        packed = pack_int4((dec.astype(jnp.int8)).T).T
+        oh_fn = jax.jit(lambda a, w: ops.lutmul(a, w, backend="interpret",
+                                                impl="onehot"))
+        n_planes = int(planes.shape[0])
+        yield (f"kernel_lutmul_tmac_{label}_interpret_256",
+               lambda f=tmac_fn, p=planes: f(ab_signed, p)
+               .block_until_ready(),
+               f"gop_per_call={ab_gops:.3f} planes={n_planes}")
+        yield (f"kernel_lutmul_onehot_{label}_interpret_256",
+               lambda f=oh_fn, w=packed: f(ab_codes, w)
+               .block_until_ready(),
+               f"gop_per_call={ab_gops:.3f} planes={n_planes}")
+
+    if autotune:
+        ops.set_autotune(None)

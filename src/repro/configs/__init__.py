@@ -21,6 +21,7 @@ ARCH_IDS = [
     "qwen2_moe_a2p7b",
     "mixtral_8x22b",
     "qwen2_vl_72b",
+    "bitnet_3b",
 ]
 
 # external ids (CLI --arch) -> module names
@@ -36,6 +37,7 @@ ALIASES = {
     "mixtral-8x22b": "mixtral_8x22b",
     "qwen2-vl-72b": "qwen2_vl_72b",
     "mobilenetv2": "mobilenetv2",
+    "bitnet-3b": "bitnet_3b",
 }
 
 

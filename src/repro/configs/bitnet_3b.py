@@ -1,0 +1,34 @@
+"""BitNet-b1.58 3B [arXiv:2402.17764]: LLaMA-shaped ternary-weight LM —
+26L d=3200, 32H (MHA, head_dim 100), SwiGLU d_ff=8640, vocab 32000.
+
+Weights are {-1, 0, +1} at ~1.58 bits with per-channel mean-|w| scales
+(``ops.quantize_weights_planes``), activations int8 per-token — the
+``ternary_a8_tmac`` serving mode.  The tmac kernel contracts 2 bitplanes,
+so decode weight traffic is ~10x smaller than bf16 and the kernel does
+half the MXU work of the w4 one-hot path (SNIPPETS.md carries the BitNet
+CPU reference numbers: tl2 3B ~60-75 tok/s on 8 cores — the cost-vs-bits
+curve in BENCH_kernels.json is our MXU analogue).
+"""
+from repro.models.transformer import BlockSpec, ModelConfig
+
+ARCH_ID = "bitnet-3b"
+
+
+def config(quant: str = "ternary_a8_tmac") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=26, d_model=3200, n_heads=32, n_kv=32, head_dim=100,
+        d_ff=8640, vocab=32000,
+        pattern=(BlockSpec(kind="attn", attn_type="global", mlp="swiglu"),),
+        rope_theta=10000.0, quant=quant,
+    )
+
+
+def smoke_config(quant: str = "ternary_a8_tmac") -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv=4, head_dim=16,
+        d_ff=128, vocab=512,
+        pattern=(BlockSpec(kind="attn", attn_type="global", mlp="swiglu"),),
+        rope_theta=10000.0, quant=quant, remat="none",
+    )

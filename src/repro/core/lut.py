@@ -159,6 +159,111 @@ def luts_per_multiply_general(n_bits: int) -> tuple[int, int]:
 
 
 # ---------------------------------------------------------------------------
+# sub-4-bit weight specs + bitplane decomposition (the T-MAC formulation)
+# ---------------------------------------------------------------------------
+#
+# ``lutmul_tmac`` stores weights as *bitplanes*: B binary [K, N] planes plus a
+# static integer coefficient per plane (and an optional constant), so
+#
+#     w[k, n] = sum_b coeff_b * plane_b[k, n] + const
+#
+# and the matmul decomposes into B binary contractions whose cost is linear
+# in the weight bit width — the move that makes w2 half the MXU work of w4.
+# A weight-bits *spec* is an int in {1, 2, 3, 4} or the string "ternary"
+# (BitNet b1.58's {-1, 0, +1}, ~1.58 bits).
+
+WEIGHT_BITS_SPECS = (1, "ternary", 2, 3, 4)
+
+
+def validate_weight_bits(spec) -> None:
+    """Raise an actionable error for anything outside the supported family."""
+    if spec not in WEIGHT_BITS_SPECS:
+        raise ValueError(
+            f"unsupported weight bit width {spec!r}: the tmac formulation "
+            f"supports {WEIGHT_BITS_SPECS} (ints are two's-complement widths;"
+            " 'ternary' is the BitNet-b1.58 {-1,0,+1} coding at ~1.58 bits)")
+
+
+def weight_bits(spec) -> float:
+    """Effective bits for cost/memory accounting (ternary ~= log2(3))."""
+    validate_weight_bits(spec)
+    return 1.58 if spec == "ternary" else float(spec)
+
+
+def plane_decomposition(spec) -> tuple[int, tuple[int, ...], int]:
+    """(n_planes, per-plane coeffs, additive const) for a weight-bits spec.
+
+    * ints B in {2, 3, 4}: two's-complement planes — coeffs
+      ``(1, 2, .., 2^(B-2), -2^(B-1))``, const 0; codes span
+      ``[-2^(B-1), 2^(B-1)-1]`` exactly like the nibble format.
+    * ``"ternary"``: a +1 plane and a -1 plane — coeffs ``(1, -1)``, const 0.
+    * ``1``: BitNet-b1-style binary ±1 — one plane with ``w = 2*p - 1``
+      (coeff 2, const -1; the const turns into a per-row activation-sum
+      correction in the kernel).
+    """
+    validate_weight_bits(spec)
+    if spec == "ternary":
+        return 2, (1, -1), 0
+    if spec == 1:
+        return 1, (2,), -1
+    b = int(spec)
+    return b, tuple([1 << i for i in range(b - 1)] + [-(1 << (b - 1))]), 0
+
+
+def planes_from_codes(codes, spec) -> jnp.ndarray:
+    """Integer weight codes [..., K, N] -> {0,1} uint8 planes [..., P, K, N].
+
+    Inverse of ``sum_b coeff_b * plane_b + const`` for codes in the spec's
+    range (two's-complement values for int specs, {-1,0,1} for ternary,
+    {-1,+1} for binary).
+    """
+    n_planes, _, _ = plane_decomposition(spec)
+    c = jnp.asarray(codes).astype(jnp.int32)
+    if spec == "ternary":
+        planes = [(c == 1), (c == -1)]
+    elif spec == 1:
+        planes = [(c > 0)]
+    else:
+        u = c & ((1 << int(spec)) - 1)
+        planes = [((u >> b) & 1).astype(bool) for b in range(n_planes)]
+    return jnp.stack([p.astype(jnp.uint8) for p in planes], axis=-3)
+
+
+def decode_planes(planes, spec) -> jnp.ndarray:
+    """{0,1} planes [..., P, K, N] -> int32 weight codes [..., K, N]."""
+    _, coeffs, const = plane_decomposition(spec)
+    co = jnp.asarray(coeffs, jnp.int32).reshape(-1, 1, 1)
+    return jnp.sum(planes.astype(jnp.int32) * co, axis=-3) + const
+
+
+def pack_bitplanes(planes) -> jnp.ndarray:
+    """{0,1} planes [..., K, N] (K % 8 == 0) -> uint8 [..., K//8, N].
+
+    k-major within each byte: bit i of byte j is plane row ``8*j + i`` —
+    the layout both the Pallas tmac kernel and ``unpack_bitplanes`` assume.
+    """
+    planes = jnp.asarray(planes)
+    K = planes.shape[-2]
+    if K % 8:
+        raise ValueError(
+            f"bitplane packing needs K % 8 == 0, got K={K}; pad the "
+            "contraction dim to a multiple of 8 before packing")
+    x = planes.astype(jnp.uint8).reshape(*planes.shape[:-2], K // 8, 8,
+                                         planes.shape[-1])
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
+    return jnp.sum(x << shifts, axis=-2).astype(jnp.uint8)
+
+
+def unpack_bitplanes(packed) -> jnp.ndarray:
+    """uint8 [..., K//8, N] -> {0,1} uint8 planes [..., K, N]."""
+    packed = jnp.asarray(packed)
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(8, 1)
+    bits = (packed[..., :, None, :] >> shifts) & 1
+    return bits.reshape(*packed.shape[:-2], packed.shape[-2] * 8,
+                        packed.shape[-1])
+
+
+# ---------------------------------------------------------------------------
 # int4 packing helpers (shared by kernels + checkpoints)
 # ---------------------------------------------------------------------------
 

@@ -22,6 +22,34 @@ on TPU both dots are int8 (every operand value fits int8).  The MAC count is
 it replaces is ~5-8x slower even in interpret mode and far worse on real
 hardware.
 
+``lutmul_tmac``: the second formulation — T-MAC/BitNet-style *weight-plane*
+decomposition against *activation-group* partial-sum tables.  Weights are
+stored as P binary bitplanes with static integer coefficients
+(``core.lut.plane_decomposition``: ``w = sum_b coeff_b * plane_b + const``),
+activations are grouped into g-element chunks along K, and each block
+precomputes the partial-sum table
+
+    T[m, kg, c] = sum_{i<g} bit_i(c) * a[m, kg*g + i]       (c = 0..2^g-1)
+
+(the T-MAC ``LUT[n, k, Abits]`` table, built in-VMEM per block with one
+tiny [bm*K/g, g] x [g, 2^g] dot — N-independent).  Each weight plane's
+g-bit group codes then *select* from T via a one-hot contraction and the
+coefficients fold into the one-hot operand, so the whole thing is ONE
+``[bm, P * K/g * 2^g] x [P * K/g * 2^g, bn]`` MXU dot:
+
+    acc[m,n] = sum_{b,kg} coeff_b * T[m, kg, gcode_b(kg, n)]  (+ const * sum_k a[m,k])
+
+MAC cost per output is ``P * (2^g / g) * K`` — **linear in the weight bit
+count P** where the one-hot kernel above is flat at ``4K`` regardless of
+weight bits: w2 does half the MXU work of w4, ternary (2 planes) matches
+w2, and binary w1 halves it again.  ``g=1`` degenerates the table to the
+activation vector itself ({0, a}), so the kernel skips materializing T and
+contracts the coefficient-scaled planes directly (inner dim ``P * K`` — the
+cheapest MXU realization; ``g>=2`` trades more inner dim for the faithful
+wide-input-LUT shape, PolyLUT-Add style).  On TPU both operands fit int8
+for a4 activations and g <= 4 (|T| <= 8g <= 32, |coeff| <= 8); a8
+activations require g=1 (ops.py clamps).
+
 ``lutmul_gather``: the previous faithful-but-serial adaptation — a per-k
 ``jnp.take`` loop over the 256-entry table — retained as the A/B baseline
 for ``benchmarks/kernel_bench.py``.
@@ -176,6 +204,117 @@ def lutmul_pallas(a_codes: jax.Array, w_packed: jax.Array, table: jax.Array,
     )(a_codes, w_packed, table)
 
 
+# ---------------------------------------------------------------------------
+# T-MAC formulation: weight bitplanes x activation-group partial-sum tables
+# (module docstring) — kernel cost linear in the weight bit count
+# ---------------------------------------------------------------------------
+
+
+def _tmac_contract(a: jax.Array, wp: jax.Array, coeffs: tuple[int, ...],
+                   g: int, contract_dtype=jnp.float32) -> jax.Array:
+    """One block of the tmac contraction (WITHOUT the const correction).
+
+    a: [bm, bk] int32 signed activation codes; wp: [P, bk//8, bn] packed
+    bitplanes; coeffs: static per-plane integer coefficients.  Returns the
+    int32 [bm, bn] partial accumulator ``sum_b coeff_b * (a . plane_b)``.
+    """
+    n_planes = wp.shape[0]
+    bm, bk = a.shape
+    bn = wp.shape[-1]
+    # unpack bitplanes: [P, bk//8, bn] bytes -> [P, bk, bn] {0, 1}
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 8, 1), 2)
+    w = ((wp.astype(jnp.int32)[:, :, None, :] >> shifts) & 1) \
+        .reshape(n_planes, bk, bn)
+    pref = jnp.float32 if contract_dtype == jnp.float32 else jnp.int32
+    if g == 1:
+        # degenerate table T[m, k, {0,1}] = {0, a}: contract the
+        # coefficient-scaled planes directly (inner dim P * bk)
+        ws = jnp.concatenate(
+            [w[p] * coeffs[p] for p in range(n_planes)],
+            axis=0).astype(contract_dtype)                      # [P*bk, bn]
+        at = jnp.concatenate([a] * n_planes,
+                             axis=1).astype(contract_dtype)     # [bm, P*bk]
+        acc = jax.lax.dot_general(at, ws, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=pref)
+        return acc.astype(jnp.int32)
+    kg, c = bk // g, 1 << g
+    # table stage: T[m, kg, c] = sum_i bit_i(c) * a[m, kg*g+i] — one tiny
+    # N-independent dot builds every group's 2^g partial sums
+    bitsel = ((jax.lax.broadcasted_iota(jnp.int32, (g, c), 1)
+               >> jax.lax.broadcasted_iota(jnp.int32, (g, c), 0)) & 1)
+    table = jax.lax.dot_general(
+        a.reshape(bm * kg, g).astype(contract_dtype),
+        bitsel.astype(contract_dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=pref)                            # [bm*kg, c]
+    table = table.astype(contract_dtype).reshape(bm, kg * c)
+    # selection stage: per-plane g-bit group codes one-hot against the
+    # table, coefficients folded into the one-hot operand -> ONE dot
+    gsh = jax.lax.broadcasted_iota(jnp.int32, (1, 1, g, 1), 2)
+    gcodes = jnp.sum(w.reshape(n_planes, kg, g, bn) << gsh,
+                     axis=2)                                    # [P, kg, bn]
+    codes = jax.lax.broadcasted_iota(jnp.int32, (1, c, 1), 1)
+    sel = jnp.concatenate(
+        [(gcodes[p][:, None, :] == codes).astype(jnp.int32) * coeffs[p]
+         for p in range(n_planes)],
+        axis=0).astype(contract_dtype).reshape(n_planes * kg * c, bn)
+    at = jnp.concatenate([table] * n_planes, axis=1)            # plane-major
+    acc = jax.lax.dot_general(at, sel, (((1,), (0,)), ((), ())),
+                              preferred_element_type=pref)
+    return acc.astype(jnp.int32)
+
+
+def _tmac_block(a_ref, w_ref, *, coeffs, const, g, contract_dtype):
+    """Shared block body: tmac contraction + the binary-coding const
+    correction (``const * sum_k a[m, k]``, exact per K block since padded
+    activation codes are zero)."""
+    a = a_ref[...].astype(jnp.int32)
+    acc = _tmac_contract(a, w_ref[...], coeffs, g, contract_dtype)
+    if const:
+        acc = acc + const * jnp.sum(a, axis=1, keepdims=True)
+    return acc
+
+
+def _lutmul_tmac_body(a_ref, w_ref, out_ref, *, coeffs, const, g,
+                      contract_dtype=jnp.float32):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += _tmac_block(a_ref, w_ref, coeffs=coeffs, const=const,
+                                g=g, contract_dtype=contract_dtype)
+
+
+def lutmul_tmac_pallas(a_q: jax.Array, w_planes: jax.Array, *,
+                       coeffs: tuple[int, ...], const: int = 0, g: int = 2,
+                       bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                       bk: int = DEFAULT_BK,
+                       interpret: bool = True) -> jax.Array:
+    """a_q: [M, K] int8 signed activation codes; w_planes: [P, K//8, N]
+    packed bitplanes (core.lut.pack_bitplanes layout).  Shapes pre-padded to
+    block multiples (ops.py pads); ``bk % (8 * g) == 0`` required."""
+    M, K = a_q.shape
+    n_planes, _, N = w_planes.shape
+    if bk % (8 * max(g, 1)):
+        raise ValueError(f"tmac needs bk % (8*g) == 0, got bk={bk} g={g}")
+    grid = (M // bm, N // bn, K // bk)
+    cd = jnp.float32 if interpret else jnp.int8
+    body = functools.partial(_lutmul_tmac_body, coeffs=tuple(coeffs),
+                             const=const, g=g, contract_dtype=cd)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((n_planes, bk // 8, bn), lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(a_q, w_planes)
+
+
 def _int_matmul_body(a_ref, w_ref, out_ref):
     k = pl.program_id(2)
 
@@ -268,6 +407,59 @@ def lutmul_fused_pallas(a_codes: jax.Array, w_packed: jax.Array,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(a_codes, w_packed, table, a_scale, w_scale)
+
+
+def _lutmul_tmac_fused_body(a_ref, w_ref, as_ref, ws_ref, out_ref, acc_ref,
+                            *, nk: int, out_dtype, coeffs, const, g,
+                            contract_dtype=jnp.float32):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _tmac_block(a_ref, w_ref, coeffs=coeffs, const=const,
+                                g=g, contract_dtype=contract_dtype)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        out_ref[...] = _epilogue(acc_ref[...], as_ref[...], ws_ref[...],
+                                 out_dtype)
+
+
+def lutmul_tmac_fused_pallas(a_q: jax.Array, w_planes: jax.Array,
+                             a_scale: jax.Array, w_scale: jax.Array, *,
+                             coeffs: tuple[int, ...], const: int = 0,
+                             g: int = 2, bm: int = DEFAULT_BM,
+                             bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                             out_dtype=jnp.bfloat16,
+                             interpret: bool = True) -> jax.Array:
+    """T-MAC LUT matmul + fused dequant epilogue (see lutmul_tmac_pallas)."""
+    M, K = a_q.shape
+    n_planes, _, N = w_planes.shape
+    if bk % (8 * max(g, 1)):
+        raise ValueError(f"tmac needs bk % (8*g) == 0, got bk={bk} g={g}")
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    body = functools.partial(_lutmul_tmac_fused_body, nk=nk,
+                             out_dtype=out_dtype, coeffs=tuple(coeffs),
+                             const=const, g=g,
+                             contract_dtype=jnp.float32 if interpret
+                             else jnp.int8)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((n_planes, bk // 8, bn), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a_q, w_planes, a_scale, w_scale)
 
 
 def _int_matmul_fused_body(a_ref, w_ref, as_ref, ws_ref, out_ref, acc_ref,

@@ -7,7 +7,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.lut import unpack_int4
+from repro.core.lut import (plane_decomposition, unpack_bitplanes,
+                            unpack_int4)
 
 
 def decode_codes(codes: jnp.ndarray, bits: int = 4, signed: bool = True
@@ -30,6 +31,42 @@ def lutmul_ref(a_codes: jnp.ndarray, w_packed: jnp.ndarray,
     a = decode_codes(a_codes, 4, a_signed)                     # [M, K]
     w = unpack_int4(w_packed.T, signed=True).T.astype(jnp.int32)  # [K, N]
     return a @ w
+
+
+def lutmul_tmac_ref(a_q: jnp.ndarray, w_planes: jnp.ndarray, wbits,
+                    g: int = 2) -> jnp.ndarray:
+    """T-MAC formulation oracle — the *faithful* group-table semantics.
+
+    a_q: [M, K] int8 signed activation codes; w_planes: [P, K//8, N] packed
+    bitplanes (``core.lut.pack_bitplanes``); wbits: spec from
+    ``core.lut.WEIGHT_BITS_SPECS``.  Builds the per-group partial-sum table
+    ``T[m, kg, c] = sum_i bit_i(c) * a[m, kg*g+i]`` and gathers it with each
+    weight plane's g-bit group codes, exactly the contraction
+    ``kernel._tmac_contract`` realizes on the MXU.  Returns int32 [M, N].
+    """
+    n_planes, coeffs, const = plane_decomposition(wbits)
+    a = jnp.asarray(a_q).astype(jnp.int32)                     # [M, K]
+    w = unpack_bitplanes(w_planes).astype(jnp.int32)           # [P, K, N]
+    M, K = a.shape
+    if K % g:
+        raise ValueError(f"tmac ref needs K % g == 0, got K={K} g={g}")
+    kg, c = K // g, 1 << g
+    # T[m, kg, c]: every 2^g partial sum of each activation group
+    bitsel = ((jnp.arange(c)[None, :] >> jnp.arange(g)[:, None]) & 1)
+    table = a.reshape(M, kg, g) @ bitsel                       # [M, kg, c]
+    # per-plane group codes, then gather-and-sum with static coefficients
+    gsh = jnp.arange(g, dtype=jnp.int32).reshape(1, 1, g, 1)
+    gcodes = jnp.sum(w.reshape(n_planes, kg, g, -1) << gsh,
+                     axis=2)                                   # [P, kg, N]
+    acc = jnp.zeros((M, w.shape[-1]), jnp.int32)
+    for p in range(n_planes):
+        # LUT[m, kg, gcode_p(kg, n)] summed over groups
+        looked = jnp.take_along_axis(table, gcodes[p][None, :, :],
+                                     axis=2)                   # [M, kg, N]
+        acc = acc + coeffs[p] * jnp.sum(looked, axis=1)
+    if const:
+        acc = acc + const * jnp.sum(a, axis=1, keepdims=True)
+    return acc
 
 
 def int_matmul_ref(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

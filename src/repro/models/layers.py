@@ -13,6 +13,11 @@ first-class):
   * ``w4a4_mxu`` — int4-weight/int4-act matmul on the MXU with int32
                    accumulation (the TPU performance embodiment)
   * ``w8a8``     — the "DSP packing" analogue baseline
+  * tmac family  — ``w{1,2,3,4}a{4,8}_tmac`` / ``ternary_a{4,8}_tmac``:
+                   weight-bitplane x activation-group-table kernel whose
+                   cost is linear in the weight bit count (kernels/lutmul
+                   docstring); suffix-free sub-4 modes ("w2a4") let the
+                   formulation autotuner pick tmac vs one-hot per shape
 """
 from __future__ import annotations
 
@@ -63,7 +68,21 @@ def linear(p: Params, x: jax.Array, quant: str = "none",
     if "w_q" in p:
         from repro.dist.tp import leaf_tp_mode
         from repro.kernels.lutmul import ops as lut_ops
-        y = lut_ops.prequant_matmul(x, p["w_q"], p["w_scale"], mode=quant,
+        mode = quant
+        if "w_tmac" in p:
+            # tmac bitplane leaf: the leaf's own width (plane count +
+            # ternary marker — static pytree structure) overrides the
+            # global mode's, so mixed-bit plans Just Work; activation bits
+            # follow the global mode
+            try:
+                abits = lut_ops.parse_mode(quant)[2]
+            except ValueError:
+                abits = 4
+            if "w_tern" in p:
+                mode = f"ternary_a{abits}_tmac"
+            else:
+                mode = f"w{p['w_q'].shape[0]}a{abits}_tmac"
+        y = lut_ops.prequant_matmul(x, p["w_q"], p["w_scale"], mode=mode,
                                     compute_dtype=compute_dtype,
                                     tp=leaf_tp_mode(p))
         if "b" in p:
@@ -80,12 +99,11 @@ def linear(p: Params, x: jax.Array, quant: str = "none",
         # part (threshold units emit unsigned codes), negative part passes for
         # gradient flow on pre-activation values.
         y = (xq @ wq).astype(compute_dtype)
-    elif quant in ("w4a4_mxu", "w8a8", "w4a4_lut"):
+    else:
         from repro.kernels.lutmul import ops as lut_ops
+        lut_ops.parse_mode(quant)   # raises with the mode grammar on typos
         y = lut_ops.quantized_matmul(x, w, mode=quant,
                                      compute_dtype=compute_dtype)
-    else:
-        raise ValueError(f"unknown quant mode {quant!r}")
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
@@ -223,15 +241,18 @@ class QuantizedLinear:
     """
 
     def __init__(self, p: Params, mode: str = "w4a4_mxu"):
-        if mode not in ("w4a4_lut", "w4a4_mxu", "w8a8"):
-            raise ValueError(f"unsupported quant mode {mode!r}")
+        from repro.kernels.lutmul import ops as lut_ops
+        if mode in ("none", "qat"):
+            raise ValueError(
+                f"unsupported quant mode {mode!r}: QuantizedLinear caches "
+                "integer serving codes; float/QAT paths use layers.linear")
+        lut_ops.parse_mode(mode)             # raises on unknown modes
         self.mode = mode
         if "w_q" in p:                       # already serving codes
             self.p = dict(p)
         else:
-            from repro.serve.quantize import quantize_leaf
-            bits = 4 if mode.startswith("w4") else 8
-            self.p = quantize_leaf(p["w"], bits)
+            from repro.serve.quantize import quantize_leaf_mode
+            self.p = quantize_leaf_mode(p["w"], mode)
             if "b" in p:
                 self.p["b"] = p["b"]
 

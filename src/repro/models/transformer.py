@@ -73,7 +73,9 @@ class ModelConfig:
     enc_seq: int = 1500
     frontend: str = "none"          # none | audio | vision (stubs)
     # execution
-    quant: str = "none"             # none|qat|w4a4_lut|w4a4_mxu|w8a8
+    quant: str = "none"             # none|qat|w4a4_lut|w4a4_mxu|w8a8|
+                                    # w{1,2,3,4}a{4,8}[_tmac]|
+                                    # ternary_a{4,8}[_tmac] (tmac bitplanes)
     compute_dtype: str = "bfloat16"
     param_dtype: str = "float32"
     remat: str = "full"             # full | dots | none

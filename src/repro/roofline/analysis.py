@@ -203,3 +203,85 @@ def model_flops(kind: str, n_active: float, global_batch: int,
     if kind == "prefill":
         return 2.0 * n_active * global_batch * seq_len
     return 2.0 * n_active * global_batch          # decode: one token / seq
+
+
+# ---------------------------------------------------------------------------
+# mixed per-layer weight bit widths (tmac serving family)
+# ---------------------------------------------------------------------------
+
+# demotion ladder: width spec -> effective bits per weight
+_BITS_LADDER = ((4, 4.0), (3, 3.0), (2, 2.0), ("ternary", 1.58), (1, 1.0))
+
+
+def plan_mixed_bits(params, target_bits: float, abits: int = 4,
+                    attn_floor: float = 2.0,
+                    mlp_floor: float = 1.0) -> dict:
+    """Choose per-leaf tmac weight widths hitting a target average bit width.
+
+    The roofline says decode GEMVs are memory-bound (at M = batch tokens,
+    ``memory_s = weight_bytes / HBM_BW`` dwarfs ``compute_s`` until M is in
+    the hundreds), so decode latency IS weight bytes and the tmac kernel's
+    cost is linear in the plane count either way — minimizing total weight
+    bits minimizes both terms at once.  Greedy: repeatedly demote the leaf
+    with the largest byte saving one ladder step (4 -> 3 -> 2 -> ternary ->
+    1) until the parameter-weighted average reaches ``target_bits``, subject
+    to floors (attention projections keep >= ``attn_floor`` bits — their
+    quantization error feeds every downstream token through the KV cache;
+    MLP >= ``mlp_floor``).  Embedding and lm_head are outside the plan
+    entirely (the serving walk pins them 8-bit, the paper's first/last-layer
+    rule).
+
+    Returns ``{path: mode}`` keyed by the same ``"...['wq']['w']"`` path
+    strings ``serve.quantize.quantize_params_for_serving`` builds — pass it
+    as that function's ``bits_plan`` (or via ``ServeConfig.bits_plan``).
+    Deterministic: ties break on path order.
+    """
+    import numpy as np
+    from repro.serve.quantize import _INNER_W
+
+    leaves: list[list] = []       # [path, n_params, is_attn, ladder_idx]
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                sub = f"{path}['{k}']"
+                if isinstance(v, dict) and "w" in v and _INNER_W.search(
+                        sub + "['w']") and getattr(v["w"], "ndim", 0) >= 2:
+                    leaves.append([sub + "['w']",
+                                   int(np.prod(v["w"].shape)),
+                                   "['attn']" in sub, 0])
+                else:
+                    walk(v, sub)
+        elif isinstance(tree, (tuple, list)):
+            for i, v in enumerate(tree):
+                walk(v, f"{path}[{i}]")
+
+    walk(params)
+    if not leaves:
+        return {}
+    total = sum(n for _, n, _, _ in leaves)
+
+    def avg() -> float:
+        return sum(n * _BITS_LADDER[i][1] for _, n, _, i in leaves) / total
+
+    while avg() > target_bits:
+        best, best_save = None, 0.0
+        for leaf in leaves:
+            _, n, is_attn, i = leaf
+            if i + 1 >= len(_BITS_LADDER):
+                continue
+            floor = attn_floor if is_attn else mlp_floor
+            if _BITS_LADDER[i + 1][1] < floor:
+                continue
+            save = n * (_BITS_LADDER[i][1] - _BITS_LADDER[i + 1][1])
+            if save > best_save:
+                best, best_save = leaf, save
+        if best is None:          # every leaf at its floor
+            break
+        best[3] += 1
+
+    def mode(spec) -> str:
+        return (f"ternary_a{abits}_tmac" if spec == "ternary"
+                else f"w{spec}a{abits}_tmac")
+
+    return {path: mode(_BITS_LADDER[i][0]) for path, _, _, i in leaves}

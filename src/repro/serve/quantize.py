@@ -9,12 +9,23 @@ A quantized projection leaf looks like::
     {"w_q": uint8[.., K//2, N]   (packed int4)   or  int8[.., K, N],
      "w_scale": f32[.., 1, N]}
 
-``models.layers.linear`` dispatches on the presence of ``w_q``.
+or, for the T-MAC bitplane family (w1/w2/w3/w4/ternary weights)::
+
+    {"w_q": uint8[P, K//8, N]    (packed bitplanes, P = plane count),
+     "w_scale": f32[1, N],
+     "w_tmac": uint8[0],          # zero-size formulation marker
+     "w_tern": uint8[0]}          # present iff ternary (P=2 is ambiguous)
+
+The markers are zero-size arrays so the choice is *static pytree
+structure* (same idiom as the dist.tp ``tp_*`` markers) — ``jit`` sees the
+bit width without tracing on values.  ``models.layers.linear`` dispatches
+on the presence of ``w_q`` and on its rank (3D = tmac).
 Embedding and lm_head follow the paper's first/last-layer rule (8-bit).
 """
 from __future__ import annotations
 
 import re
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,20 +62,80 @@ def quantize_leaf(w: jax.Array, bits: int):
 _quantize_leaf = quantize_leaf          # backwards-compat alias
 
 
-def quantize_params_for_serving(params, mode: str = "w4a4_mxu"):
+def quantize_leaf_mode(w: jax.Array, mode: str):
+    """Mode-aware leaf quantizer: float weight -> serving codes dict.
+
+    Legacy modes ("w4a4_lut"/"w4a4_mxu"/"w8a8") produce the nibble/int8
+    leaf; tmac-family modes produce the bitplane leaf with markers (leading
+    stack dims — the scanned per-group block axis — pass through).  A
+    suffix-free sub-4-bit mode ("w2a4") lets :func:`ops.pick_formulation`
+    A/B tmac vs one-hot per (bits, shape) and stores the winner's format —
+    the stored leaf IS the formulation choice.  MoE expert banks must use
+    legacy modes (``quantize_params_for_serving`` coerces them): tmac
+    targets the dense projections; ``moe._expert_einsum`` consumes
+    nibble/int8 stacks.
+    """
+    from repro.kernels.lutmul import ops as lut_ops
+    form, wspec, abits = lut_ops.parse_mode(mode)
+    if form == "int":
+        return quantize_leaf(w, 8 if abits >= 8 else 4)
+    if form == "auto":
+        form = lut_ops.pick_formulation(wspec, abits, w.shape[-2],
+                                        w.shape[-1])
+    if form == "onehot":
+        # sub-4-bit codes are valid 4-bit codes: quantize at the leaf's own
+        # width, store in the nibble format the one-hot kernel consumes
+        if lut_ops.weight_bits(wspec) < 4:
+            planes, scale = lut_ops.quantize_weights_planes(w, wspec)
+            from repro.core.lut import decode_planes, unpack_bitplanes
+            q = decode_planes(unpack_bitplanes(planes), wspec).astype(jnp.int8)
+            q = jnp.swapaxes(pack_int4(jnp.swapaxes(q, -1, -2)), -1, -2)
+            return {"w_q": q, "w_scale": scale.astype(jnp.float32)}
+        return quantize_leaf(w, 4)
+    planes, scale = lut_ops.quantize_weights_planes(w, wspec)
+    # markers shaped leading_stack_dims + (0,) so they scan like any leaf
+    marker = jnp.zeros(planes.shape[:-3] + (0,), jnp.uint8)
+    leaf = {"w_q": planes, "w_scale": scale.astype(jnp.float32),
+            "w_tmac": marker}
+    if wspec == "ternary":
+        leaf["w_tern"] = marker
+    return leaf
+
+
+def quantize_params_for_serving(params, mode: str = "w4a4_mxu",
+                                bits_plan: Optional[dict] = None):
     """Replace eligible projection weights with integer codes + scales.
 
-    mode: w4a4_lut | w4a4_mxu -> int4 inner, int8 head; w8a8 -> int8 all.
+    mode: w4a4_lut | w4a4_mxu -> int4 inner, int8 head; w8a8 -> int8 all;
+    tmac family (``w{1,2,3,4}a{4,8}[_tmac]``, ``ternary_a{4,8}[_tmac]``) ->
+    bitplane leaves (suffix-free = formulation auto-picked per shape).
+
+    ``bits_plan``: optional {path -> mode string} per-leaf override (the
+    output of ``roofline.analysis.plan_mixed_bits``) keyed by the same
+    ``"...['wq']['w']"`` path strings this walk builds — lets the roofline
+    model choose mixed per-layer bit widths while everything else follows
+    ``mode``.
 
     Every eligible leaf is converted through ``models.layers.QuantizedLinear``
     — THE weight-code cache: quantize + pack exactly once here, zero
     weight-quantization events afterwards (serving decode and the QAT eval
     path in ``train.loop`` both ride this invariant).
     """
+    from repro.kernels.lutmul import ops as lut_ops
     from repro.models.layers import QuantizedLinear
+
+    plan = bits_plan or {}
 
     def codes(leaf: dict, leaf_mode: str) -> dict:
         return QuantizedLinear(leaf, mode=leaf_mode).params
+
+    def legacy(leaf_mode: str) -> str:
+        # MoE expert banks stay on the nibble/int8 stack format
+        # (moe._expert_einsum consumes it); coerce tmac modes down
+        form, _, abits = lut_ops.parse_mode(leaf_mode)
+        if form in ("int", "onehot"):
+            return leaf_mode
+        return "w8a8" if abits >= 8 else "w4a4_mxu"
 
     def walk(tree, path=""):
         if isinstance(tree, dict):
@@ -73,9 +144,9 @@ def quantize_params_for_serving(params, mode: str = "w4a4_mxu"):
                 sub = f"{path}['{k}']"
                 if isinstance(v, dict) and "w" in v and _INNER_W.search(
                         sub + "['w']") and v["w"].ndim >= 2:
-                    out[k] = codes(v, mode)
+                    out[k] = codes(v, plan.get(sub + "['w']", mode))
                 elif _MOE_W.search(sub) and not isinstance(v, dict):
-                    out[k] = codes({"w": v}, mode)
+                    out[k] = codes({"w": v}, legacy(plan.get(sub, mode)))
                 elif isinstance(v, dict) and "w" in v and _HEAD_W.search(
                         sub + "['w']"):
                     out[k] = codes(v, "w8a8")     # paper: last layer 8-bit
@@ -92,9 +163,13 @@ def quantize_params_for_serving(params, mode: str = "w4a4_mxu"):
 
 def dequantize_weight(p: dict, dtype=jnp.bfloat16) -> jax.Array:
     """Reassemble a float weight from codes (tests / fallbacks)."""
-    from repro.core.lut import unpack_int4
+    from repro.core.lut import decode_planes, unpack_bitplanes, unpack_int4
     q = p["w_q"]
-    if q.dtype == jnp.uint8:      # packed int4
+    if "w_tmac" in p:             # packed bitplanes (plane axis is -3:
+        # leading stack dims — the scanned block axis — pass through)
+        spec = "ternary" if "w_tern" in p else int(q.shape[-3])
+        q = decode_planes(unpack_bitplanes(q), spec)
+    elif q.dtype == jnp.uint8:    # packed int4
         q = jnp.swapaxes(unpack_int4(jnp.swapaxes(q, -1, -2), signed=True),
                          -1, -2)
     return (q.astype(jnp.float32) * p["w_scale"]).astype(dtype)

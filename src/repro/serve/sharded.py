@@ -62,7 +62,8 @@ class ShardedEngine(Engine):
         # attention runs on n_heads/tp heads per shard) when the head counts
         # divide the model axis; the KV cache layout below keys off whether
         # that actually happened.
-        params = quantize_params_for_serving(params, mode=scfg.quant)
+        params = quantize_params_for_serving(params, mode=scfg.quant,
+                                             bits_plan=scfg.bits_plan)
         params, self._param_specs, self.n_tp_leaves = tp_lib.mark_tp_params(
             params, self.n_model, model_axis, head_dim=cfg.head_dim)
         n_attn, n_head_marked = tp_lib.attn_group_counts(params)

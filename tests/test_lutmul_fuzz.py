@@ -15,7 +15,8 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.lut import contraction_table, pack_int4
+from repro.core.lut import (contraction_table, decode_planes, pack_int4,
+                            plane_decomposition, unpack_bitplanes)
 from repro.kernels.lutmul import kernel, ref
 from repro.kernels.lutmul import ops as lut_ops
 
@@ -144,6 +145,65 @@ def test_fuzz_fused_dequant_matches_scaled_ref(blocks, which, out_dtype,
             bm=bm, bn=bn, bk=bk, out_dtype=od, interpret=True)
         acc = ref.int_matmul_ref(jnp.asarray(a8), jnp.asarray(w))
         want = (acc.astype(jnp.float32) * a_scale * w_scale).astype(od)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# tmac: K must pack into bitplane bytes (K % 8 == 0); every weight width of
+# the sub-4-bit serving family, both activation widths (a4 -> g=2 grouped
+# tables, a8 -> g=1 direct contraction)
+WBITS = st.sampled_from([1, 2, 3, 4, "ternary"])
+TMAC_DIMS = st.tuples(st.integers(1, 24),                    # M
+                      st.integers(1, 24).map(lambda k: 8 * k),   # K (mult 8)
+                      st.integers(1, 140))                   # N
+
+
+@given(TMAC_DIMS, WBITS, st.sampled_from([4, 8]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=N_EXAMPLES, deadline=None)
+def test_fuzz_tmac_matches_ref_and_dense_oracle(dims, wbits, abits, seed):
+    """ops.lutmul_tmac (interpret kernel) == the faithful group-table oracle
+    ``ref.lutmul_tmac_ref`` == the decoded dense int matmul, for every
+    weight width in the family and both activation widths — padding, plane
+    accumulation order, and the per-row const correction all exact."""
+    m, k, n = dims
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(_int8_vals(rng, (m, k), abits))
+    wf = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    planes, _ = lut_ops.quantize_weights_planes(wf, wbits)
+    g = lut_ops.tmac_group_size(abits)
+    got = lut_ops.lutmul_tmac(a, planes, wbits, abits=abits,
+                              backend="interpret")
+    want = ref.lutmul_tmac_ref(a, planes, wbits, g=g)
+    dense = decode_planes(unpack_bitplanes(planes), wbits)
+    oracle = a.astype(jnp.int32) @ dense.astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
+
+
+@given(BLOCKS, WBITS, st.sampled_from(["float32", "bfloat16"]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=N_EXAMPLES, deadline=None)
+def test_fuzz_tmac_fused_matches_scaled_oracle(blocks, wbits, out_dtype,
+                                               seed):
+    """The fused-dequant tmac kernel == the scaled dense oracle bit for bit
+    on multi-K-block grids (epilogue fires at k = nk-1), in both output
+    dtypes."""
+    bm, bn, bk = blocks
+    M, N, K = bm, bn, 2 * bk
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(_int8_vals(rng, (M, K), 4))
+    wf = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    planes, _ = lut_ops.quantize_weights_planes(wf, wbits)
+    a_scale = jnp.asarray(rng.uniform(1e-3, 1.0, (M, 1)), jnp.float32)
+    w_scale = jnp.asarray(rng.uniform(1e-3, 1.0, (1, N)), jnp.float32)
+    _, coeffs, const = plane_decomposition(wbits)
+    od = jnp.dtype(out_dtype)
+    got = kernel.lutmul_tmac_fused_pallas(
+        a, planes, a_scale, w_scale, coeffs=coeffs, const=const, g=2,
+        bm=bm, bn=bn, bk=bk, out_dtype=od, interpret=True)
+    dense = decode_planes(unpack_bitplanes(planes), wbits)
+    acc = a.astype(jnp.int32) @ dense.astype(jnp.int32)
+    want = (acc.astype(jnp.float32) * a_scale * w_scale).astype(od)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 

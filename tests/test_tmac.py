@@ -1,0 +1,273 @@
+"""Unit tests for the T-MAC sub-4-bit serving family: the mode grammar,
+bit-width validation, the plane quantizer's consistency guarantees, the
+formulation/variant pickers, and the roofline mixed-bits planner.
+
+Bit-exactness of the kernels themselves is fuzzed in test_lutmul_fuzz.py;
+the end-to-end serving differential lives in test_traffic_fuzz.py.  This
+file pins the API contracts around them.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lut import (decode_planes, pack_bitplanes, plane_decomposition,
+                            planes_from_codes, unpack_bitplanes,
+                            validate_weight_bits)
+from repro.kernels.lutmul import ops as lut_ops
+from repro.serve.quantize import dequantize_weight, quantize_leaf_mode
+
+
+# ---------------------------------------------------------------------------
+# mode grammar
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,want", [
+    ("w4a4_mxu", ("int", 4, 4)),
+    ("", ("int", 4, 4)),
+    ("w8a8", ("int", 8, 8)),
+    ("w4a4_lut", ("onehot", 4, 4)),
+    ("w2a4_tmac", ("tmac", 2, 4)),
+    ("w1a8_tmac", ("tmac", 1, 8)),
+    ("w3a4_tmac", ("tmac", 3, 4)),
+    ("ternary_a8_tmac", ("tmac", "ternary", 8)),
+    ("ternary_a4", ("auto", "ternary", 4)),
+    ("w2a4", ("auto", 2, 4)),
+])
+def test_parse_mode(mode, want):
+    assert lut_ops.parse_mode(mode) == want
+
+
+@pytest.mark.parametrize("bad", ["w5a4_tmac", "w2a2_tmac", "w2a16",
+                                 "tmac", "w2", "ternary", "w2a4_foo"])
+def test_parse_mode_rejects_with_grammar(bad):
+    # bad widths are caught by validate_weight_bits (names the family),
+    # bad grammar by parse_mode (names the grammar) — both actionable
+    with pytest.raises(ValueError, match="mode|bit width"):
+        lut_ops.parse_mode(bad)
+
+
+def test_validate_weight_bits_actionable():
+    with pytest.raises(ValueError, match="ternary"):
+        validate_weight_bits(1.58)          # must use the string spec
+    with pytest.raises(ValueError, match="weight"):
+        validate_weight_bits(5)
+
+
+# ---------------------------------------------------------------------------
+# shape validation errors are actionable
+# ---------------------------------------------------------------------------
+
+def test_check_lut_shapes_errors():
+    a = jnp.zeros((4, 6), jnp.uint8)
+    with pytest.raises(ValueError, match="even K"):
+        lut_ops._check_lut_shapes(jnp.zeros((4, 7), jnp.uint8),
+                                  jnp.zeros((3, 8), jnp.uint8))
+    with pytest.raises(ValueError, match="K//2"):
+        lut_ops._check_lut_shapes(a, jnp.zeros((2, 8), jnp.uint8))
+    with pytest.raises(ValueError, match="bitplane"):
+        # a 3D tmac leaf fed to the one-hot path: the hint names the fix
+        lut_ops._check_lut_shapes(a, jnp.zeros((2, 3, 8), jnp.uint8))
+
+
+def test_check_tmac_shapes_errors():
+    a = jnp.zeros((4, 16), jnp.int8)
+    planes2 = jnp.zeros((2, 2, 8), jnp.uint8)
+    with pytest.raises(ValueError, match="plane"):
+        lut_ops._check_tmac_shapes(a, planes2, 3)      # w3 needs 3 planes
+    with pytest.raises(ValueError, match="K"):
+        lut_ops._check_tmac_shapes(jnp.zeros((4, 24), jnp.int8), planes2, 2)
+    with pytest.raises(ValueError, match=r"\[P, K//8, N\]"):
+        lut_ops._check_tmac_shapes(a, jnp.zeros((2, 8), jnp.uint8), 2)
+
+
+# ---------------------------------------------------------------------------
+# quantizers: cross-format consistency
+# ---------------------------------------------------------------------------
+
+def test_w4_planes_decode_to_w4_codes():
+    """The w4 plane quantizer and the nibble quantizer are THE SAME
+    quantizer — the basis of cross-formulation bit-identity."""
+    rng = np.random.default_rng(0)
+    wf = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    planes, s_p = lut_ops.quantize_weights_planes(wf, 4)
+    q, s_n = lut_ops.quantize_weights(wf, 4, pack=False)
+    np.testing.assert_array_equal(
+        np.asarray(decode_planes(unpack_bitplanes(planes), 4)), np.asarray(q))
+    np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_n))
+
+
+@pytest.mark.parametrize("spec", [1, "ternary", 2, 3, 4])
+def test_planes_roundtrip_and_ranges(spec):
+    rng = np.random.default_rng(1)
+    wf = jnp.asarray(rng.normal(size=(24, 8)), jnp.float32)
+    planes, scale = lut_ops.quantize_weights_planes(wf, spec)
+    n_planes, _, _ = plane_decomposition(spec)
+    assert planes.shape == (n_planes, 24 // 8, 8)
+    assert scale.shape == (1, 8)
+    dec = np.asarray(decode_planes(unpack_bitplanes(planes), spec))
+    if spec == "ternary":
+        assert set(np.unique(dec)) <= {-1, 0, 1}
+    elif spec == 1:
+        assert set(np.unique(dec)) <= {-1, 1}
+    else:
+        lo, hi = -(2 ** (spec - 1)), 2 ** (spec - 1) - 1
+        assert dec.min() >= lo and dec.max() <= hi
+    # pack/unpack round-trips through the plane stack too
+    codes = planes_from_codes(jnp.asarray(dec), spec)
+    np.testing.assert_array_equal(np.asarray(pack_bitplanes(codes)),
+                                  np.asarray(planes))
+
+
+def test_quantize_weights_rejects_sub4():
+    with pytest.raises(ValueError, match="quantize_weights_planes"):
+        lut_ops.quantize_weights(jnp.zeros((8, 8)), 2)
+    with pytest.raises(ValueError, match="a4 or a8"):
+        lut_ops.quantize_activations(jnp.zeros((2, 8)), 2)
+
+
+def test_stacked_leaf_quantizes_per_slice():
+    """Leading stack dims (the scanned block axis) pass through and each
+    slice quantizes independently — identical to slicing first."""
+    rng = np.random.default_rng(2)
+    wf = jnp.asarray(rng.normal(size=(3, 16, 8)), jnp.float32)
+    planes, scale = lut_ops.quantize_weights_planes(wf, "ternary")
+    assert planes.shape == (3, 2, 2, 8) and scale.shape == (3, 1, 8)
+    p0, s0 = lut_ops.quantize_weights_planes(wf[1], "ternary")
+    np.testing.assert_array_equal(np.asarray(planes[1]), np.asarray(p0))
+    np.testing.assert_array_equal(np.asarray(scale[1]), np.asarray(s0))
+
+
+@pytest.mark.parametrize("mode,keys", [
+    ("w2a4_tmac", {"w_q", "w_scale", "w_tmac"}),
+    ("ternary_a8_tmac", {"w_q", "w_scale", "w_tmac", "w_tern"}),
+    ("w8a8", {"w_q", "w_scale"}),
+])
+def test_quantize_leaf_mode_formats(mode, keys):
+    rng = np.random.default_rng(3)
+    wf = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    leaf = quantize_leaf_mode(wf, mode)
+    assert set(leaf.keys()) == keys
+    if "w_tmac" in leaf:
+        assert leaf["w_tmac"].shape == (0,)     # zero-size static marker
+        # dequantize round-trips through the plane decode
+        deq = dequantize_weight(leaf, jnp.float32)
+        _, wspec, _ = lut_ops.parse_mode(mode)
+        dense = decode_planes(unpack_bitplanes(leaf["w_q"]), wspec)
+        np.testing.assert_array_equal(
+            np.asarray(deq),
+            np.asarray(dense.astype(jnp.float32) * leaf["w_scale"]))
+
+
+# ---------------------------------------------------------------------------
+# pickers
+# ---------------------------------------------------------------------------
+
+def test_pick_formulation_defaults():
+    lut_ops._FORMULATION_CACHE.clear()
+    lut_ops.set_autotune(False)
+    try:
+        assert lut_ops.pick_formulation(2, 4, 256, 256, "ref") == "tmac"
+        assert lut_ops.pick_formulation("ternary", 4, 256, 256,
+                                        "ref") == "tmac"
+        assert lut_ops.pick_formulation(4, 4, 256, 256, "ref") == "onehot"
+        # a8 activations never fit the 4-bit one-hot product table
+        assert lut_ops.pick_formulation(4, 8, 256, 256, "ref") == "tmac"
+    finally:
+        lut_ops.set_autotune(None)
+        lut_ops._FORMULATION_CACHE.clear()
+
+
+def test_pick_variant_defaults_and_ab():
+    lut_ops._VARIANT_CACHE.clear()
+    lut_ops.set_autotune(False)
+    try:
+        assert lut_ops.pick_variant("lutmul", 8, 64, 64,
+                                    "interpret") == "unfused"
+        assert lut_ops.pick_variant("lutmul", 8, 64, 64,
+                                    "pallas") == "fused"
+    finally:
+        lut_ops.set_autotune(None)
+    lut_ops._VARIANT_CACHE.clear()
+    lut_ops.set_autotune(True)
+    try:
+        import time
+        got = lut_ops.pick_variant(
+            "lutmul", 9, 64, 64, "interpret",
+            bench_fns={"fused": lambda: time.sleep(0.002),
+                       "unfused": lambda: None})
+        assert got == "unfused"
+        # cached: a second call returns the winner without bench_fns
+        assert lut_ops.pick_variant("lutmul", 9, 64, 64,
+                                    "interpret") == "unfused"
+    finally:
+        lut_ops.set_autotune(None)
+        lut_ops._VARIANT_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# mixed-bits planner
+# ---------------------------------------------------------------------------
+
+def _smoke_params():
+    from repro import configs
+    from repro.models import transformer as T
+    cfg = dataclasses.replace(
+        configs.get_config("bitnet-3b", smoke=True), compute_dtype="float32")
+    return cfg, T.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _eff_bits(mode: str) -> float:
+    return 1.58 if mode.startswith("ternary") else float(mode[1])
+
+
+def test_plan_mixed_bits_hits_target_and_floors():
+    from repro.roofline.analysis import plan_mixed_bits
+    cfg, params = _smoke_params()
+    plan = plan_mixed_bits(params, target_bits=2.0, abits=4)
+    assert plan, "planner found no eligible leaves"
+    # every value is a valid tmac mode string; attention floored at 2 bits
+    for path, mode in plan.items():
+        assert lut_ops.parse_mode(mode)[0] == "tmac"
+        if "['attn']" in path:
+            assert _eff_bits(mode) >= 2.0
+    # parameter-weighted average reaches the target
+    sizes = {}
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                sub = f"{path}['{k}']"
+                if isinstance(v, dict) and "w" in v and (sub + "['w']") \
+                        in plan:
+                    sizes[sub + "['w']"] = int(np.prod(v["w"].shape))
+                else:
+                    walk(v, sub)
+        elif isinstance(tree, (tuple, list)):
+            for i, v in enumerate(tree):
+                walk(v, f"{path}[{i}]")
+
+    walk(params)
+    assert set(sizes) == set(plan)
+    avg = sum(sizes[p] * _eff_bits(m) for p, m in plan.items()) \
+        / sum(sizes.values())
+    assert avg <= 2.0 + 1e-9
+    # identity at target 4
+    assert set(plan_mixed_bits(params, 4.0).values()) == {"w4a4_tmac"}
+
+
+def test_plan_keys_match_serving_walk():
+    """The planner's path strings are consumable as a serving bits_plan:
+    every planned leaf comes out in the planned format."""
+    from repro.roofline.analysis import plan_mixed_bits
+    from repro.serve.quantize import quantize_params_for_serving
+    cfg, params = _smoke_params()
+    plan = plan_mixed_bits(params, target_bits=2.0, abits=4)
+    qp = quantize_params_for_serving(params, mode="w4a4_mxu", bits_plan=plan)
+    blk = qp["blocks"][0]
+    for sub in (blk["attn"]["wq"], blk["mlp"]["wi"]):
+        assert "w_tmac" in sub and sub["w_q"].shape[-3] == 2   # w2 planes
+    # off-plan leaves follow the base mode (packed nibbles, no marker)
+    assert "w_tmac" not in qp["lm_head"]

@@ -118,6 +118,105 @@ def test_randomized_traffic_differential_subprocess():
     assert "ALL-OK" in out.stdout, out.stdout
 
 
+_FORMULATION_SCRIPT = textwrap.dedent("""
+    import dataclasses, random
+    import jax, numpy as np
+    from repro import configs
+    from repro.kernels.lutmul import ops as lut_ops
+    from repro.models import transformer as T
+    from repro.serve import Engine, Request, Scheduler, ServeConfig
+
+    MAX_LEN, SLOTS, CHUNK = 32, 4, 3
+
+    def make_stream(cfg, seed):
+        rng = random.Random(seed)
+        reqs = []
+        for _ in range(rng.randint(5, 8)):
+            L = rng.randint(1, 8)
+            prompt = [rng.randrange(cfg.vocab) for _ in range(L)]
+            budget = rng.choice([0, 1, 2, 3, 5, 8])
+            eos = rng.randrange(cfg.vocab) if rng.random() < 0.3 else None
+            reqs.append(dict(prompt=prompt, max_new_tokens=budget,
+                             eos_id=eos, temperature=0.0))
+        plan = [rng.randint(0, 3) for _ in range(4 * len(reqs))]
+        return reqs, plan
+
+    def drive(engine, specs, plan):
+        sched = Scheduler(engine, slots=SLOTS, chunk=CHUNK,
+                          prompt_bucket="pow2")
+        reqs = [Request(**s) for s in specs]
+        i, p = 0, 0
+        while i < len(reqs) or sched.has_work:
+            take = plan[p % len(plan)]; p += 1
+            for _ in range(min(take, len(reqs) - i)):
+                sched.submit(reqs[i]); i += 1
+            if not sched.has_work and i < len(reqs):
+                sched.submit(reqs[i]); i += 1
+            sched.step()
+        assert all(s is None for s in sched.slots) and not sched.queue
+        return [(r.tokens, r.finish_reason) for r in reqs]
+
+    def engine_for(quant, backend, force_onehot=False):
+        cfg = dataclasses.replace(
+            configs.get_config("bitnet-3b", smoke=True, quant=quant),
+            compute_dtype="float32")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        lut_ops.set_backend(backend)
+        if force_onehot:
+            # pin the auto formulation to one-hot so the SAME w2 codes are
+            # stored nibble-packed instead of as bitplanes
+            lut_ops._FORMULATION_CACHE.clear()
+            real = lut_ops.pick_formulation
+            lut_ops.pick_formulation = lambda *a, **k: "onehot"
+        try:
+            eng = Engine(cfg, params,
+                         ServeConfig(max_len=MAX_LEN, quant=quant))
+        finally:
+            if force_onehot:
+                lut_ops.pick_formulation = real
+        return cfg, eng
+
+    # w2: tmac-on-ref IS the decoded dense int oracle; the one-hot leaf
+    # stores the identical codes nibble-packed; tmac-on-interpret runs the
+    # actual grouped-table kernel.  All three transcripts must match.
+    cfg, e_ref = engine_for("w2a4_tmac", "ref")
+    specs, plan = make_stream(cfg, 11)
+    want = drive(e_ref, specs, plan)
+    _, e_oh = engine_for("w2a4", "ref", force_onehot=True)
+    assert drive(e_oh, specs, plan) == want, "onehot formulation diverged"
+    _, e_int = engine_for("w2a4_tmac", "interpret")
+    n0 = lut_ops.WEIGHT_QUANT_COUNT
+    assert drive(e_int, specs, plan) == want, "tmac kernel diverged"
+    assert lut_ops.WEIGHT_QUANT_COUNT == n0, "decode re-quantized weights"
+    print("OK w2a4", flush=True)
+
+    # ternary/a8 (the BitNet serving mode): ref oracle vs interpret kernel
+    cfg3, e3r = engine_for("ternary_a8_tmac", "ref")
+    specs3, plan3 = make_stream(cfg3, 23)
+    want3 = drive(e3r, specs3, plan3)
+    _, e3i = engine_for("ternary_a8_tmac", "interpret")
+    assert drive(e3i, specs3, plan3) == want3, "ternary kernel diverged"
+    lut_ops.set_backend(None)
+    print("ALL-OK")
+""")
+
+
+@pytest.mark.slow
+def test_formulation_differential_subprocess():
+    """Cross-formulation serving differential: at the SAME weight widths,
+    temperature-0 transcripts from the tmac bitplane leaves (ref oracle and
+    interpret kernel) and from the forced one-hot nibble leaves must be
+    token-for-token identical — the stored formulation is a layout choice,
+    never a numerics choice."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("REPRO_KERNEL_BACKEND", None)
+    out = subprocess.run([sys.executable, "-c", _FORMULATION_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "ALL-OK" in out.stdout, out.stdout
+
+
 _PAGED_TRAFFIC_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

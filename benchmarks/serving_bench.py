@@ -9,8 +9,14 @@ Three sections:
     measurement).
   * dense vs paged KV on a shared-prefix workload: the same request stream
     through dense per-slot buffers and the paged pool (``serve.paged``) —
-    tokens/s, capacity vs allocated-page KV bytes, admission-padding waste
+    tokens/s, capacity vs allocated-page KV bytes, chunk-lane padding waste
     (prefill/admitted tokens), slot occupancy, and the prefix-hit rate.
+  * chunked-admission latency (``serve_p99_decode_round_while_admitting``
+    and ``serve_chunked_padding_waste``): a 2048-token prompt admitted
+    through the prefill-chunk lane while three slots keep decoding — the
+    per-round latency stays flat (bounded by the fixed chunk budget) where
+    the monolithic fallback stalls every decoder for one full-prompt
+    prefill round, and the chunk lane's padding waste stays ~1.0.
   * overload QoS (``serve_overload_*``): a logical-clock arrival trace that
     outpaces a small paged pool — deterministic watermark shedding, deadline
     expiry, latency percentiles of the survivors, and the snapshot/replay
@@ -37,7 +43,7 @@ import jax
 
 from repro import configs
 from repro.models import transformer as T
-from repro.serve import Engine, Request, Scheduler, ServeConfig
+from repro.serve import Engine, Request, Scheduler, ServeConfig, make_engine
 
 
 def _timed(fn, n=3) -> float:
@@ -55,7 +61,7 @@ def _quant_sweep():
     for quant in ("none", "w8a8", "w4a4_lut"):
         cfg = configs.get_config("qwen2-7b", smoke=True, quant=quant)
         params = T.init_params(jax.random.PRNGKey(0), cfg)
-        eng = Engine(cfg, params, ServeConfig(max_len=64))
+        eng = make_engine(params, cfg, ServeConfig(max_len=64))
         prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
                                      cfg.vocab)
         eng.generate(prompts, max_new_tokens=NEW)        # warmup/compile
@@ -77,7 +83,7 @@ def _poisson_rows():
     rng = random.Random(0)
     cfg = configs.get_config("qwen2-7b", smoke=True)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, ServeConfig(max_len=64))
+    eng = make_engine(params, cfg, ServeConfig(max_len=64))
     prompts = [[rng.randrange(cfg.vocab) for _ in range(S)] for _ in range(N)]
     budgets = [40 if rng.random() < 0.15 else rng.randint(2, 8)
                for _ in range(N)]
@@ -86,7 +92,7 @@ def _poisson_rows():
     # warm both paths (shared engine jit caches)
     batch = jax.numpy.asarray(prompts[:SLOTS], jax.numpy.int32)
     eng.generate(batch, max_new_tokens=new_max)
-    Scheduler(eng, slots=SLOTS, chunk=CHUNK, prompt_bucket="pow2").run(
+    Scheduler(eng, slots=SLOTS, chunk=CHUNK).run(
         [Request(prompt=prompts[0], max_new_tokens=4)])
 
     # arrival trace: exponential gaps, mean = 1/4 of a (warm) static batch —
@@ -99,7 +105,7 @@ def _poisson_rows():
         t += rng.expovariate(4.0 / t_batch)
 
     # -- continuous: admit the moment a slot frees ---------------------------
-    sched = Scheduler(eng, slots=SLOTS, chunk=CHUNK, prompt_bucket="pow2")
+    sched = Scheduler(eng, slots=SLOTS, chunk=CHUNK)
     reqs = [Request(prompt=p, max_new_tokens=b)
             for p, b in zip(prompts, budgets)]
     idx, t0 = 0, time.perf_counter()
@@ -147,14 +153,14 @@ def _poisson_rows():
 
 def _paged_rows():
     """Dense per-slot KV buffers vs the paged pool on a shared-prefix
-    workload (satellite of the ROADMAP ``[slots, bucket]`` item):
+    workload:
 
       * ``kv_bytes`` — dense row: max_len *capacity*; paged row: peak
         *allocated pages* (real residency — what actually scales with the
         traffic);
-      * ``padding_waste`` — prefill_tokens / admitted_tokens of the fixed
-        [slots, bucket] admission shape (both engines pay it; recorded so
-        the cost is measured, not guessed);
+      * ``padding_waste`` — prefill_tokens / admitted_tokens of the chunk
+        lane (~1.0 under backlog: chunk rounds pack real prompt tokens,
+        padding only on the final partial round);
       * ``occupancy`` — mean fraction of live slots per decode round;
       * ``prefix_hit_rate`` — fraction of prompt pages served from already
         resident pages (paged only; nonzero on this workload by design).
@@ -181,11 +187,10 @@ def _paged_rows():
             ("serve_workload_dense", ServeConfig(max_len=64)),
             ("serve_workload_paged", ServeConfig(max_len=64, paged=True,
                                                  page_size=4))):
-        eng = Engine(cfg, params, scfg)
+        eng = make_engine(params, cfg, scfg)
 
         def once():
-            sched = Scheduler(eng, slots=SLOTS, chunk=CHUNK,
-                              prompt_bucket="pow2")
+            sched = Scheduler(eng, slots=SLOTS, chunk=CHUNK)
             sched.run([Request(prompt=p, max_new_tokens=b)
                        for p, b in zip(prompts, budgets)])
             return sched
@@ -231,8 +236,8 @@ def _overload_rows():
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     # num_pages well under the worst-case auto-size: decode saturates the
     # pool, so the watermark shedder (not luck) does the dropping
-    eng = Engine(cfg, params, ServeConfig(max_len=32, paged=True,
-                                          page_size=4, num_pages=13))
+    eng = make_engine(params, cfg, ServeConfig(max_len=32, paged=True,
+                                           page_size=4, num_pages=13))
     prompts = [[rng.randrange(cfg.vocab) for _ in range(S)] for _ in range(N)]
     budgets = [rng.randint(4, 12) for _ in range(N)]
     prios = [rng.randint(0, 1) for _ in range(N)]
@@ -243,8 +248,7 @@ def _overload_rows():
                  else None for i in range(N)]
 
     def drive(**sched_kw):
-        sched = Scheduler(eng, slots=SLOTS, chunk=CHUNK,
-                          prompt_bucket="pow2", shed_watermark=0.6,
+        sched = Scheduler(eng, slots=SLOTS, chunk=CHUNK, shed_watermark=0.6,
                           overload_queue=3, **sched_kw)
         reqs = [Request(prompt=p, max_new_tokens=b, priority=pr, deadline=d)
                 for p, b, pr, d in zip(prompts, budgets, prios, deadlines)]
@@ -303,7 +307,7 @@ def _overload_rows():
 
 def _sharded_workload(engine, slots: int, chunk: int, prompts, budgets):
     """Drain one fixed request set through a fresh Scheduler; makespan (s)."""
-    sched = Scheduler(engine, slots=slots, chunk=chunk, prompt_bucket="pow2")
+    sched = Scheduler(engine, slots=slots, chunk=chunk)
     reqs = [Request(prompt=p, max_new_tokens=b)
             for p, b in zip(prompts, budgets)]
     t0 = time.perf_counter()
@@ -321,7 +325,6 @@ def _sharded_rows(meshes=None):
     curve into BENCH_serving.json.
     """
     from repro.launch.mesh import make_serving_mesh, parse_mesh
-    from repro.serve import ShardedEngine
 
     explicit = meshes is not None
     if meshes is None:
@@ -346,9 +349,9 @@ def _sharded_rows(meshes=None):
             if explicit:
                 make_serving_mesh(spec)      # raises with the XLA_FLAGS recipe
             continue
-        eng = ShardedEngine(cfg, params,
-                            ServeConfig(max_len=64, quant="w4a4_lut"),
-                            mesh=make_serving_mesh(spec))
+        eng = make_engine(params, cfg,
+                          ServeConfig(max_len=64, quant="w4a4_lut"),
+                          mesh=make_serving_mesh(spec))
         _sharded_workload(eng, SLOTS, CHUNK, prompts, budgets)   # warmup
         dt = _sharded_workload(eng, SLOTS, CHUNK, prompts, budgets)
         # per-shard KV bytes make the head-sharding memory win visible next
@@ -363,8 +366,89 @@ def _sharded_rows(meshes=None):
     return rows
 
 
+def _chunked_admission_rows():
+    """Per-round latency while a 2048-token prompt admits through the
+    prefill-chunk lane — the tentpole's bimodal-latency measurement.
+
+    Three slots decode continuously; a 2048-token prompt is submitted into
+    the fourth.  ``serve_p99_decode_round_while_admitting`` reports the p99
+    wall-clock of the rounds between that submission and the prompt's first
+    emitted token: with chunked admission every round carries at most
+    ``prefill_chunk`` prompt tokens, so the p99 stays flat (bounded by the
+    chunk budget, independent of prompt length), where the monolithic
+    fallback pays the whole 2048-token prefill inside one round — the
+    ``monolithic_admit_round_ms`` column prices exactly that stall on the
+    same engine geometry.  ``serve_chunked_padding_waste`` commits the chunk
+    lane's prefill/admitted ratio for the same trace (~1.0: chunk rounds
+    pack real tokens back-to-back; only the final partial round pads)."""
+    SLOTS, CHUNK, PREFILL, LONG = 4, 4, 128, 2048
+    rng = random.Random(0)
+    cfg = configs.get_config("qwen2-7b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(max_len=LONG + 128, prefill_chunk=PREFILL)
+    long_prompt = [rng.randrange(cfg.vocab) for _ in range(LONG)]
+    deco_prompts = [[rng.randrange(cfg.vocab) for _ in range(8)]
+                    for _ in range(SLOTS - 1)]
+
+    def admit_trace(eng):
+        """(decode-round times while admitting, decode-only times, sched)."""
+        sched = Scheduler(eng, slots=SLOTS, chunk=CHUNK)
+        for p in deco_prompts:
+            sched.submit(Request(prompt=p, max_new_tokens=120))
+        big = Request(prompt=long_prompt, max_new_tokens=8)
+        sched.submit(big)
+        admit = []
+        while not big.tokens:                # first token = admission done
+            t0 = time.perf_counter()
+            sched.step()
+            admit.append(time.perf_counter() - t0)
+            if len(admit) > 4 * (LONG // CHUNK):
+                raise RuntimeError("long prompt failed to admit")
+        base = []                            # steady decode-only rounds
+        for _ in range(6):
+            t0 = time.perf_counter()
+            sched.step()
+            base.append(time.perf_counter() - t0)
+        while sched.has_work:
+            sched.step()
+        return admit, base, sched
+
+    eng = make_engine(params, cfg, scfg)
+    # warm both compiled signatures (prefill-chunk lane + decode-only)
+    Scheduler(eng, slots=SLOTS, chunk=CHUNK).run(
+        [Request(prompt=long_prompt[:PREFILL + 8], max_new_tokens=CHUNK)])
+    admit, base, sched = admit_trace(eng)
+
+    class _Mono(Engine):
+        # force the batched-prefill fallback: the whole 2048-token prompt
+        # lands in a single admission round
+        requires_monolithic_admission = True
+
+    meng = _Mono(cfg, params, scfg)
+    admit_trace(meng)                        # warmup / compile
+    m_admit, _, _ = admit_trace(meng)
+
+    a = sorted(admit)
+    p99 = a[min(len(a) - 1, int(len(a) * 0.99))]
+    base_med = statistics.median(base)
+    return [
+        ("serve_p99_decode_round_while_admitting", p99 * 1e6,
+         f"p99_round_ms={p99 * 1e3:.2f};"
+         f"decode_only_round_ms={base_med * 1e3:.2f};"
+         f"monolithic_admit_round_ms={max(m_admit) * 1e3:.2f};"
+         f"admit_rounds={len(admit)};prompt_tokens={LONG};"
+         f"prefill_chunk={PREFILL};slots={SLOTS};chunk={CHUNK}"),
+        ("serve_chunked_padding_waste", sum(admit) * 1e6,
+         f"padding_waste={sched.padding_waste:.3f};"
+         f"prefill_tokens={sched.stats['prefill_tokens']};"
+         f"admitted_tokens={sched.stats['admitted_tokens']};"
+         f"admission_rounds={sched.stats['admission_rounds']}"),
+    ]
+
+
 def run():
-    rows = _quant_sweep() + _poisson_rows() + _paged_rows() + _overload_rows()
+    rows = (_quant_sweep() + _poisson_rows() + _paged_rows()
+            + _chunked_admission_rows() + _overload_rows())
     if jax.device_count() > 1:
         rows += _sharded_rows()
     else:

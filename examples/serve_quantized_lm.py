@@ -13,7 +13,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import transformer as T
-from repro.serve import Engine, Request, Scheduler, ServeConfig
+from repro.serve import Request, Scheduler, ServeConfig, make_engine
 
 
 def main():
@@ -29,7 +29,7 @@ def main():
     for quant in ("none", "w4a4_lut"):
         cfg = configs.get_config(args.arch, smoke=True, quant=quant)
         params = T.init_params(jax.random.PRNGKey(0), cfg)
-        eng = Engine(cfg, params, ServeConfig(max_len=64))
+        eng = make_engine(params, cfg, ServeConfig(max_len=64))
         eng.generate(prompts, max_new_tokens=2)      # compile
         t0 = time.perf_counter()
         out = eng.generate(prompts, max_new_tokens=args.new_tokens)
@@ -44,8 +44,8 @@ def main():
 
     # continuous batching: heterogeneous budgets + streaming, one slot pool
     cfg = configs.get_config(args.arch, smoke=True)
-    eng = Engine(cfg, T.init_params(jax.random.PRNGKey(0), cfg),
-                 ServeConfig(max_len=64))
+    eng = make_engine(T.init_params(jax.random.PRNGKey(0), cfg), cfg,
+                      ServeConfig(max_len=64))
     sched = Scheduler(eng, slots=args.batch, chunk=8)
     reqs = [Request(prompt=np.asarray(prompts[i]).tolist(),
                     max_new_tokens=4 + 6 * (i % 5),   # heterogeneous budgets
@@ -62,8 +62,8 @@ def main():
     # paged KV cache: same scheduler, but the slots share a page pool —
     # identical greedy tokens, memory scales with resident tokens, and
     # requests sharing a prompt prefix share physical pages
-    peng = Engine(cfg, T.init_params(jax.random.PRNGKey(0), cfg),
-                  ServeConfig(max_len=64, paged=True, page_size=4))
+    peng = make_engine(T.init_params(jax.random.PRNGKey(0), cfg), cfg,
+                       ServeConfig(max_len=64, paged=True, page_size=4))
     psched = Scheduler(peng, slots=args.batch, chunk=8)
     base = np.asarray(prompts[0]).tolist()
     preqs = [Request(prompt=base + [i], max_new_tokens=8)

@@ -100,6 +100,13 @@ def model_size() -> int:
     return _CTX[-1][1] if _CTX else 1
 
 
+def data_axis() -> Optional[str]:
+    """The data mesh axis active inside a tp_context (None outside one or
+    when no data axis is configured) — the unified serving step uses it to
+    turn local batch rows into global slot ids."""
+    return _CTX[-1][2] if _CTX else None
+
+
 def fold_in_data(key: jax.Array) -> jax.Array:
     """Give each data shard its own sampling stream (identity outside the
     context or when no data axis is configured).  Greedy decode never reads

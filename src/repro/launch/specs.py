@@ -172,6 +172,20 @@ def serving_cache_specs(cache_sds, data_axis: str | None,
     return jax.tree_util.tree_map_with_path(leaf, cache_sds)
 
 
+def serving_chunk_specs():
+    """PartitionSpec tuple for the unified step's chunk-entry lane:
+    ``(slot, tok, pos, first, budget_one)``, each ``[prefill_chunk]``.
+
+    All five are REPLICATED.  The slot column carries GLOBAL row ids; each
+    data shard's step impl matches them against its own
+    ``arange(local_slots) + axis_index(data) * local_slots`` rows, so
+    non-owning shards see all-False targets and run idempotent no-op
+    iterations.  Splitting these vectors over the data axis instead would
+    force the host to route entries per shard and break the fixed
+    ``[prefill_chunk]`` dispatch shape."""
+    return (P(), P(), P(), P(), P())
+
+
 def batch_specs(batch_sds, rules: Rules):
     b = rules.get("batch")
 

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.dist.sharding import constrain
 from repro.models.layers import (Params, apply_mrope, apply_rope, init_linear,
-                                 linear)
+                                 linear, stable_tanh)
 
 NEG_INF = -1e30
 
@@ -138,7 +138,7 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         s = jnp.einsum("bshgd,bkhd->bshgk", qg, kj,
                        preferred_element_type=jnp.float32)
         if logit_softcap is not None:
-            s = logit_softcap * jnp.tanh(s / logit_softcap)
+            s = logit_softcap * stable_tanh(s / logit_softcap)
         keep = _mask(q_pos, pj, causal, window)   # [B, S, kb]
         s = jnp.where(keep[:, :, None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
@@ -174,7 +174,7 @@ def full_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
     s = jnp.einsum("bshgd,bkhd->bshgk", qg, k,
                    preferred_element_type=jnp.float32)
     if logit_softcap is not None:
-        s = logit_softcap * jnp.tanh(s / logit_softcap)
+        s = logit_softcap * stable_tanh(s / logit_softcap)
     if bias is not None:
         s = s + bias
     keep = _mask(q_pos, k_pos, causal, window)
@@ -387,7 +387,7 @@ def int8_kv_attention(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
         * jnp.moveaxis(k_scale, 1, -1)[:, None, :, None, :]
     s = s_int.astype(jnp.float32) * scale / math.sqrt(D)
     if logit_softcap is not None:
-        s = logit_softcap * jnp.tanh(s / logit_softcap)
+        s = logit_softcap * stable_tanh(s / logit_softcap)
     keep = _mask(q_pos, k_pos, True, window)
     s = jnp.where(keep[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)

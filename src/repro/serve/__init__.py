@@ -1,52 +1,68 @@
 """Serving subsystem: continuous batching over static-shape decode buffers.
 
-Architecture (one compiled graph per box, arrows are host-side control)::
+Architecture (one compiled graph per round, arrows are host-side control)::
 
     Request ──▶ Scheduler (FIFO queue, slot map) ──▶ Engine (batch executor)
-                   │  admit: admit_batch = ONE dispatch — batched
-                   │         [slots, bucket] prefill + masked cache-stitch
-                   │         + first-token sampling + slot-state merge
-                   └─ rounds: decode_chunk (lax.scan over `chunk` tokens,
-                              on-device sampling, per-sequence positions)
+                   │  round: step = ONE dispatch — a [prefill_chunk] lane of
+                   │         masked single-token prefill iterations (each
+                   │         targeting one slot, sampling the first token
+                   │         when its prompt completes) followed by a
+                   │         lax.scan over `chunk` full-batch decode tokens
+                   └─ fallback: admit_monolithic — exact-length batched
+                               prefill + cache-stitch for models whose
+                               chunked state cannot be rebuilt per-token
+                               (enc-dec, SSM/RWKV recurrent state, int8 KV,
+                               MoE capacity, prompts past an SWA window)
+
+Chunked prefill: prompts are split into page-aligned chunks and interleaved
+with decode inside one fixed-shape step, so a long prompt never stalls the
+decode lanes of other slots (no bimodal latency) and the chunk lane is
+always full under backlog (padding waste ~1.0).  Size the lane with
+``ServeConfig.prefill_chunk``; chunk-ineligible requests fall back to
+monolithic admission in equal-length groups.
 
 Static-shape invariants:
-  * live caches are allocated once at ``[G, slots, max_len, ...]``; admission
-    and decode never reshape them — the stitch writes the masked slot rows
-    with traced true prompt lengths, and local/SWA layers' window rings are
-    arranged at stitch time from the true length (padded prompt buckets
-    never leak junk into ring slots; SSM/RWKV models, whose recurrent states
-    are not pad-invariant, admit at exact length in equal-length groups);
+  * live caches are allocated once at ``[G, slots, max_len, ...]``; steps
+    never reshape them — chunk iterations write one (token, position) per
+    slot behind a masked target row, and monolithic stitches write masked
+    slot rows with traced true prompt lengths;
   * decode positions are per-sequence ``pos: [slots]`` int32 — every slot at
     its own depth; a negative position is the free-slot sentinel (all keys of
-    that row stay masked, its writes land inside its own row);
-  * after warmup there is NO ``jax.jit`` retrace: prefill/stitch compile once
-    per prompt bucket and ``decode_chunk`` exactly once — slot index, length,
-    token/position/done vectors, EOS ids, and sampling parameters are all
-    traced values.
+    that row stay masked, its writes land inside its own row); a mid-prefill
+    slot parks with ``done=True`` at its next unprocessed (token, position)
+    so decode-lane re-runs are idempotent same-bit rewrites;
+  * after warmup there is NO ``jax.jit`` retrace: the unified ``step``
+    compiles once per (prefill_chunk, chunk, greedy) signature — slot ids,
+    tokens, positions, done flags, EOS ids, and sampling parameters are all
+    traced values (monolithic fallback admissions compile per exact length).
 
 ``Engine.generate`` keeps the static-batch path (all sequences in lock-step)
 as the bit-exactness oracle: at temperature 0 the scheduler emits the same
 tokens per request as one-shot static batching.
 
-``serve.sharded.ShardedEngine`` is the multi-device drop-in: the same
-admission/decode bodies compiled under ``shard_map`` over a (data, model)
-mesh — tensor-parallel integer-code matmuls along ``model``, an independent
+``serve.sharded.ShardedEngine`` is the multi-device drop-in: the same step /
+admission bodies compiled under ``shard_map`` over a (data, model) mesh —
+tensor-parallel integer-code matmuls along ``model``, an independent
 slot-pool shard per ``data`` index — with temperature-0 output bit-identical
-to the single-device engine.
+to the single-device engine.  ``make_engine`` picks the class from whether a
+mesh is supplied.
 
 ``ServeConfig(paged=True)`` swaps the dense per-slot KV buffers for the
 paged pool (``serve.paged``): shared per-layer page stores + fixed-shape
-per-slot page tables, prefix reuse via hash-chained page identity, and
-block-granular admission with deterministic preempt-and-requeue when the
-pool exhausts — still bit-identical at temperature 0, still retrace-free
-(tables change values, never shapes).
+per-slot page tables, prefix reuse via hash-chained page identity (gated on
+pages whose content is actually written), and block-granular admission with
+deterministic preempt-and-requeue when the pool exhausts — still
+bit-identical at temperature 0, still retrace-free (tables change values,
+never shapes).
 
 Fault tolerance (``serve.faults`` + scheduler hooks): requests carry
 logical-time ``deadline``/``priority``; the scheduler expires, sheds, and
 preempts deterministically from the caller's ``now=`` clock; a seeded
 ``FaultPlan`` injects NaN/page-table/dispatch/stall faults at the two engine
 dispatch sites, and detection (finite-logits + cache-finiteness + pool
-audits) plus rolling host snapshots give token-identical replay recovery.
+audits) plus rolling host snapshots give token-identical replay recovery —
+snapshots carry mid-prefill chunk progress, so replay resumes partially
+prefilled prompts exactly.
 """
 from repro.serve.engine import Engine, ServeConfig, sample_logits
 from repro.serve.faults import (CacheCorruption, EngineFault, Fault,
@@ -56,7 +72,21 @@ from repro.serve.request import Request, RequestStatus
 from repro.serve.scheduler import Scheduler
 from repro.serve.sharded import ShardedEngine
 
+
+def make_engine(params, cfg, scfg: ServeConfig = ServeConfig(), *,
+                mesh=None, data_axis: str = "data",
+                model_axis: str = "model"):
+    """Build the right engine for the deployment: a single-device ``Engine``
+    when ``mesh`` is None, else a ``ShardedEngine`` over the (data, model)
+    mesh.  Both are drop-in executors for ``Scheduler``; callers pick the
+    topology in one place instead of branching on the class."""
+    if mesh is None:
+        return Engine(cfg, params, scfg)
+    return ShardedEngine(cfg, params, scfg, mesh=mesh,
+                         data_axis=data_axis, model_axis=model_axis)
+
+
 __all__ = ["Engine", "ServeConfig", "Request", "RequestStatus", "Scheduler",
-           "ShardedEngine", "PagePool", "PagedLayout", "sample_logits",
-           "FaultPlan", "Fault", "EngineFault", "InjectedFault",
-           "CacheCorruption"]
+           "ShardedEngine", "make_engine", "PagePool", "PagedLayout",
+           "sample_logits", "FaultPlan", "Fault", "EngineFault",
+           "InjectedFault", "CacheCorruption"]

@@ -1,4 +1,5 @@
-"""Batched serving engine: the batch-step executor under the scheduler.
+"""Batched serving engine: the unified batch-step executor under the
+scheduler.
 
 Two entry paths share the same compiled decode graph:
 
@@ -6,18 +7,27 @@ Two entry paths share the same compiled decode graph:
     in lock-step (the legacy demo path, kept as the bit-exactness oracle for
     the scheduler).
   * the continuous-batching path driven by ``serve.scheduler.Scheduler`` —
-    ``admit_batch`` (ONE dispatch per admission round: batched ``[slots,
-    bucket]`` full-KV prefill, cache-stitch into the masked slots of the
-    live batch buffers, first-token sampling, slot-state merge; static
-    shapes, no retrace) and ``decode_chunk`` (a ``lax.scan`` over ``chunk``
-    tokens with on-device sampling).
+    ONE compiled ``step`` per round that carries ``prefill_chunk`` prompt
+    tokens (a scan of masked single-token iterations targeting the slots
+    being admitted, sampling a request's first output token the moment its
+    last prompt token lands) followed by ``chunk`` decode iterations over
+    every slot.  Prefill and decode share the round, so admission never
+    stalls decoding and padding waste stays ~1.0.  Models whose prompt
+    state cannot be built a token at a time (recurrent layers, MoE routing,
+    int8-KV, SWA prompts longer than the window) fall back to
+    ``admit_monolithic`` — a batched full-KV prefill stitched into the
+    masked slots of the live buffers — and then take pure-decode ``step``
+    rounds.
 
 Positions are per-sequence (``pos: [B]`` int32) everywhere in decode; a
 negative position is the free-slot sentinel — the attention mask drops every
 key of that row, and its cache writes land inside its own (free) row.
-Sampling is on-device with per-slot temperature / top-k / top-p and a
-fold-in PRNG (key folded with the global step index), so a chunk of tokens
-needs exactly one host round-trip.
+Mid-prefill rows park with ``done=True`` holding their next unprocessed
+(token, position): every iteration that does not target them re-runs that
+write, which is idempotent (same inputs, same bits).  Sampling is on-device
+with per-slot temperature / top-k / top-p and a fold-in PRNG (key folded
+with the global step index), so a round of tokens needs exactly one host
+round-trip.
 """
 from __future__ import annotations
 
@@ -54,11 +64,53 @@ class ServeConfig:
     num_pages: int = 0            # total pool pages incl. per-shard null
                                   # pages; 0 = worst-case auto-size
     prefix_reuse: bool = True     # share identical prompt-prefix pages
+    # prompt tokens processed per unified round (the chunked-prefill
+    # budget); must be a multiple of page_size on paged engines so chunk
+    # boundaries align with page boundaries.  None = auto (2 pages when
+    # paged, 8 tokens dense)
+    prefill_chunk: Optional[int] = None
     # invariant guards (serve.faults): audit the page pool before every
     # dispatch and have the scheduler act on the finite-logits flags the
     # compiled executors always report (the flags cost one cheap on-device
     # reduction either way; this gates the host-side checks/raises)
     guards: bool = True
+
+    def __post_init__(self):
+        """Validate serving invariants at construction — a bad geometry
+        should fail here with an actionable message, not deep inside the
+        first compiled dispatch."""
+        if self.max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.paged and self.max_len % self.page_size:
+            raise ValueError(
+                f"page_size ({self.page_size}) must divide max_len "
+                f"({self.max_len}) — pick a power-of-two page size or pad "
+                f"max_len up to a multiple")
+        if self.num_pages < 0:
+            raise ValueError(f"num_pages must be >= 0 (0 = auto-size), got "
+                             f"{self.num_pages}")
+        if self.prefill_chunk is not None:
+            if self.prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got "
+                                 f"{self.prefill_chunk}")
+            if self.prefill_chunk > self.max_len:
+                raise ValueError(
+                    f"prefill_chunk ({self.prefill_chunk}) cannot exceed "
+                    f"max_len ({self.max_len}) — no prompt is longer")
+            if self.paged and self.prefill_chunk % self.page_size:
+                raise ValueError(
+                    f"prefill_chunk ({self.prefill_chunk}) must be a "
+                    f"multiple of page_size ({self.page_size}) so chunk "
+                    f"boundaries align with page boundaries")
+
+    @property
+    def chunk_tokens(self) -> int:
+        """The resolved prefill chunk budget (auto when unset)."""
+        if self.prefill_chunk is not None:
+            return self.prefill_chunk
+        return 2 * self.page_size if self.paged else 8
 
 
 def sample_logits(logits: jax.Array, key, temperature: jax.Array,
@@ -253,6 +305,11 @@ class Engine:
                     "scheduler; enc-dec decode supports page tables at the "
                     "encdec.decode_step level only")
             paged_layout(cfg, scfg)          # raises on bad page geometry
+            if scfg.num_pages and scfg.num_pages // n_page_shards < 2:
+                raise ValueError(
+                    f"num_pages ({scfg.num_pages}) leaves no usable pages: "
+                    f"each of the {n_page_shards} shard(s) reserves page 0 "
+                    f"as the null page — give every shard at least 2 pages")
         mod = encdec if self.is_encdec else transformer
         self._mod = mod
         self._prefill = jax.jit(lambda p, *a: mod.prefill(p, cfg, *a))
@@ -260,7 +317,7 @@ class Engine:
         self._decode = jax.jit(lambda p, t, c, pos: mod.decode_step(
             p, cfg, t, c, pos), donate_argnums=2)
         self._admit_fn = self._build_admit_fn()
-        self._scan_fns: dict[tuple, callable] = {}
+        self._step_fns: dict[tuple, callable] = {}
         # fault injection (serve.faults): a FaultPlan applied at the two
         # dispatch sites; None in production
         self.faults = None
@@ -277,8 +334,8 @@ class Engine:
     def _build_admit_fn(self):
         return jax.jit(self._admit_impl, donate_argnums=1)
 
-    def _build_scan_fn(self, chunk: int, greedy: bool):
-        return jax.jit(self._make_decode_scan(chunk, greedy),
+    def _build_step_fn(self, C: int, chunk: int, greedy: bool):
+        return jax.jit(self._make_step_impl(C, chunk, greedy),
                        donate_argnums=1)
 
     # -- scheduler-facing API ------------------------------------------------
@@ -286,6 +343,54 @@ class Engine:
     @property
     def paged(self) -> bool:
         return bool(self.scfg.paged)
+
+    @property
+    def prefill_chunk(self) -> int:
+        """Prompt tokens carried by the chunk lane of one unified round."""
+        return self.scfg.chunk_tokens
+
+    @property
+    def requires_monolithic_admission(self) -> bool:
+        """True when prompt state cannot be built one token at a time and
+        the scheduler must admit through the batched-prefill fallback:
+
+        * recurrent layers (SSM/RWKV) — the recurrence must integrate the
+          exact prompt, and prefill's associative scan does not decompose
+          into per-token decode steps bit-identically;
+        * MoE routing — grouped dispatch capacity is a function of the
+          batched prompt length, so chunked routing takes different
+          drop/keep decisions than the prefill the oracle uses;
+        * int8-KV — prefill quantizes K/V per prompt tile; requantizing a
+          token at a time would change the stored codes.
+        """
+        if self.is_encdec or self.has_recurrent_state:
+            return True
+        if getattr(self.cfg, "kv_quant", "none") == "int8":
+            return True
+        return any(getattr(spec, "mlp", None) == "moe"
+                   for spec in getattr(self.cfg, "pattern", ()))
+
+    @property
+    def chunk_window_limit(self) -> Optional[int]:
+        """Longest sequence the chunk lane may admit on SWA models (the
+        window): a ring-buffered prompt longer than the window reads its
+        keys in ring order during chunked admission but in chronological
+        order during the oracle's prefill, and the float reduction order
+        differs at the last ulp.  None = no local-attention layers."""
+        pattern = getattr(self.cfg, "pattern", ())
+        if getattr(self.cfg, "window", 0) and any(
+                spec.kind == "attn" and spec.attn_type == "local"
+                for spec in pattern):
+            return int(self.cfg.window)
+        return None
+
+    def chunk_eligible(self, seq_len: int) -> bool:
+        """Can a ``seq_len``-token prompt be admitted through the chunk
+        lane (vs the monolithic fallback)?"""
+        if self.requires_monolithic_admission:
+            return False
+        limit = self.chunk_window_limit
+        return limit is None or seq_len <= limit
 
     def init_cache(self, batch: int):
         """Zero decode buffers for ``batch`` slots (static shapes).  Paged:
@@ -480,20 +585,24 @@ class Engine:
             out.append(c)
         return tuple(out)
 
-    def admit_batch(self, cache, prompts, lengths, mask, budget_one, eos,
-                    temperature, top_k, top_p, tok, pos, done, step0: int):
-        """Admission as ONE dispatch: batched prefill of the admitted
-        prompts, cache-stitch into the masked slots, first-token sampling,
-        and the slot-state merge.
+    def admit_monolithic(self, cache, prompts, lengths, mask, budget_one,
+                         eos, temperature, top_k, top_p, tok, pos, done,
+                         step0: int):
+        """Fallback admission as ONE dispatch: batched prefill of the
+        admitted prompts, cache-stitch into the masked slots, first-token
+        sampling, and the slot-state merge.  Used for models/requests
+        ``chunk_eligible`` rejects (recurrent state, MoE routing, int8-KV,
+        SWA prompts past the window); everything else admits through the
+        chunk lane of :meth:`step`.
 
-        prompts: [slots, P] int32 right-padded to the bucket (dummy rows for
-        slots that stay empty); lengths/mask/budget_one: per-slot vectors
-        (budget_one marks requests whose whole budget is the first token).
-        Returns (cache, tok, pos, done, tok0, done0, ok0) — tok0/done0 are
-        the per-slot first tokens and immediately-finished flags the
-        scheduler reads back for bookkeeping; ok0 is the per-slot
+        prompts: [slots, P] int32 right-padded to the dispatch width (dummy
+        rows for slots that stay empty); lengths/mask/budget_one: per-slot
+        vectors (budget_one marks requests whose whole budget is the first
+        token).  Returns (cache, tok, pos, done, tok0, done0, ok0) —
+        tok0/done0 are the per-slot first tokens and immediately-finished
+        flags the scheduler reads back for bookkeeping; ok0 is the per-slot
         finite-logits guard (False = the sampled row's logits were
-        non-finite, i.e. poisoned state).  Compiles once per prompt bucket.
+        non-finite, i.e. poisoned state).  Compiles once per prompt width.
 
         Paged engines additionally thread the page tables + per-slot
         start_tok (snapshotted from ``self.pool``, which the scheduler's
@@ -531,64 +640,143 @@ class Engine:
         done = jnp.where(mask, ~active, done)
         return cache, tok, pos, done, tok0, done0, ok0
 
-    def decode_chunk(self, cache, tok, pos, done, eos, temperature, top_k,
-                     top_p, step0: int, chunk: int, greedy: bool = False):
-        """Advance every slot ``chunk`` tokens in one dispatch (lax.scan with
-        on-device sampling).  Finished/free slots (done=True) hold their token
-        and position — their cache writes are idempotent.  ``greedy=True``
-        (every slot at temperature 0, no filtering — the caller knows this
-        statically) compiles an argmax-only variant that skips the per-token
-        vocab sort; its tokens are bit-identical to the general path's.
+    def step(self, cache, entries, tok, pos, done, eos, temperature, top_k,
+             top_p, step0: int, chunk: int, greedy: bool = False):
+        """ONE unified serving round in a single dispatch: a chunk lane of
+        ``prefill_chunk`` masked prompt-token iterations (absent when
+        ``entries`` is None) followed by a decode lane advancing every slot
+        ``chunk`` tokens (lax.scan with on-device sampling).
 
-        Returns (cache, tok, pos, done, tokens [B, chunk], dones [B, chunk],
-        ok [B]) — ok is the per-slot finite-logits guard over the whole
-        chunk (False = some live step of that slot sampled from non-finite
-        logits).
+        ``entries`` describes the round's prompt-chunk work as a dict of
+        [prefill_chunk] host arrays (padded with slot=-1 no-op entries):
+
+          * ``slot`` — target batch row (GLOBAL slot id under sharding)
+          * ``tok`` / ``pos`` — the prompt token and its absolute position
+          * ``first`` — True on a prompt's last token: that iteration's
+            logits are the request's first-token logits and are sampled
+          * ``budget_one`` — with ``first``: the request's whole budget is
+            that first token, so the row finishes immediately
+
+        Each chunk iteration runs the full-batch decode graph with the
+        target row's (token, position) substituted in; non-target rows
+        re-run their held (token, position), whose cache writes are
+        idempotent.  When ``first`` fires, the sampled token and position+1
+        become the row's decode state and the row joins the decode lane of
+        the SAME round.  Finished/free slots (done=True) hold token and
+        position throughout.  ``greedy=True`` (every slot at temperature 0,
+        no filtering — the caller knows this statically) compiles an
+        argmax-only variant that skips the per-token vocab sort; its tokens
+        are bit-identical to the general path's.
+
+        Returns (cache, tok, pos, done, tok0, done0, tokens [B, chunk],
+        dones [B, chunk], ok [B]) — tok0/done0 are per-slot first tokens /
+        immediately-finished flags, meaningful at rows whose ``first``
+        entry fired this round; ok is the per-slot finite-logits guard over
+        the whole round.  Compiles once per (has-entries, chunk, greedy).
         """
-        fn = self._scan_fns.get((chunk, greedy))
+        if self.is_encdec:
+            raise NotImplementedError(
+                "continuous batching serves decoder-only LMs; enc-dec uses "
+                "Engine.generate")
+        C = self.prefill_chunk if entries is not None else 0
+        fn = self._step_fns.get((C, chunk, greedy))
         if fn is None:
-            fn = self._build_scan_fn(chunk, greedy)
-            self._scan_fns[(chunk, greedy)] = fn
+            fn = self._build_step_fn(C, chunk, greedy)
+            self._step_fns[(C, chunk, greedy)] = fn
+        if entries is not None:
+            cache = self._fault_site("admit", cache, pos)
         cache = self._fault_site("decode", cache, pos)
         key = jax.random.PRNGKey(self.scfg.seed)
+        if C:
+            c_args = (jnp.asarray(entries["slot"], jnp.int32),
+                      jnp.asarray(entries["tok"], jnp.int32),
+                      jnp.asarray(entries["pos"], jnp.int32),
+                      jnp.asarray(entries["first"], bool),
+                      jnp.asarray(entries["budget_one"], bool))
+        else:
+            # dummy [1] no-op arrays keep one signature for both variants
+            z = jnp.zeros((1,), jnp.int32)
+            f = jnp.zeros((1,), bool)
+            c_args = (z - 1, z, z, f, f)
         extra = self._paged_decode_args() if self.paged else ()
-        return fn(self.params, cache, tok, pos, done, eos, temperature,
-                  top_k, top_p, key, jnp.int32(step0), *extra)
+        return fn(self.params, cache, *c_args, tok, pos, done, eos,
+                  temperature, top_k, top_p, key, jnp.int32(step0), *extra)
 
-    def _make_decode_scan(self, chunk: int, greedy: bool):
+    def _make_step_impl(self, C: int, chunk: int, greedy: bool):
         mod, cfg = self._mod, self.cfg
 
-        def run(params, cache, tok, pos, done, eos, temperature, top_k,
-                top_p, key, step0, *paged):
+        def run(params, cache, c_slot, c_tok, c_pos, c_first, c_b1, tok,
+                pos, done, eos, temperature, top_k, top_p, key, step0,
+                *paged):
             from repro.dist import tp as tp_lib
             key = tp_lib.fold_in_data(key)   # per-data-shard sampling stream
             tables = paged if paged else None
+            ok = jnp.ones(tok.shape, bool)
+            tok0, done0 = tok, done
 
-            def step(carry, i):
+            def sample(logits, key_i):
+                if greedy:
+                    return sample_logits(logits, key_i, 0.0, 0, 1.0)
+                return sample_logits(logits, key_i, temperature, top_k,
+                                     top_p)
+
+            if C:
+                # chunk-lane rows are GLOBAL slot ids: under a data mesh
+                # each shard owns a contiguous block of slots
+                rows = jnp.arange(tok.shape[0], dtype=jnp.int32)
+                axis = tp_lib.data_axis()
+                if axis is not None:
+                    rows = rows + jax.lax.axis_index(axis) * tok.shape[0]
+
+                def fill(carry, xs):
+                    cache, tok, pos, done, ok, tok0, done0 = carry
+                    s, t, p, first, b1, i = xs
+                    target = rows == s           # all-False for pad entries
+                    tok_in = jnp.where(target, t, tok)
+                    pos_in = jnp.where(target, p, pos)
+                    logits, cache = mod.decode_step(params, cfg, tok_in,
+                                                    cache, pos_in,
+                                                    tables=tables)
+                    fire = target & first
+                    ok = ok & (jnp.isfinite(logits).all(axis=-1) | ~fire)
+                    nxt = sample(logits, jax.random.fold_in(key, step0 + i))
+                    nd = ((nxt == eos) & (eos >= 0)) | b1
+                    # fire: the row becomes a decoder at (sampled, p + 1);
+                    # otherwise the target row parks on this entry's (t, p)
+                    # — its write next iteration is an idempotent re-run
+                    tok = jnp.where(fire, nxt, tok_in)
+                    pos = jnp.where(fire, p + 1, pos_in)
+                    done = jnp.where(fire, nd, done)
+                    tok0 = jnp.where(fire, nxt, tok0)
+                    done0 = jnp.where(fire, nd, done0)
+                    return (cache, tok, pos, done, ok, tok0, done0), None
+
+                xs = (c_slot, c_tok, c_pos, c_first, c_b1,
+                      jnp.arange(C, dtype=jnp.int32))
+                (cache, tok, pos, done, ok, tok0, done0), _ = jax.lax.scan(
+                    fill, (cache, tok, pos, done, ok, tok0, done0), xs)
+
+            def step(carry, j):
                 cache, tok, pos, done, ok = carry
                 logits, cache = mod.decode_step(params, cfg, tok, cache, pos,
                                                 tables=tables)
                 # finite-logits guard: rows already done (or free) before
                 # this step never sampled these logits — ignore them
                 ok = ok & (jnp.isfinite(logits).all(axis=-1) | done)
-                key_i = jax.random.fold_in(key, step0 + i)
-                if greedy:
-                    nxt = sample_logits(logits, key_i, 0.0, 0, 1.0)
-                else:
-                    nxt = sample_logits(logits, key_i, temperature, top_k,
-                                        top_p)
+                nxt = sample(logits,
+                             jax.random.fold_in(key, step0 + C + j))
                 nxt = jnp.where(done, tok, nxt)
                 pos = jnp.where(done, pos, pos + 1)
                 done = done | ((nxt == eos) & (eos >= 0))
                 return (cache, nxt, pos, done, ok), (nxt, done)
 
-            ok = jnp.ones(tok.shape, bool)
             (cache, tok, pos, done, ok), (toks, dones) = jax.lax.scan(
-                step, (cache, tok, pos, done, ok), jnp.arange(chunk))
+                step, (cache, tok, pos, done, ok),
+                jnp.arange(chunk, dtype=jnp.int32))
             # cache-finiteness guard: quantized (integer-code) matmul paths
             # launder NaN activations into finite garbage codes, so poisoned
             # KV can yield wrong-but-FINITE logits the guard above never
-            # sees.  Sweep the float attention leaves once per chunk; a
+            # sees.  Sweep the float attention leaves once per round; a
             # non-finite value anywhere fails every slot (recovery replays
             # the whole batch from the snapshot regardless).  Under tensor
             # parallelism each shard holds a head slice, so the verdict must
@@ -601,7 +789,7 @@ class Engine:
                 cache_ok = jax.lax.pmin(
                     cache_ok.astype(jnp.int32), axis).astype(bool)
             ok = ok & cache_ok
-            return cache, tok, pos, done, toks.T, dones.T, ok
+            return cache, tok, pos, done, tok0, done0, toks.T, dones.T, ok
 
         return run
 
@@ -680,9 +868,9 @@ class Engine:
             temp = jnp.full((B,), sc.temperature, jnp.float32)
             top_k = jnp.full((B,), sc.top_k, jnp.int32)
             top_p = jnp.full((B,), sc.top_p, jnp.float32)
-            ys = self.decode_chunk(cache, tok, pos, done, eos, temp,
-                                   top_k, top_p, 1,
-                                   max_new_tokens - 1, greedy=greedy)[4]
+            ys = self.step(cache, None, tok, pos, done, eos, temp,
+                           top_k, top_p, 1,
+                           max_new_tokens - 1, greedy=greedy)[6]
             out = jnp.concatenate([tok[:, None], ys], axis=1)
         else:
             toks = [tok]

@@ -99,6 +99,10 @@ class _Shard:
         self.ref = np.zeros((pages,), np.int32)
         self.hash2page: dict = {}                # chain key -> page id
         self.page_key: dict = {}                 # page id -> chain key
+        # registered pages whose content has actually been written: chunked
+        # prefill registers a prompt's pages at admission but fills them a
+        # chunk at a time, and only a FILLED page may be prefix-shared
+        self.ready: set = set()
 
     def alloc(self) -> int:
         return heapq.heappop(self.free)
@@ -111,6 +115,7 @@ class _Shard:
         key = self.page_key.pop(pid, None)
         if key is not None and self.hash2page.get(key) == pid:
             del self.hash2page[key]
+        self.ready.discard(pid)
         heapq.heappush(self.free, pid)
         return True
 
@@ -183,16 +188,28 @@ class PagePool:
 
     # -- admission / growth / release ---------------------------------------
 
-    def admit(self, slot: int, tokens: Sequence[int]) -> Optional[int]:
+    def admit(self, slot: int, tokens: Sequence[int], *,
+              fills_now: bool = True, share: bool = True) -> Optional[int]:
         """Map ``slot`` onto pages holding ``tokens`` (the prompt, or prompt
         + already-emitted tokens on a preemption resume).
 
         Walks the hash chain over the FULL prompt pages and shares every
-        leading hit; allocates fresh pages for the divergence tail and the
-        ring.  Returns the first token index the admission prefill must
-        stitch (``start_tok`` — everything before it lives in shared pages),
-        or None when the shard has too few free pages (the caller gates
-        admission / preempts).  Leaves no state behind on failure.
+        leading READY hit (a page is ready once its content is actually
+        written — registered-but-unfilled pages of an in-flight chunked
+        admission never match); allocates fresh pages for the divergence
+        tail and the ring.  Returns the first token index the admission
+        must fill (``start_tok`` — everything before it lives in shared
+        pages), or None when the shard has too few free pages (the caller
+        gates admission / preempts).  Leaves no state behind on failure.
+
+        ``fills_now=True`` (the monolithic path: one prefill dispatch
+        writes every page before anything else runs) marks the fresh full
+        pages ready immediately; chunked admissions pass ``fills_now=False``
+        and report progress through :meth:`mark_filled`.  ``share=False``
+        fully isolates the admission — neither maps shared pages nor
+        registers its own (chunked SWA admissions replay their window from
+        position 0, so their pages must never be mixed with a monolithic
+        sharer's prefill-written bits, in either direction).
         """
         assert self.n_full[slot] == 0 and self.n_ring[slot] == 0, \
             f"slot {slot} already mapped"
@@ -205,10 +222,10 @@ class PagePool:
             key = (key, tuple(int(t) for t in tokens[j * ps:(j + 1) * ps]))
             keys.append(key)
         shared: list[int] = []
-        if self.prefix_reuse:
+        if self.prefix_reuse and share:
             for key in keys:
                 pid = sh.hash2page.get(key)
-                if pid is None:
+                if pid is None or pid not in sh.ready:
                     break
                 shared.append(pid)
         fresh = nf - len(shared)
@@ -222,9 +239,11 @@ class PagePool:
             pid = sh.alloc()
             sh.ref[pid] = 1
             row[j] = pid
-            if self.prefix_reuse and j < len(keys):   # full page: register
+            if self.prefix_reuse and share and j < len(keys):   # register
                 sh.hash2page[keys[j]] = pid
                 sh.page_key[pid] = keys[j]
+                if fills_now:
+                    sh.ready.add(pid)
         for j in range(nr):
             pid = sh.alloc()
             sh.ref[pid] = 1
@@ -236,6 +255,18 @@ class PagePool:
         self.prefix_fresh += fresh
         self._bump(fresh + nr)
         return start
+
+    def mark_filled(self, slot: int, n_tokens: int) -> None:
+        """Record that ``slot``'s first ``n_tokens`` positions have been
+        written on device: every fully-covered registered page becomes ready
+        (shareable).  The chunked-prefill scheduler calls this as each
+        round's writes commit; already-ready (shared) pages are no-ops."""
+        sh = self._shards[self.shard_of(slot)]
+        for j in range(min(n_tokens // self.layout.page_size,
+                           self.n_full[slot])):
+            pid = int(self.table[slot, j])
+            if pid in sh.page_key:
+                sh.ready.add(pid)
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s mapping to cover ``n_tokens`` positions (called
@@ -401,6 +432,7 @@ class PagePool:
                 "ref": sh.ref.tolist(),
                 "registry": [[self._key_to_prefix(key), int(pid)]
                              for key, pid in sh.hash2page.items()],
+                "ready": sorted(sh.ready),
             } for sh in self._shards],
             "stats": {
                 "allocated_pages": self.allocated_pages,
@@ -431,6 +463,9 @@ class PagePool:
                 key = self._key_from_prefix(prefix)
                 sh.hash2page[key] = int(pid)
                 sh.page_key[int(pid)] = key
+            # older snapshots predate ready tracking: every registered page
+            # they carry was written by a monolithic admission
+            sh.ready = set(rec.get("ready", sh.page_key))
         st = state["stats"]
         self.allocated_pages = int(st["allocated_pages"])
         self.peak_pages = int(st["peak_pages"])

@@ -1,27 +1,40 @@
-"""Continuous-batching scheduler: slot-based request engine.
+"""Continuous-batching scheduler: slot-based request engine with chunked
+prefill.
 
 A fixed pool of ``slots`` decode lanes over one set of live cache buffers
-(static shapes, allocated once).  Requests queue FIFO; whenever slots are
-free the queue head is admitted in ONE batched prefill dispatch (prompts
-padded right to a shared bucket, dummy rows for slots that stay empty), the
-fresh caches are stitched into their slots with one masked write, and decode
-resumes — sequences at different depths advance together through
-per-sequence positions.  Decode runs in ``chunk``-token scan dispatches;
-between chunks the scheduler drains emitted tokens, retires finished
-sequences (EOS or budget), frees their slots, and admits from the queue.
+(static shapes, allocated once).  Requests queue FIFO; every round runs ONE
+unified ``Engine.step`` dispatch carrying ``prefill_chunk`` prompt tokens
+(the chunk lane — page-aligned slices of the prompts currently admitting,
+served FIFO: mid-prefill slots first, then new admissions from the queue
+head) followed by ``chunk`` decode tokens for every slot.  A prompt's last
+chunk entry samples its first output token in the same dispatch and the
+slot joins the decode lane immediately, so admission never stalls decoding:
+long prompts admit over several rounds at a fixed per-round cost (flat p99
+decode latency) instead of monopolizing a whole admission round, and the
+chunk budget is filled with real prompt tokens (padding waste ~1.0).
 Batch slots are never idle while work is queued — the request-level
 analogue of keeping the LUT fabric saturated.
 
+Models whose prompt state cannot be built one token at a time fall back to
+*monolithic admission* (``Engine.admit_monolithic``: one batched
+exact-length prefill dispatch, stitched into the masked slots): recurrent
+(SSM/RWKV) layers, MoE routing, int8-KV — and, per-request, SWA prompts
+longer than the attention window (see ``Engine.chunk_eligible``).
+Monolithic rounds group equal-length requests and prefill at exact prompt
+length — no padding buckets anywhere.
+
 Static-shape invariants (TPU-friendly, no retrace after warmup):
-  * live caches are ``[G, slots, max_len, ...]`` — admission writes slot
-    rows via ``Engine.admit_batch`` (traced per-slot lengths + admit mask);
-  * admission prefills a fixed ``[slots, bucket]`` batch, so prefill and
-    stitch compile once per prompt bucket, not per prompt length or per
-    number of admitted requests;
-  * the chunked decode compiles exactly once — slot state (token, position,
-    done, EOS id, sampling params) are all traced ``[slots]`` vectors; free
-    slots carry the negative-position sentinel, which keeps every one of
-    their keys masked.
+  * live caches are ``[G, slots, max_len, ...]``; the unified step compiles
+    once per (has-chunk-entries, chunk, greedy) — chunk entries are fixed
+    ``[prefill_chunk]`` vectors padded with no-op entries, and slot state
+    (token, position, done, EOS id, sampling params) are all traced
+    ``[slots]`` vectors; free slots carry the negative-position sentinel,
+    which keeps every one of their keys masked;
+  * mid-prefill slots park done=True on their latest chunk entry's (token,
+    position) — iterations that don't target them re-run that cache write
+    idempotently, so interleaving is bit-transparent (fresh admissions are
+    parked on their FIRST entry host-side before the dispatch, replacing
+    the free-slot sentinel whose clamped write would corrupt page 0).
 
 With a paged engine (``ServeConfig(paged=True)``) the scheduler also runs
 the block accounting: admission is gated on free pool pages (FIFO, no
@@ -69,6 +82,7 @@ from __future__ import annotations
 
 import collections
 import math
+import warnings
 from typing import Deque, List, Optional, Sequence
 
 import jax
@@ -80,24 +94,14 @@ from repro.serve.engine import Engine
 from repro.serve.faults import CacheCorruption, EngineFault, InjectedFault
 from repro.serve.request import Request, RequestStatus
 
-
-def _bucket_len(L: int, mode) -> int:
-    """Pad target for a length-L prompt: "exact", "pow2", or a fixed multiple."""
-    if mode == "exact":
-        return L
-    if mode == "pow2":
-        P = 8
-        while P < L:
-            P *= 2
-        return P
-    return -(-L // int(mode)) * int(mode)
+_UNSET = object()
 
 
 class Scheduler:
     """FIFO admission over a fixed slot map; ``Engine`` executes the batch."""
 
     def __init__(self, engine: Engine, slots: int = 4, chunk: int = 8,
-                 prompt_bucket="pow2", *, max_retries: int = 2,
+                 prompt_bucket=_UNSET, *, max_retries: int = 2,
                  snapshot_interval: int = 0,
                  shed_watermark: Optional[float] = None,
                  overload_queue: Optional[int] = None):
@@ -107,13 +111,16 @@ class Scheduler:
         self.engine = engine
         self.n_slots = slots
         self.chunk = chunk
-        # recurrent (SSM/RWKV) states are not pad-invariant: the recurrence
-        # integrates pad-token embeddings, so those models prefill at exact
-        # prompt length and admission groups equal-length requests (trades a
-        # prefill retrace per distinct length for correctness)
-        if engine.has_recurrent_state:
-            prompt_bucket = "exact"
-        self.prompt_bucket = prompt_bucket
+        if prompt_bucket is not _UNSET:
+            # one-release deprecation shim: the bucket machinery is gone —
+            # prompts admit in page-aligned chunks (ServeConfig.prefill_chunk)
+            # and the monolithic fallback prefills at exact length
+            warnings.warn(
+                "Scheduler(prompt_bucket=...) is deprecated and ignored: "
+                "admission is chunked — size it with "
+                "ServeConfig.prefill_chunk; the monolithic fallback "
+                "(recurrent/MoE/int8-KV models) prefills at exact prompt "
+                "length", DeprecationWarning, stacklevel=2)
         # fault tolerance / overload policy
         self.max_retries = max_retries
         self.snapshot_interval = snapshot_interval
@@ -142,6 +149,11 @@ class Scheduler:
         # tie-breaks pick the youngest), monotone admission counter
         self._admit_seq = [0] * slots
         self._admit_counter = 0
+        # chunked-prefill bookkeeping: per-slot tokens already fed through
+        # the chunk lane and the total the admission must feed (progress <
+        # target = mid-prefill; monolithic admissions set both at once)
+        self._progress = [0] * slots
+        self._target = [0] * slots
         # fault-recovery state: rolling snapshot + requests submitted since
         # it was taken (restore re-queues them so no submission is lost)
         self._snap = None
@@ -150,9 +162,10 @@ class Scheduler:
         self._ticks = 0
         self._retries_since_progress = 0
         # serving telemetry (the bench commits these): admission padding
-        # waste = prefill_tokens / admitted_tokens (prefill always runs the
-        # fixed [slots, bucket] shape), per-round slot occupancy as a
-        # running sum (bounded state — a long-running server never grows it)
+        # waste = prefill_tokens / admitted_tokens (the chunk lane always
+        # dispatches its fixed [prefill_chunk] width), per-round slot
+        # occupancy as a running sum (bounded state — a long-running server
+        # never grows it)
         self.stats = {"rounds": 0, "admission_rounds": 0,
                       "prefill_tokens": 0, "admitted_tokens": 0,
                       "emitted_tokens": 0, "occupancy_sum": 0.0,
@@ -190,6 +203,7 @@ class Scheduler:
         self.slots[victim] = None
         self.engine.pool.release(victim)
         self._reset_slot_sampling(victim)
+        self._progress[victim] = self._target[victim] = 0
         req.status = RequestStatus.QUEUED
         req.slot = None
         self.stats["preemptions"] += 1
@@ -207,8 +221,16 @@ class Scheduler:
         while True:
             active = [(s, r) for s, r in enumerate(self.slots)
                       if r is not None]
-            need = [(s, min(len(r.prompt) + len(r.tokens) + self.chunk - 1,
-                            max_len)) for s, r in active]
+            # a decoding slot's pending token (sampled, unwritten) is the
+            # first of the chunk's writes, so it needs chunk-1 positions past
+            # its residency; a mid-prefill slot that completes this round
+            # decodes a FULL chunk past its sequence (which may include
+            # previously emitted tokens after a preempt-and-resume), so it
+            # needs one more
+            need = [(s, min(len(r.prompt) + len(r.tokens) + self.chunk
+                            - (0 if self._progress[s] < self._target[s]
+                               else 1), max_len))
+                    for s, r in active]
             failed = next((s for s, n in need if not pool.ensure(s, n)),
                           None)
             if failed is None:
@@ -283,28 +305,36 @@ class Scheduler:
         (self._temp_h[slot], self._topk_h[slot],
          self._topp_h[slot]) = (scfg.temperature, scfg.top_k, scfg.top_p)
 
-    def _admit(self, now=None) -> int:
-        """Fill free slots from the queue head in ONE fused dispatch
-        (batched prefill + masked stitch + first-token sampling + slot-state
-        merge); returns #admissions.  Paged engines gate admission on free
-        pool pages — candidates that don't fit go back to the queue head in
-        FIFO order (no skip-ahead, so ordering stays deterministic).  An
-        injected dispatch failure rolls the admission back locally (pages
-        released, candidates requeued in order) and re-raises for the retry
-        path."""
+    def _admit(self, now=None, only_ineligible: bool = False) -> int:
+        """Monolithic admission: fill free slots from the queue head in ONE
+        fused dispatch (batched exact-length prefill + masked stitch +
+        first-token sampling + slot-state merge); returns #admissions.
+        Prompt state that cannot be built a token at a time is never
+        pad-invariant either (recurrent integration, MoE capacity), so the
+        dispatch takes only the leading run of EQUAL-length requests and
+        prefills unpadded — a prefill retrace per distinct length, zero
+        padding.  With ``only_ineligible`` (chunk-capable engines) the run
+        additionally stops at the first chunk-eligible request, which
+        admits through the chunk lane instead.
+
+        Paged engines gate admission on free pool pages — candidates that
+        don't fit go back to the queue head in FIFO order (no skip-ahead,
+        so ordering stays deterministic).  An injected dispatch failure
+        rolls the admission back locally (pages released, candidates
+        requeued in order) and re-raises for the retry path."""
         free = [s for s in range(self.n_slots) if self.slots[s] is None]
-        take = [self.queue.popleft()
-                for _ in range(min(len(free), len(self.queue)))]
-        if self.engine.has_recurrent_state and take:
-            # recurrent states must prefill unpadded: admit only the leading
-            # run of equal-length requests, requeue the rest (FIFO order)
-            L0 = len(self._seq(take[0]))
-            for i, r in enumerate(take):
-                if len(self._seq(r)) != L0:
-                    for r2 in reversed(take[i:]):
-                        self.queue.appendleft(r2)
-                    take = take[:i]
-                    break
+        take: List[Request] = []
+        for r in self.queue:
+            if len(take) >= len(free):
+                break
+            if only_ineligible and self.engine.chunk_eligible(
+                    len(self._seq(r))):
+                break
+            if take and len(self._seq(r)) != len(self._seq(take[0])):
+                break
+            take.append(r)
+        for _ in take:
+            self.queue.popleft()
         admitted = list(zip(free, take))
         if self.engine.paged and admitted:
             fits = []
@@ -324,10 +354,9 @@ class Scheduler:
         if not admitted:
             return 0
         R = self.n_slots
-        # the bucket never exceeds max_len: submit() guarantees every prompt
-        # fits, and the live buffers are max_len slots long
-        P = min(max(_bucket_len(len(self._seq(r)), self.prompt_bucket)
-                    for _, r in admitted), self.engine.scfg.max_len)
+        # exact length: every admitted request is L0 tokens (equal-length
+        # run), and submit() guarantees L0 <= max_len
+        P = len(self._seq(admitted[0][1]))
         prompts = np.zeros((R, P), np.int32)
         lengths = np.ones((R,), np.int32)
         mask = np.zeros((R,), bool)
@@ -349,7 +378,7 @@ class Scheduler:
         self._push_sampling_state()
         try:
             (self.cache, self.tok, self.pos, self.done, tok0, done0,
-             ok0) = self.engine.admit_batch(
+             ok0) = self.engine.admit_monolithic(
                 self.cache, prompts, lengths, mask, budget_one, self.eos,
                 self.temperature, self.top_k, self.top_p, self.tok, self.pos,
                 self.done, self._step)
@@ -384,6 +413,8 @@ class Scheduler:
             req.slot = slot
             self._admit_counter += 1
             self._admit_seq[slot] = self._admit_counter
+            L = int(lengths[slot])
+            self._progress[slot] = self._target[slot] = L
             if req.remaining >= 1:
                 req.emit(int(tok0_h[slot]))
             if done0_h[slot]:
@@ -393,6 +424,7 @@ class Scheduler:
                            else "length", now)
                 self.finished.append(req)
                 self._reset_slot_sampling(slot)
+                self._progress[slot] = self._target[slot] = 0
                 if self.engine.paged:
                     self.engine.pool.release(slot)
             else:
@@ -416,6 +448,7 @@ class Scheduler:
         if slot is not None:
             self.slots[slot] = None
             self._reset_slot_sampling(slot)
+            self._progress[slot] = self._target[slot] = 0
             if self.engine.paged:
                 self.engine.pool.release(slot)
 
@@ -491,6 +524,8 @@ class Scheduler:
             "step": self._step,
             "admit_seq": list(self._admit_seq),
             "admit_counter": self._admit_counter,
+            "progress": list(self._progress),
+            "target": list(self._target),
             "queue": list(self.queue),
             "slots": list(self.slots),
             "finished_len": len(self.finished),
@@ -520,6 +555,8 @@ class Scheduler:
         self._step = snap["step"]
         self._admit_seq = list(snap["admit_seq"])
         self._admit_counter = snap["admit_counter"]
+        self._progress = list(snap["progress"])
+        self._target = list(snap["target"])
         self.queue = collections.deque(snap["queue"])
         self.slots = list(snap["slots"])
         del self.finished[snap["finished_len"]:]
@@ -594,13 +631,16 @@ class Scheduler:
             "topk_h": self._topk_h, "topp_h": self._topp_h,
             "admit_seq": self._admit_seq,
             "admit_counter": self._admit_counter,
+            "progress": self._progress,
+            "target": self._target,
             "submit_count": self._submit_count,
             "stats": self.stats,
             "pool": (self.engine.pool.state_dict()
                      if self.engine.paged else None),
             "geometry": {"slots": self.n_slots, "chunk": self.chunk,
                          "max_len": self.engine.scfg.max_len,
-                         "paged": self.engine.paged},
+                         "paged": self.engine.paged,
+                         "prefill_chunk": self.engine.prefill_chunk},
             **recs,
         }}
         return ckpt_lib.save(ckpt_dir, self._ticks if step is None
@@ -619,9 +659,10 @@ class Scheduler:
             shardings=self.engine.serving_state_shardings())
         s = extra["serving"]
         geo = s["geometry"]
-        if (geo["slots"], geo["chunk"], geo["max_len"], geo["paged"]) != \
+        if (geo["slots"], geo["chunk"], geo["max_len"], geo["paged"],
+                geo.get("prefill_chunk", self.engine.prefill_chunk)) != \
                 (self.n_slots, self.chunk, self.engine.scfg.max_len,
-                 self.engine.paged):
+                 self.engine.paged, self.engine.prefill_chunk):
             raise ValueError(
                 f"serving-checkpoint geometry {geo} does not match this "
                 "scheduler/engine")
@@ -638,6 +679,8 @@ class Scheduler:
         self._ticks = s["ticks"]
         self._admit_seq = list(s["admit_seq"])
         self._admit_counter = s["admit_counter"]
+        self._progress = list(s.get("progress", [0] * self.n_slots))
+        self._target = list(s.get("target", [0] * self.n_slots))
         self._submit_count = s["submit_count"]
         self.stats = dict(s["stats"])
         if s["pool"] is not None:
@@ -656,9 +699,12 @@ class Scheduler:
 
     @property
     def padding_waste(self) -> float:
-        """prefill_tokens / admitted_tokens across all admission rounds —
-        how many padded prefill tokens the fixed [slots, bucket] admission
-        shape cost per useful prompt token (1.0 = no waste)."""
+        """prefill_tokens / admitted_tokens across all rounds with prefill
+        work — chunk-lane iterations spent per useful prompt token (1.0 =
+        every iteration carried a real token; under backlog the fixed
+        [prefill_chunk] lane fills completely, so this sits at ~1.0).
+        Monolithic fallback rounds count their full [slots, L] dispatch
+        against the real prompt tokens admitted."""
         a = self.stats["admitted_tokens"]
         return self.stats["prefill_tokens"] / a if a else 0.0
 
@@ -689,25 +735,185 @@ class Scheduler:
         self._retries_since_progress = 0
         return emitted
 
+    def _assemble_chunk(self, allow_admission: bool):
+        """Build this round's chunk-lane entries: continue mid-prefill slots
+        in admission order, then admit from the queue head (no skip-ahead)
+        while budget, free slots, and pool pages last.  New admissions are
+        committed host-side here (slot assigned, pool mapped, sampling
+        mirrors set) and recorded in ``fresh`` so an injected dispatch
+        failure can roll them back; ``plan`` (slot -> new progress) is only
+        applied after the dispatch commits.
+
+        Returns (entries | None, plan, fresh, completing) — entries is the
+        [prefill_chunk] arrays dict ``Engine.step`` consumes (None when the
+        round has no prefill work), completing the slots whose last prompt
+        token lands this round (their first output token is in tok0)."""
+        C = self.engine.prefill_chunk
+        e_slot: List[int] = []
+        e_tok: List[int] = []
+        e_pos: List[int] = []
+        e_first: List[bool] = []
+        e_b1: List[bool] = []
+        plan: dict = {}
+        fresh: List[tuple] = []
+        completing: set = set()
+        parks: dict = {}
+
+        def feed(slot, req, p0):
+            seq, L = self._seq(req), self._target[slot]
+            take = min(C - len(e_slot), L - p0)
+            for p in range(p0, p0 + take):
+                last = p == L - 1
+                e_slot.append(slot)
+                e_tok.append(int(seq[p]))
+                e_pos.append(p)
+                e_first.append(last)
+                e_b1.append(last and req.remaining <= 1)
+                if last:
+                    completing.add(slot)
+
+            plan[slot] = p0 + take
+
+        for slot in sorted(
+                (s for s in range(self.n_slots)
+                 if self.slots[s] is not None
+                 and self._progress[s] < self._target[s]),
+                key=lambda s: self._admit_seq[s]):
+            if len(e_slot) >= C:
+                break
+            feed(slot, self.slots[slot], self._progress[slot])
+        while allow_admission and len(e_slot) < C and self.queue:
+            req = self.queue[0]
+            seq = self._seq(req)
+            L = len(seq)
+            if not self.engine.chunk_eligible(L):
+                break               # head takes the monolithic fallback
+            slot = next((s for s in range(self.n_slots)
+                         if self.slots[s] is None), None)
+            if slot is None:
+                break
+            p0 = 0
+            if self.engine.paged:
+                # SWA admissions are isolated (share=False): they replay
+                # the window from position 0, and their chunk-lane page
+                # bits must never mix with a monolithic sharer's
+                share = self.engine.chunk_window_limit is None
+                start = self.engine.pool.admit(slot, seq, fills_now=False,
+                                               share=share)
+                if start is None:
+                    if (not any(r is not None for r in self.slots)
+                            and self.engine.pool.allocated_pages == 0):
+                        raise RuntimeError(
+                            "request needs more KV pages than the whole "
+                            "pool holds — raise ServeConfig.num_pages")
+                    break
+                # a fully-shared prompt still replays its last token: the
+                # completion entry's logits are the first-token logits
+                p0 = min(start, L - 1)
+                if (L - p0 <= C - len(e_slot)
+                        and not self.engine.pool.ensure(
+                            slot, min(L + self.chunk,
+                                      self.engine.scfg.max_len))):
+                    # completes this round but decode growth doesn't fit:
+                    # undo the mapping and wait (no skip-ahead)
+                    self.engine.pool.release(slot)
+                    break
+            self.queue.popleft()
+            req.status = RequestStatus.RUNNING
+            req.slot = slot
+            self.slots[slot] = req
+            self._target[slot] = L
+            self._progress[slot] = p0
+            (self._temp_h[slot], self._topk_h[slot],
+             self._topp_h[slot]) = self._sampling_for(req)
+            self._eos_h[slot] = -1 if req.eos_id is None else int(req.eos_id)
+            fresh.append((slot, req))
+            parks[slot] = (int(seq[p0]), p0)
+            feed(slot, req, p0)
+        if not e_slot:
+            return None, plan, fresh, completing, parks
+        if fresh:
+            self._push_sampling_state()
+        pad = C - len(e_slot)
+        entries = {"slot": e_slot + [-1] * pad,
+                   "tok": e_tok + [0] * pad,
+                   "pos": e_pos + [0] * pad,
+                   "first": e_first + [False] * pad,
+                   "budget_one": e_b1 + [False] * pad}
+        return entries, plan, fresh, completing, parks
+
     def _step_inner(self, now, now_v) -> int:
-        self._admit(now)
-        if not any(r is not None for r in self.slots):
-            return 0
-        if self.engine.paged:
-            # block accounting: map pages for the chunk ahead; preempts
-            # most-slack/youngest-first when the pool is exhausted
-            self._ensure_chunk_pages(now_v)
+        entries, plan, fresh, completing = None, {}, [], set()
+        parks: dict = {}
+        if self.engine.requires_monolithic_admission:
+            self._admit(now)
             if not any(r is not None for r in self.slots):
                 return 0
+            if self.engine.paged:
+                # block accounting: map pages for the chunk ahead; preempts
+                # most-slack/youngest-first when the pool is exhausted
+                self._ensure_chunk_pages(now_v)
+        else:
+            allow = True
+            if self.queue and not self.engine.chunk_eligible(
+                    len(self._seq(self.queue[0]))):
+                # the head needs the monolithic fallback (SWA prompt past
+                # the window): admit its equal-length run first; chunk
+                # admissions follow only if the new head is eligible
+                # (FIFO — no skip-ahead past a blocked head)
+                self._admit(now, only_ineligible=True)
+                allow = (not self.queue or self.engine.chunk_eligible(
+                    len(self._seq(self.queue[0]))))
+            if self.engine.paged:
+                self._ensure_chunk_pages(now_v)
+            entries, plan, fresh, completing, parks = \
+                self._assemble_chunk(allow)
+        if not any(r is not None for r in self.slots):
+            return 0
+        C = self.engine.prefill_chunk if entries is not None else 0
+        if parks:
+            # freshly admitted rows must park at their first entry BEFORE
+            # the dispatch: chunk iterations preceding the row's first
+            # target iteration re-run its held (tok, pos), and the free-slot
+            # sentinel pos=-1 would clamp the paged KV write onto page 0 of
+            # the row's table — a SHARED page under prefix reuse.  Parking
+            # at (seq[p0], p0) makes every such pre-write the same bits the
+            # entry itself writes.
+            tok_h, pos_h = np.asarray(self.tok).copy(), \
+                np.asarray(self.pos).copy()
+            for s, (t, p) in parks.items():
+                tok_h[s], pos_h[s] = t, p
+            place = self.engine.place_slot_state
+            self.tok = place(jnp.asarray(tok_h))
+            self.pos = place(jnp.asarray(pos_h))
         # host mirrors let us pick the argmax-only decode variant statically
         greedy = all(t <= 0.0 and k == 0 and p >= 1.0 for t, k, p in
                      zip(self._temp_h, self._topk_h, self._topp_h))
-        (self.cache, self.tok, self.pos, self.done, toks,
-         dones, ok) = self.engine.decode_chunk(
-            self.cache, self.tok, self.pos, self.done, self.eos,
-            self.temperature, self.top_k, self.top_p, self._step, self.chunk,
-            greedy=greedy)
-        self._step += self.chunk
+        try:
+            (self.cache, self.tok, self.pos, self.done, tok0, done0, toks,
+             dones, ok) = self.engine.step(
+                self.cache, entries, self.tok, self.pos, self.done, self.eos,
+                self.temperature, self.top_k, self.top_p, self._step,
+                self.chunk, greedy=greedy)
+        except InjectedFault:
+            # the dispatch never ran: roll back this round's fresh chunk
+            # admissions (pages released, candidates back at the queue head
+            # in FIFO order) and re-raise for the retry path
+            for slot, req in reversed(fresh):
+                if self.engine.paged:
+                    self.engine.pool.release(slot)
+                self.slots[slot] = None
+                self._reset_slot_sampling(slot)
+                self._progress[slot] = self._target[slot] = 0
+                req.status = RequestStatus.QUEUED
+                req.slot = None
+                self.queue.appendleft(req)
+            if fresh:
+                self._push_sampling_state()
+                # restore the free-slot sentinel the parks overwrote
+                self._free_on_device([slot for slot, _ in fresh])
+            raise
+        self._step += C + self.chunk
         if self.engine.scfg.guards:
             ok_h = np.asarray(ok)
             if not ok_h.all():
@@ -716,29 +922,58 @@ class Scheduler:
                 raise CacheCorruption(
                     "non-finite logits in decode for slots "
                     f"{np.flatnonzero(~ok_h).tolist()}")
+        # commit the chunk lane: progress applied, freshly covered pages
+        # become prefix-shareable, admission bookkeeping recorded
+        for slot, p in plan.items():
+            self._progress[slot] = p
+            if self.engine.paged:
+                self.engine.pool.mark_filled(slot, p)
+        for slot, req in fresh:
+            self._admit_counter += 1
+            self._admit_seq[slot] = self._admit_counter
+        if entries is not None:
+            self.stats["admission_rounds"] += 1
+            self.stats["prefill_tokens"] += C
+            self.stats["admitted_tokens"] += sum(
+                1 for s in entries["slot"] if s >= 0)
         self.stats["rounds"] += 1
         self.stats["occupancy_sum"] += (
             sum(r is not None for r in self.slots) / self.n_slots)
         toks_h, dones_h = np.asarray(toks), np.asarray(dones)
-        if callable(now):      # stamp finish times after the chunk completed
+        tok0_h, done0_h = np.asarray(tok0), np.asarray(done0)
+        if callable(now):      # stamp finish times after the round completed
             now = now()
         emitted, freed = 0, []
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
-            for j in range(self.chunk):
-                req.emit(int(toks_h[slot, j]))
-                emitted += 1
-                if dones_h[slot, j]:
-                    req.finish("eos", now)
-                    break
-                if req.remaining <= 0:
-                    req.finish("length", now)
-                    break
+            if self._progress[slot] < self._target[slot]:
+                continue            # still mid-prefill: nothing to emit yet
+            if slot in completing:
+                # the slot's last prompt token landed this round: its first
+                # output token was sampled in the same dispatch
+                if req.remaining >= 1:
+                    req.emit(int(tok0_h[slot]))
+                    emitted += 1
+                if done0_h[slot]:
+                    eos = self._eos_h[slot]
+                    req.finish("eos" if eos >= 0 and req.tokens
+                               and req.tokens[-1] == eos else "length", now)
+            if not req.done:
+                for j in range(self.chunk):
+                    req.emit(int(toks_h[slot, j]))
+                    emitted += 1
+                    if dones_h[slot, j]:
+                        req.finish("eos", now)
+                        break
+                    if req.remaining <= 0:
+                        req.finish("length", now)
+                        break
             if req.done:
                 self.finished.append(req)
                 self.slots[slot] = None
                 self._reset_slot_sampling(slot)
+                self._progress[slot] = self._target[slot] = 0
                 if self.engine.paged:
                     self.engine.pool.release(slot)
                 freed.append(slot)

@@ -29,7 +29,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.dist import tp as tp_lib
-from repro.launch.specs import serving_cache_specs
+from repro.launch.specs import serving_cache_specs, serving_chunk_specs
 from repro.serve import engine as engine_lib
 from repro.serve.engine import Engine, ServeConfig
 from repro.serve.quantize import quantize_params_for_serving
@@ -119,7 +119,7 @@ class ShardedEngine(Engine):
     def _build_admit_fn(self):
         d = self._dspec
         in_specs = (self._param_specs, self._cache_specs,
-                    d,                              # prompts [slots, bucket]
+                    d,                              # prompts [run, exact len]
                     d, d, d,                        # lengths, mask, budget_one
                     d, d, d, d,                     # eos, temp, top_k, top_p
                     d, d, d,                        # tok, pos, done
@@ -132,18 +132,20 @@ class ShardedEngine(Engine):
                      d)                              # ok0 finite-logits guard
         return self._shard_jit(self._admit_impl, in_specs, out_specs)
 
-    def _build_scan_fn(self, chunk: int, greedy: bool):
+    def _build_step_fn(self, C: int, chunk: int, greedy: bool):
         d = self._dspec
         in_specs = (self._param_specs, self._cache_specs,
+                    *serving_chunk_specs(),         # slot, tok, pos, first, b1
                     d, d, d,                        # tok, pos, done
                     d, d, d, d,                     # eos, temp, top_k, top_p
                     P(), P())                       # key, step0
         if self.scfg.paged:
             in_specs += (d, d)                      # full + ring page tables
         out_specs = (self._cache_specs, d, d, d,
-                     d, d,                # tokens/dones [slots, chunk]
+                     d, d,                # first tokens/dones [slots]
+                     d, d,                # decode tokens/dones [slots, chunk]
                      d)                   # ok finite-logits guard
-        return self._shard_jit(self._make_decode_scan(chunk, greedy),
+        return self._shard_jit(self._make_step_impl(C, chunk, greedy),
                                in_specs, out_specs)
 
     # -- scheduler-facing API ------------------------------------------------
@@ -215,5 +217,5 @@ class ShardedEngine(Engine):
     def generate(self, *a, **kw):
         raise NotImplementedError(
             "ShardedEngine serves through serve.scheduler.Scheduler "
-            "(admit_batch/decode_chunk); use the single-device Engine for "
-            "the static-batch generate() oracle")
+            "(the unified step / admit_monolithic); use the single-device "
+            "Engine for the static-batch generate() oracle")

@@ -46,7 +46,7 @@ def _transcripts(reqs):
 
 
 def _run(eng, cfg, plan=None, **sched_kw):
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact",
+    sched = Scheduler(eng, slots=2, chunk=2,
                       **sched_kw)
     eng.set_fault_plan(plan)
     reqs = _reqs(cfg)
@@ -113,7 +113,7 @@ def test_nan_poison_is_detected_not_served():
     the run rather than serve argmax-of-NaN tokens."""
     cfg, params, eng = _engine()
     plan = FaultPlan([Fault(site="decode", index=1, kind="nan_logits")])
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=2, chunk=2)
     eng.set_fault_plan(plan)
     try:
         with pytest.raises(RuntimeError, match="snapshot"):
@@ -124,7 +124,7 @@ def test_nan_poison_is_detected_not_served():
 
 def test_page_table_corruption_caught_by_pool_audit():
     cfg, params, eng = _engine(paged=True, page_size=4)
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=2, chunk=2)
     plan = FaultPlan([Fault(site="decode", index=1, kind="page_table")])
     eng.set_fault_plan(plan)
     try:
@@ -142,7 +142,7 @@ def test_streaming_callbacks_never_see_poisoned_tokens():
     reqs = _reqs(cfg)
     for r in reqs:
         r.on_token = lambda rq, t: clean.append((id(rq), t))
-    Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact").run(
+    Scheduler(eng, slots=2, chunk=2).run(
         reqs, max_rounds=64)
     streamed = []
     reqs2 = _reqs(cfg)
@@ -152,7 +152,7 @@ def test_streaming_callbacks_never_see_poisoned_tokens():
     eng.set_fault_plan(FaultPlan([Fault(site="decode", index=1,
                                         kind="nan_logits")]))
     try:
-        Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact",
+        Scheduler(eng, slots=2, chunk=2,
                   snapshot_interval=1).run(reqs2, max_rounds=64)
     finally:
         eng.set_fault_plan(None)
@@ -179,7 +179,7 @@ def test_retry_bound_drops_request_as_failed():
     # them while the per-request retry count accumulates to the bound
     plan = FaultPlan([Fault(site="decode", index=i, kind="nan_logits")
                       for i in (1, 3, 5)])
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact",
+    sched = Scheduler(eng, slots=2, chunk=2,
                       snapshot_interval=1, max_retries=2)
     reqs = _reqs(cfg, n=2, budget=10)
     eng.set_fault_plan(plan)
@@ -237,7 +237,7 @@ def test_sharded_fault_differential_subprocess():
 
         def run(plan):
             eng = ShardedEngine(cfg, params, scfg, mesh=mesh)
-            sched = Scheduler(eng, slots=4, chunk=2, prompt_bucket="exact",
+            sched = Scheduler(eng, slots=4, chunk=2,
                               snapshot_interval=1, max_retries=6)
             eng.set_fault_plan(plan)
             prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 5), 0,

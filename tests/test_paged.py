@@ -116,8 +116,8 @@ def _params(arch, **over):
     return cfg, T.init_params(jax.random.PRNGKey(0), cfg)
 
 
-def _drive_staggered(eng, prompts, new, slots=2, chunk=2, bucket="pow2"):
-    sched = Scheduler(eng, slots=slots, chunk=chunk, prompt_bucket=bucket)
+def _drive_staggered(eng, prompts, new, slots=2, chunk=2):
+    sched = Scheduler(eng, slots=slots, chunk=chunk)
     reqs = [Request(prompt=np.asarray(p).tolist(), max_new_tokens=new)
             for p in prompts]
     sched.submit(reqs[0])
@@ -148,9 +148,8 @@ def test_paged_scheduler_matches_dense_oracle(arch, S):
     for i, toks in enumerate(got):
         assert toks == want[i].tolist(), (arch, S, i)
     assert eng.pool.allocated_pages == 0           # everything released
-    sizes = (eng._admit_fn._cache_size(),
-             *(f._cache_size() for f in eng._scan_fns.values()))
-    assert all(s == 1 for s in sizes), sizes       # no-retrace invariant
+    sizes = tuple(f._cache_size() for f in eng._step_fns.values())
+    assert sizes and all(s == 1 for s in sizes), sizes  # no-retrace invariant
 
 
 def test_paged_int8_kv_matches_dense_scheduler():
@@ -199,7 +198,7 @@ def test_prefix_reuse_shares_pages_and_stays_exact():
         use_scan=False)[:, 9:])
     eng = Engine(cfg, params,
                  ServeConfig(max_len=32, paged=True, page_size=4))
-    sched = Scheduler(eng, slots=4, chunk=2, prompt_bucket="pow2")
+    sched = Scheduler(eng, slots=4, chunk=2)
     reqs = [Request(prompt=p, max_new_tokens=4) for p in prompts]
     sched.run(reqs)
     for i, r in enumerate(reqs):
@@ -217,7 +216,7 @@ def test_prefix_reuse_disabled_allocates_everything():
     eng = Engine(cfg, params,
                  ServeConfig(max_len=32, paged=True, page_size=4,
                              prefix_reuse=False))
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="pow2")
+    sched = Scheduler(eng, slots=2, chunk=2)
     sched.run([Request(prompt=base + [20 + i], max_new_tokens=2)
                for i in range(2)])
     assert eng.pool.prefix_hits == 0
@@ -240,7 +239,7 @@ def test_pool_exhaustion_preempts_youngest_and_stays_exact():
     eng = Engine(cfg, params,
                  ServeConfig(max_len=32, paged=True, page_size=4,
                              num_pages=11))
-    sched = Scheduler(eng, slots=3, chunk=2, prompt_bucket="pow2")
+    sched = Scheduler(eng, slots=3, chunk=2)
     reqs = [Request(prompt=np.asarray(p).tolist(), max_new_tokens=12)
             for p in prompts]
     sched.run(reqs)
@@ -248,9 +247,8 @@ def test_pool_exhaustion_preempts_youngest_and_stays_exact():
         assert r.tokens == want[i].tolist(), (i, r.tokens, want[i].tolist())
     assert sched.stats["preemptions"] > 0          # pool really was contended
     assert eng.pool.allocated_pages == 0
-    # decode executors never retrace (admit recompiles only per NEW bucket:
-    # the resumed sequence is longer, so one extra bucket is legal)
-    assert all(f._cache_size() == 1 for f in eng._scan_fns.values())
+    # the unified step never retraces across preempt/resume cycles
+    assert all(f._cache_size() == 1 for f in eng._step_fns.values())
 
 
 def test_single_oversized_request_raises():
@@ -258,7 +256,7 @@ def test_single_oversized_request_raises():
     eng = Engine(cfg, params,
                  ServeConfig(max_len=32, paged=True, page_size=4,
                              num_pages=3))
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="pow2")
+    sched = Scheduler(eng, slots=2, chunk=2)
     with pytest.raises(RuntimeError, match="num_pages"):
         sched.run([Request(prompt=list(range(1, 13)), max_new_tokens=4)])
 
@@ -362,7 +360,7 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     from repro.serve import Engine, Request, Scheduler, ServeConfig, \\
         ShardedEngine
 
-    def case(arch, quant, mesh_spec, kv_quant="none", bucket="pow2",
+    def case(arch, quant, mesh_spec, kv_quant="none",
              shared_prefix=False):
         cfg = dataclasses.replace(
             configs.get_config(arch, smoke=True, quant=quant),
@@ -381,7 +379,7 @@ _SHARDED_SCRIPT = textwrap.dedent("""
             want = np.asarray(ref.generate(
                 prompts, 5, use_scan=False)[:, prompts.shape[1]:])
         else:
-            rs = Scheduler(ref, slots=4, chunk=2, prompt_bucket=bucket)
+            rs = Scheduler(ref, slots=4, chunk=2)
             rr = [Request(prompt=np.asarray(prompts[i]).tolist(),
                           max_new_tokens=5) for i in range(4)]
             rs.run(rr)
@@ -389,7 +387,7 @@ _SHARDED_SCRIPT = textwrap.dedent("""
         scfg = ServeConfig(max_len=32, quant=quant, paged=True, page_size=4)
         eng = ShardedEngine(cfg, params, scfg,
                             mesh=make_serving_mesh(mesh_spec))
-        sched = Scheduler(eng, slots=4, chunk=2, prompt_bucket=bucket)
+        sched = Scheduler(eng, slots=4, chunk=2)
         reqs = [Request(prompt=np.asarray(prompts[i]).tolist(),
                         max_new_tokens=5) for i in range(4)]
         sched.submit(reqs[0]); sched.submit(reqs[1]); sched.step()
@@ -399,9 +397,8 @@ _SHARDED_SCRIPT = textwrap.dedent("""
         for i, r in enumerate(reqs):
             assert r.tokens == want[i].tolist(), \\
                 (arch, mesh_spec, i, r.tokens, want[i].tolist())
-        sizes = (eng._admit_fn._cache_size(),
-                 *(f._cache_size() for f in eng._scan_fns.values()))
-        assert all(s == 1 for s in sizes), (arch, mesh_spec, sizes)
+        sizes = tuple(f._cache_size() for f in eng._step_fns.values())
+        assert sizes and all(s == 1 for s in sizes), (arch, mesh_spec, sizes)
         if shared_prefix:
             assert eng.pool.prefix_hits > 0, "prefix reuse never fired"
         assert eng.pool.allocated_pages == 0

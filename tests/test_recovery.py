@@ -21,6 +21,7 @@ import pytest
 from repro import configs
 from repro.models import transformer as T
 from repro.serve import Engine, Request, Scheduler, ServeConfig
+from repro.serve.faults import Fault, FaultPlan
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -67,14 +68,14 @@ def test_save_load_continues_token_identically(tmp_path, arch, scfg_kw,
 
     # uninterrupted reference
     eng = Engine(cfg, params, scfg)
-    ref = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    ref = Scheduler(eng, slots=2, chunk=2)
     for r in _reqs(cfg):
         ref.submit(r)
     want = sorted(_drain(ref))
 
     # interrupted: a few rounds, save mid-stream, "crash"
     eng_a = Engine(cfg, params, scfg)
-    a = Scheduler(eng_a, slots=2, chunk=2, prompt_bucket="exact")
+    a = Scheduler(eng_a, slots=2, chunk=2)
     for r in reqs:
         a.submit(r)
     a.step()
@@ -84,7 +85,7 @@ def test_save_load_continues_token_identically(tmp_path, arch, scfg_kw,
 
     # fresh engine + scheduler (new params object, new executors)
     eng_b = Engine(cfg, T.init_params(jax.random.PRNGKey(0), cfg), scfg)
-    b = Scheduler(eng_b, slots=2, chunk=2, prompt_bucket="exact")
+    b = Scheduler(eng_b, slots=2, chunk=2)
     b.load(str(tmp_path))
     got = sorted(_drain(b))
     assert got == want
@@ -95,7 +96,7 @@ def test_save_load_roundtrips_pool_allocator(tmp_path):
     registry, stats) survives the disk round-trip exactly."""
     cfg, params, scfg = _make(paged=True, page_size=4)
     eng = Engine(cfg, params, scfg)
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=2, chunk=2)
     for r in _reqs(cfg):
         sched.submit(r)
     sched.step()
@@ -103,7 +104,7 @@ def test_save_load_roundtrips_pool_allocator(tmp_path):
     state_a = eng.pool.state_dict()
     sched.save(str(tmp_path))
     eng2 = Engine(cfg, params, scfg)
-    b = Scheduler(eng2, slots=2, chunk=2, prompt_bucket="exact")
+    b = Scheduler(eng2, slots=2, chunk=2)
     b.load(str(tmp_path))
     assert eng2.pool.state_dict() == state_a
     assert eng2.pool.validate() == []
@@ -112,7 +113,7 @@ def test_save_load_roundtrips_pool_allocator(tmp_path):
 def test_load_rejects_geometry_mismatch(tmp_path):
     cfg, params, scfg = _make()
     eng = Engine(cfg, params, scfg)
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=2, chunk=2)
     sched.submit(_reqs(cfg, n=1)[0])
     sched.step()
     sched.save(str(tmp_path))
@@ -145,14 +146,12 @@ def test_save_load_fresh_process_subprocess(tmp_path):
                           for r in s.finished)
     """)
     save_script = common + textwrap.dedent(f"""
-        ref = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2,
-                        prompt_bucket="exact")
+        ref = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2)
         for r in [Request(prompt=list(r.prompt), max_new_tokens=8)
                   for r in reqs]:
             ref.submit(r)
         print("WANT", drain(ref))
-        s = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2,
-                      prompt_bucket="exact")
+        s = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2)
         for r in reqs:
             s.submit(r)
         s.step(); s.step()
@@ -161,8 +160,7 @@ def test_save_load_fresh_process_subprocess(tmp_path):
         print("SAVED_OK")
     """)
     load_script = common + textwrap.dedent(f"""
-        s = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2,
-                      prompt_bucket="exact")
+        s = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2)
         s.load({str(tmp_path)!r})
         done = drain(s)
         print("GOT", done)
@@ -185,7 +183,7 @@ def test_host_snapshot_restore_is_exact():
     and the allocator bit-exactly (the fault-recovery primitive)."""
     cfg, params, scfg = _make(paged=True, page_size=4)
     eng = Engine(cfg, params, scfg)
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=2, chunk=2)
     reqs = _reqs(cfg)
     for r in reqs:
         sched.submit(r)
@@ -201,6 +199,84 @@ def test_host_snapshot_restore_is_exact():
     assert sorted(_drain(sched)) == want
 
 
+def _mid_prefill(sched):
+    return any(r is not None and sched._progress[s] < sched._target[s]
+               for s, r in enumerate(sched.slots))
+
+
+def test_snapshot_restore_mid_prefill_chunk():
+    """A snapshot taken while a long prompt is still mid-way through chunked
+    prefill (progress < target) carries the partial chunk cursor, and the
+    restored run finishes token-identically."""
+    cfg, params, scfg = _make(paged=True, page_size=4, prefill_chunk=4)
+    eng = Engine(cfg, params, scfg)
+    sched = Scheduler(eng, slots=2, chunk=2)
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (2, 20), 0, cfg.vocab)
+    reqs = [Request(prompt=np.asarray(p).tolist(), max_new_tokens=6)
+            for p in prompts]
+    for r in reqs:
+        sched.submit(r)
+    sched.step()                        # 4 of 20 prompt tokens prefetched
+    assert _mid_prefill(sched)          # snapshot lands inside the chunk walk
+    snap = sched.snapshot()
+    pool_mid = eng.pool.state_dict()
+    want = sorted(_drain(sched))
+    sched.restore(snap)
+    assert _mid_prefill(sched)
+    assert eng.pool.state_dict() == pool_mid
+    assert sorted(_drain(sched)) == want
+
+
+def test_save_load_mid_prefill_chunk(tmp_path):
+    """Disk save/load while a prompt is mid-chunked-prefill restores the
+    progress/target cursors into a FRESH engine and continues exactly."""
+    cfg, params, scfg = _make(paged=True, page_size=4, prefill_chunk=4)
+    reqs_ref = _reqs(cfg, n=2, S=20, budget=6)
+    ref = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2)
+    for r in reqs_ref:
+        ref.submit(r)
+    want = sorted(_drain(ref))
+
+    a = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2)
+    for r in _reqs(cfg, n=2, S=20, budget=6):
+        a.submit(r)
+    a.step()
+    assert _mid_prefill(a)
+    a.save(str(tmp_path))
+    b = Scheduler(Engine(cfg, T.init_params(jax.random.PRNGKey(0), cfg),
+                         scfg), slots=2, chunk=2)
+    b.load(str(tmp_path))
+    assert _mid_prefill(b)
+    assert sorted(_drain(b)) == want
+
+
+def test_fault_replay_resumes_mid_prefill_chunk():
+    """A dispatch fault that lands while a long prompt is mid-chunked-prefill
+    replays from the rolling snapshot — resuming INSIDE the chunk walk — and
+    still matches the fault-free transcript bit-for-bit."""
+    cfg, params, scfg = _make(paged=True, page_size=4, prefill_chunk=4)
+    reqs = _reqs(cfg, n=2, S=20, budget=6)
+    ref = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2)
+    ref.run(reqs, max_rounds=64)
+    want = [(r.finish_reason, list(r.tokens)) for r in reqs]
+
+    eng = Engine(cfg, params, scfg)
+    # admit dispatch #2 is the third prefill chunk of the 20-token prompt
+    plan = FaultPlan([Fault(site="admit", index=2, kind="dispatch",
+                            duration=0.001)])
+    eng.set_fault_plan(plan)
+    sched = Scheduler(eng, slots=2, chunk=2, snapshot_interval=1,
+                      max_retries=3)
+    got = _reqs(cfg, n=2, S=20, budget=6)
+    try:
+        sched.run(got, max_rounds=64)
+    finally:
+        eng.set_fault_plan(None)
+    assert not plan.pending
+    assert sched.stats["recoveries"] >= 1
+    assert [(r.finish_reason, list(r.tokens)) for r in got] == want
+
+
 # ---------------------------------------------------------------------------
 # deadlines / shedding / preemption satellites (logical time throughout)
 # ---------------------------------------------------------------------------
@@ -208,7 +284,7 @@ def test_host_snapshot_restore_is_exact():
 def test_deadline_expiry_queued_and_running():
     cfg, params, scfg = _make()
     eng = Engine(cfg, params, scfg)
-    sched = Scheduler(eng, slots=1, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=1, chunk=2)
     r_run = Request(prompt=[1, 2, 3], max_new_tokens=12, deadline=5.0)
     r_q = Request(prompt=[4, 5, 6], max_new_tokens=4, deadline=1.0)
     sched.submit(r_run, now=0.0)
@@ -227,8 +303,7 @@ def test_deadline_expiry_queued_and_running():
 
 def test_clockless_run_never_expires():
     cfg, params, scfg = _make()
-    sched = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2,
-                      prompt_bucket="exact")
+    sched = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2)
     req = Request(prompt=[1, 2, 3], max_new_tokens=4, deadline=0.5)
     sched.run([req])                     # no now= anywhere
     assert req.finish_reason == "length" and len(req.tokens) == 4
@@ -240,8 +315,7 @@ def test_shedding_is_deterministic_and_priority_ordered():
     identical set."""
     def run_once():
         cfg, params, scfg = _make()
-        sched = Scheduler(Engine(cfg, params, scfg), slots=1, chunk=2,
-                          prompt_bucket="exact", shed_watermark=1.0,
+        sched = Scheduler(Engine(cfg, params, scfg), slots=1, chunk=2, shed_watermark=1.0,
                           overload_queue=2)
         keep = Request(prompt=[1, 2, 3], max_new_tokens=8)
         sched.submit(keep, now=0.0)
@@ -262,8 +336,7 @@ def test_shedding_is_deterministic_and_priority_ordered():
 
 def test_no_shedding_below_watermark():
     cfg, params, scfg = _make()
-    sched = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2,
-                      prompt_bucket="exact", shed_watermark=1.0,
+    sched = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2, shed_watermark=1.0,
                       overload_queue=1)
     reqs = _reqs(cfg, n=6, budget=3)
     for r in reqs:
@@ -279,7 +352,7 @@ def test_preemption_prefers_most_slack_victim():
     the one with the MOST deadline slack — not simply the youngest."""
     cfg, params, scfg = _make(paged=True, page_size=4, num_pages=13)
     eng = Engine(cfg, params, scfg)
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=2, chunk=2)
     # 4 prompt + 24 new = 28 tokens = 7 pages per slot; two slots want 14
     # pages of the 12 usable (13 minus the null page) — the pool MUST
     # preempt someone mid-decode
@@ -333,7 +406,7 @@ def test_submit_rejects_malformed_requests():
 def test_drain_leak_telemetry():
     cfg, params, scfg = _make(paged=True, page_size=4)
     eng = Engine(cfg, params, scfg)
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=2, chunk=2)
     sched.run(_reqs(cfg))
     assert eng.pool.allocated_pages == 0
     assert eng.pool.leaked_pages() == []

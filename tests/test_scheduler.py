@@ -35,7 +35,7 @@ def test_staggered_continuous_matches_static(arch, S):
     cfg, params, eng = _engine(arch)
     prompts = jax.random.randint(jax.random.PRNGKey(1), (4, S), 0, cfg.vocab)
     want = eng.generate(prompts, max_new_tokens=5)[:, S:]
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=2, chunk=2)
     reqs = [Request(prompt=np.asarray(prompts[i]).tolist(), max_new_tokens=5)
             for i in range(4)]
     sched.submit(reqs[0])
@@ -50,18 +50,31 @@ def test_staggered_continuous_matches_static(arch, S):
         assert r.done and r.finish_reason == "length"
 
 
-def test_padded_prompt_bucket_matches_static():
-    """Right-padding prompts to a bucket (len 6 -> bucket 8) must not change
-    any emitted token (pad K/V stays masked until decode overwrites it)."""
-    cfg, params, eng = _engine()
+def test_chunked_prefill_matches_static():
+    """Chunked admission (prompts split across rounds at prefill_chunk
+    granularity) must not change any emitted token, and under backlog the
+    chunk lane carries no pad entries (padding waste exactly 1.0)."""
+    cfg, params, eng = _engine(prefill_chunk=4)
     prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
     want = eng.generate(prompts, max_new_tokens=5)[:, 6:]
-    sched = Scheduler(eng, slots=2, chunk=4, prompt_bucket="pow2")
+    sched = Scheduler(eng, slots=2, chunk=4)
     reqs = [Request(prompt=np.asarray(prompts[i]).tolist(), max_new_tokens=5)
             for i in range(2)]
     sched.run(reqs)
     for i, r in enumerate(reqs):
         assert r.tokens == np.asarray(want[i]).tolist()
+    assert sched.padding_waste == 1.0
+
+
+def test_prompt_bucket_kwarg_is_deprecated_and_ignored():
+    """The pre-chunking admission knob warns and changes nothing."""
+    cfg, params, eng = _engine()
+    want = np.asarray(eng.generate(jnp.asarray([[1, 2, 3, 4]]), 3)[:, 4:])
+    req = Request(prompt=[1, 2, 3, 4], max_new_tokens=3)
+    with pytest.warns(DeprecationWarning, match="prefill_chunk"):
+        sched = Scheduler(eng, slots=1, chunk=2, prompt_bucket="pow2")
+    sched.run([req])
+    assert req.tokens == want[0].tolist()
 
 
 # ---------------------------------------------------------------------------
@@ -74,7 +87,7 @@ def test_eos_early_exit_frees_slot():
     want = np.asarray(eng.generate(prompts, max_new_tokens=6)[:, 6:])
     eos = int(want[0, 2])            # req0's greedy stream hits this early
     hit = int(np.argmax(want[0] == eos))       # first occurrence
-    sched = Scheduler(eng, slots=1, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=1, chunk=2)
     r0 = Request(prompt=np.asarray(prompts[0]).tolist(), max_new_tokens=6,
                  eos_id=eos)
     r1 = Request(prompt=np.asarray(prompts[1]).tolist(), max_new_tokens=6)
@@ -153,20 +166,23 @@ def test_scanned_decode_matches_python_loop(temperature):
 # ---------------------------------------------------------------------------
 
 def test_no_retrace_across_staggered_admissions():
-    cfg, params, eng = _engine(max_len=48)
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="pow2")
+    """After warmup (one chunk-carrying round + one pure-decode round) no
+    new traces appear for any later prompt length or admission pattern —
+    the unified step's shapes are fully static."""
+    cfg, params, eng = _engine(max_len=48, prefill_chunk=4)
+    sched = Scheduler(eng, slots=2, chunk=2)
     sched.submit(Request(prompt=[1, 2, 3, 4, 5, 6], max_new_tokens=6))
-    sched.step()
-    sched.step()                     # warmup: bucket-8 admission + chunk
-    sizes = (eng._admit_fn._cache_size(),
-             eng._scan_fns[(2, True)]._cache_size())
-    assert sizes == (1, 1)
+    while sched.has_work:
+        sched.step()                 # warmup: chunked admission + decode
+    C = eng.prefill_chunk
+    assert set(eng._step_fns) == {(C, 2, True), (0, 2, True)}
+    sizes = {k: fn._cache_size() for k, fn in eng._step_fns.items()}
+    assert all(v == 1 for v in sizes.values())
     for p in ([7, 7, 7], [5, 4, 3, 2, 1], [1, 2, 3, 4, 5, 6, 7, 8]):
         sched.submit(Request(prompt=p, max_new_tokens=5))
     while sched.has_work:
         sched.step()
-    assert (eng._admit_fn._cache_size(),
-            eng._scan_fns[(2, True)]._cache_size()) == sizes
+    assert {k: fn._cache_size() for k, fn in eng._step_fns.items()} == sizes
 
 
 # ---------------------------------------------------------------------------
@@ -219,7 +235,7 @@ def test_scheduler_per_request_sampling_flags():
     g_req = Request(prompt=[1, 2, 3, 4], max_new_tokens=4)
     s_req = Request(prompt=[5, 6, 7, 8], max_new_tokens=4, temperature=1.0,
                     top_k=3)
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=2, chunk=2)
     sched.run([g_req, s_req])
     want = np.asarray(eng.generate(jnp.asarray([[1, 2, 3, 4]]), 4)[:, 4:])
     assert g_req.tokens == want[0].tolist()      # greedy row unaffected
@@ -238,8 +254,8 @@ def test_recurrent_state_mixed_length_admission_matches_static():
     p7 = jax.random.randint(jax.random.PRNGKey(2), (1, 7), 0, cfg.vocab)
     want5 = np.asarray(eng.generate(p5, max_new_tokens=4)[:, 5:])
     want7 = np.asarray(eng.generate(p7, max_new_tokens=4)[:, 7:])
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="pow2")
-    assert sched.prompt_bucket == "exact"      # forced for recurrent models
+    assert eng.requires_monolithic_admission  # chunking can't rebuild state
+    sched = Scheduler(eng, slots=2, chunk=2)
     r5 = Request(prompt=np.asarray(p5[0]).tolist(), max_new_tokens=4)
     r7 = Request(prompt=np.asarray(p7[0]).tolist(), max_new_tokens=4)
     sched.run([r5, r7])
@@ -247,14 +263,17 @@ def test_recurrent_state_mixed_length_admission_matches_static():
     assert r7.tokens == want7[0].tolist()
 
 
-def test_prompt_bucket_clamped_to_max_len():
-    """A pow2 bucket larger than max_len must not crash the stitch."""
-    cfg, params, eng = _engine(max_len=48)
-    prompt = list(range(1, 34))                # len 33 -> pow2 bucket 64 > 48
+def test_long_prompt_admits_over_many_rounds():
+    """A prompt much longer than prefill_chunk admits across several rounds
+    and still matches its static run exactly."""
+    cfg, params, eng = _engine(max_len=48, prefill_chunk=4)
+    prompt = list(range(1, 34))                # len 33 -> 9 chunk rounds
     want = np.asarray(eng.generate(jnp.asarray([prompt]), 6)[:, 33:])
     req = Request(prompt=prompt, max_new_tokens=6)
-    Scheduler(eng, slots=2, chunk=3, prompt_bucket="pow2").run([req])
+    sched = Scheduler(eng, slots=2, chunk=3)
+    sched.run([req])
     assert req.tokens == want[0].tolist()
+    assert sched.stats["admission_rounds"] >= 9
 
 
 def test_freed_slot_restores_greedy_fast_path():
@@ -262,7 +281,7 @@ def test_freed_slot_restores_greedy_fast_path():
     mirrors behind — later all-greedy rounds take the argmax-only decode
     variant again."""
     cfg, params, eng = _engine(max_len=32)
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=2, chunk=2)
     sched.run([Request(prompt=[1, 2, 3, 4], max_new_tokens=3,
                        temperature=0.9, top_k=4)])
     assert all(t <= 0.0 and k == 0 and p >= 1.0 for t, k, p in
@@ -283,7 +302,7 @@ def test_prompt_ending_in_eos_frees_slot():
     retirement — it must not wedge the pool."""
     cfg, params, eng = _engine()
     eos = 7
-    sched = Scheduler(eng, slots=1, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=1, chunk=2)
     r0 = Request(prompt=[1, 2, 3, eos], max_new_tokens=3, eos_id=eos)
     r1 = Request(prompt=[4, 5, 6, 8], max_new_tokens=3)
     done = sched.run([r0, r1], max_rounds=16)
@@ -303,7 +322,7 @@ def test_budget_zero_request_finishes_at_admission():
     and the retirement check never fired)."""
     cfg, params, eng = _engine()
     want = np.asarray(eng.generate(jnp.asarray([[5, 6, 7, 8]]), 3)[:, 4:])
-    sched = Scheduler(eng, slots=1, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=1, chunk=2)
     r0 = Request(prompt=[1, 2, 3, 4], max_new_tokens=0)
     r1 = Request(prompt=[5, 6, 7, 8], max_new_tokens=3)
     done = sched.run([r0, r1], max_rounds=16)
@@ -318,7 +337,7 @@ def test_budget_zero_and_one_mixed_with_normal_requests():
     """A pile of degenerate budgets drains in bounded rounds alongside a
     normal stream (regression guard on the admission fast-finish path)."""
     cfg, params, eng = _engine()
-    sched = Scheduler(eng, slots=2, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=2, chunk=2)
     reqs = [Request(prompt=[1, 2, 3], max_new_tokens=b)
             for b in (0, 1, 0, 4, 1, 0)]
     done = sched.run(reqs, max_rounds=32)
@@ -332,5 +351,5 @@ def test_request_streaming_callback():
     seen = []
     req = Request(prompt=[1, 2, 3, 4], max_new_tokens=4,
                   on_token=lambda r, t: seen.append(t))
-    Scheduler(eng, slots=1, chunk=2, prompt_bucket="exact").run([req])
+    Scheduler(eng, slots=1, chunk=2).run([req])
     assert seen == req.tokens and len(seen) == 4

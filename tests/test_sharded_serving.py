@@ -6,8 +6,8 @@ the main pytest process stays single-device.  It asserts, on a 2x2 AND a
 1x8 (data, model) mesh:
 
   * temperature-0 scheduler output is BIT-identical to the single-device
-    engine (static-batch ``generate`` oracle), through staggered admission,
-    padded pow2 prompt buckets, gemma SWA ring stitches, tied embeddings,
+    engine (static-batch ``generate`` oracle), through staggered chunked
+    admission, gemma SWA ring stitches, tied embeddings,
     the int8-KV decode cache, head-sharded attention (KV cache split to
     n_kv/tp heads per shard — asserted on the live cache's shard shapes),
     3D split-head projections, and sharded MoE expert banks (qwen2-moe +
@@ -270,7 +270,7 @@ _EQUIV_SCRIPT = textwrap.dedent("""
     from repro.serve import Engine, Request, Scheduler, ServeConfig, \\
         ShardedEngine
 
-    def case(arch, quant, mesh_spec, kv_quant="none", bucket="exact",
+    def case(arch, quant, mesh_spec, kv_quant="none",
              slots=4, chunk=2, oracle="generate", split3=False,
              expect_heads=None):
         cfg = dataclasses.replace(
@@ -287,8 +287,7 @@ _EQUIV_SCRIPT = textwrap.dedent("""
         else:
             # int8 live KV has no static-batch analogue (generate's prefill
             # cache stays float): the oracle is the single-device scheduler
-            ref_sched = Scheduler(ref, slots=slots, chunk=chunk,
-                                  prompt_bucket=bucket)
+            ref_sched = Scheduler(ref, slots=slots, chunk=chunk)
             ref_reqs = [Request(prompt=np.asarray(prompts[i]).tolist(),
                                 max_new_tokens=5) for i in range(4)]
             ref_sched.run(ref_reqs)
@@ -300,7 +299,7 @@ _EQUIV_SCRIPT = textwrap.dedent("""
         if expect_heads is not None:
             assert eng.head_sharded == (expect_heads < cfg.n_kv), \\
                 (arch, mesh_spec, eng.head_sharded)
-        sched = Scheduler(eng, slots=slots, chunk=chunk, prompt_bucket=bucket)
+        sched = Scheduler(eng, slots=slots, chunk=chunk)
         reqs = [Request(prompt=np.asarray(prompts[i]).tolist(),
                         max_new_tokens=5) for i in range(4)]
         # staggered admission: two requests land mid-flight
@@ -311,11 +310,13 @@ _EQUIV_SCRIPT = textwrap.dedent("""
         for i, r in enumerate(reqs):
             assert r.tokens == want[i].tolist(), \\
                 (arch, mesh_spec, i, r.tokens, want[i].tolist())
-        # no retrace after warmup: ONE admit executable (single prompt
-        # bucket) and ONE per decode-chunk variant
-        sizes = (eng._admit_fn._cache_size(),
-                 *(f._cache_size() for f in eng._scan_fns.values()))
-        assert all(s == 1 for s in sizes), (arch, mesh_spec, sizes)
+        # no retrace after warmup: ONE executable per unified-step variant
+        # (and, on monolithic-fallback models, ONE admit executable for the
+        # equal-length run)
+        sizes = tuple(f._cache_size() for f in eng._step_fns.values())
+        if eng.requires_monolithic_admission:
+            sizes += (eng._admit_fn._cache_size(),)
+        assert sizes and all(s == 1 for s in sizes), (arch, mesh_spec, sizes)
         if expect_heads is not None:
             # per-shard KV cache holds n_kv/tp heads on divisible configs
             # (the documented replicated fallback otherwise)
@@ -340,9 +341,8 @@ _EQUIV_SCRIPT = textwrap.dedent("""
     cfg0 = configs.get_config("qwen2-7b", smoke=True)
     case("qwen2-7b", "w4a4_lut", "2x2", expect_heads=cfg0.n_kv // 2)
     case("qwen2-7b", "w4a4_lut", "1x8", expect_heads=cfg0.n_kv)
-    # SWA ring stitch + tied embeddings + padded pow2 buckets, int8 weights,
-    # head-sharded rings
-    case("gemma2-2b", "w8a8", "2x2", bucket="pow2")
+    # SWA ring stitch + tied embeddings, int8 weights, head-sharded rings
+    case("gemma2-2b", "w8a8", "2x2")
     # int8 decode KV cache: head-sharded (2x2) AND replicated (1x8) stitches
     # (scheduler oracle)
     case("qwen2-7b", "w4a4_lut", "2x2", kv_quant="int8", oracle="scheduler",
@@ -400,7 +400,7 @@ _MOE_SCRIPT = textwrap.dedent("""
         # and stay replicated (not crashed) otherwise
         assert tp.has_marker(eng.params, "tp_exp") == \\
             (nm > 1 and E % nm == 0), (arch, mesh_spec)
-        sched = Scheduler(eng, slots=4, chunk=2, prompt_bucket="exact")
+        sched = Scheduler(eng, slots=4, chunk=2)
         reqs = [Request(prompt=np.asarray(prompts[i]).tolist(),
                         max_new_tokens=5) for i in range(4)]
         sched.submit(reqs[0]); sched.submit(reqs[1]); sched.step()
@@ -410,8 +410,10 @@ _MOE_SCRIPT = textwrap.dedent("""
         for i, r in enumerate(reqs):
             assert r.tokens == want[i].tolist(), \\
                 (arch, mesh_spec, i, r.tokens, want[i].tolist())
+        # MoE routing forces the monolithic fallback: admit executable + the
+        # decode-only unified step must each compile exactly once
         sizes = (eng._admit_fn._cache_size(),
-                 *(f._cache_size() for f in eng._scan_fns.values()))
+                 *(f._cache_size() for f in eng._step_fns.values()))
         assert all(s == 1 for s in sizes), (arch, mesh_spec, sizes)
         if eng.head_sharded:
             k = sched.cache[0]["k"]
@@ -464,7 +466,7 @@ _SAMPLING_SCRIPT = textwrap.dedent("""
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     eng = ShardedEngine(cfg, params, ServeConfig(max_len=32, quant="w4a4_lut"),
                         mesh=make_serving_mesh("2x2"))
-    sched = Scheduler(eng, slots=4, chunk=2, prompt_bucket="exact")
+    sched = Scheduler(eng, slots=4, chunk=2)
     reqs = [Request(prompt=[1 + i, 2, 3, 4], max_new_tokens=4,
                     temperature=0.9, top_k=8) for i in range(4)]
     done = sched.run(reqs)

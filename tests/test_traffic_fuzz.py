@@ -31,11 +31,17 @@ _TRAFFIC_SCRIPT = textwrap.dedent("""
     from repro import configs
     from repro.launch.mesh import make_serving_mesh
     from repro.models import transformer as T
-    from repro.serve import Engine, Request, Scheduler, ServeConfig, \\
-        ShardedEngine
+    from repro.serve import (Engine, Request, Scheduler, ServeConfig,
+                             ShardedEngine, make_engine)
 
     N_STREAMS = max(1, int(os.environ.get("REPRO_FUZZ_EXAMPLES", "8")) // 8)
     MAX_LEN, SLOTS, CHUNK = 32, 4, 3
+
+    class MonoEngine(Engine):
+        # force every admission through the batched-prefill fallback: the
+        # chunked-vs-monolithic differential below asserts the two paths
+        # serve bit-identical transcripts
+        requires_monolithic_admission = True
 
     def make_stream(cfg, seed):
         rng = random.Random(seed)
@@ -67,9 +73,8 @@ _TRAFFIC_SCRIPT = textwrap.dedent("""
         plan = [rng.randint(0, 3) for _ in range(4 * n)]
         return reqs, plan
 
-    def drive(engine, specs, plan, bucket):
-        sched = Scheduler(engine, slots=SLOTS, chunk=CHUNK,
-                          prompt_bucket=bucket)
+    def drive(engine, specs, plan):
+        sched = Scheduler(engine, slots=SLOTS, chunk=CHUNK)
         reqs = [Request(**s) for s in specs]
         i, p = 0, 0
         while i < len(reqs) or sched.has_work:
@@ -83,27 +88,36 @@ _TRAFFIC_SCRIPT = textwrap.dedent("""
         assert all(s is None for s in sched.slots) and not sched.queue
         return [(r.tokens, r.finish_reason) for r in reqs]
 
-    def stream_case(arch, quant, mesh_spec, seed, bucket):
+    def stream_case(arch, quant, mesh_spec, seed, prefill_chunk,
+                    mono_check=False):
         cfg = dataclasses.replace(
             configs.get_config(arch, smoke=True, quant=quant),
             compute_dtype="float32")
         params = T.init_params(jax.random.PRNGKey(0), cfg)
-        scfg = ServeConfig(max_len=MAX_LEN, quant=quant)
+        scfg = ServeConfig(max_len=MAX_LEN, quant=quant,
+                           prefill_chunk=prefill_chunk)
         specs, plan = make_stream(cfg, seed)
-        want = drive(Engine(cfg, params, scfg), specs, plan, bucket)
-        eng = ShardedEngine(cfg, params, scfg,
-                            mesh=make_serving_mesh(mesh_spec))
-        got = drive(eng, specs, plan, bucket)
+        want = drive(make_engine(params, cfg, scfg), specs, plan)
+        eng = make_engine(params, cfg, scfg,
+                          mesh=make_serving_mesh(mesh_spec))
+        got = drive(eng, specs, plan)
         for i, (w, g) in enumerate(zip(want, got)):
             assert g == w, (arch, mesh_spec, seed, i, g, w)
+        if mono_check:
+            # chunked-vs-monolithic: the SAME stream admitted through the
+            # batched-prefill fallback must serve identical transcripts
+            mono = drive(MonoEngine(cfg, params, scfg), specs, plan)
+            assert mono == want, ("monolithic-dense", seed)
         print("OK", arch, mesh_spec, "seed=", seed, "reqs=", len(specs),
               flush=True)
 
     for s in range(N_STREAMS):
-        stream_case("qwen2-7b", "w4a4_lut", "2x2", 100 + s, "pow2")
-        stream_case("qwen2-7b", "w4a4_lut", "1x8", 200 + s, "exact")
-    # one MoE stream: expert-sharded banks under random traffic
-    stream_case("qwen2-moe-a2.7b", "w4a4_lut", "2x2", 300, "pow2")
+        stream_case("qwen2-7b", "w4a4_lut", "2x2", 100 + s, 4,
+                    mono_check=(s == 0))
+        stream_case("qwen2-7b", "w4a4_lut", "1x8", 200 + s, None)
+    # one MoE stream: expert-sharded banks under random traffic (MoE routing
+    # forces the monolithic fallback on its own — both engines must agree)
+    stream_case("qwen2-moe-a2.7b", "w4a4_lut", "2x2", 300, None)
     print("ALL-OK")
 """)
 
@@ -124,7 +138,7 @@ _FORMULATION_SCRIPT = textwrap.dedent("""
     from repro import configs
     from repro.kernels.lutmul import ops as lut_ops
     from repro.models import transformer as T
-    from repro.serve import Engine, Request, Scheduler, ServeConfig
+    from repro.serve import Request, Scheduler, ServeConfig, make_engine
 
     MAX_LEN, SLOTS, CHUNK = 32, 4, 3
 
@@ -142,8 +156,7 @@ _FORMULATION_SCRIPT = textwrap.dedent("""
         return reqs, plan
 
     def drive(engine, specs, plan):
-        sched = Scheduler(engine, slots=SLOTS, chunk=CHUNK,
-                          prompt_bucket="pow2")
+        sched = Scheduler(engine, slots=SLOTS, chunk=CHUNK)
         reqs = [Request(**s) for s in specs]
         i, p = 0, 0
         while i < len(reqs) or sched.has_work:
@@ -169,8 +182,8 @@ _FORMULATION_SCRIPT = textwrap.dedent("""
             real = lut_ops.pick_formulation
             lut_ops.pick_formulation = lambda *a, **k: "onehot"
         try:
-            eng = Engine(cfg, params,
-                         ServeConfig(max_len=MAX_LEN, quant=quant))
+            eng = make_engine(params, cfg,
+                              ServeConfig(max_len=MAX_LEN, quant=quant))
         finally:
             if force_onehot:
                 lut_ops.pick_formulation = real
@@ -225,11 +238,17 @@ _PAGED_TRAFFIC_SCRIPT = textwrap.dedent("""
     from repro import configs
     from repro.launch.mesh import make_serving_mesh
     from repro.models import transformer as T
-    from repro.serve import Engine, Request, Scheduler, ServeConfig, \\
-        ShardedEngine
+    from repro.serve import (Engine, Request, Scheduler, ServeConfig,
+                             ShardedEngine, make_engine)
 
     N_STREAMS = max(1, int(os.environ.get("REPRO_FUZZ_EXAMPLES", "8")) // 8)
     MAX_LEN, SLOTS, CHUNK = 32, 4, 3
+
+    class MonoEngine(Engine):
+        requires_monolithic_admission = True
+
+    class MonoSharded(ShardedEngine):
+        requires_monolithic_admission = True
 
     def make_stream(cfg, seed):
         # shared-prefix traffic: a small set of base prefixes (page-aligned
@@ -259,9 +278,8 @@ _PAGED_TRAFFIC_SCRIPT = textwrap.dedent("""
         plan = [4] + [rng.randint(0, 3) for _ in range(4 * len(reqs))]
         return reqs, plan
 
-    def drive(engine, specs, plan, bucket):
-        sched = Scheduler(engine, slots=SLOTS, chunk=CHUNK,
-                          prompt_bucket=bucket)
+    def drive(engine, specs, plan):
+        sched = Scheduler(engine, slots=SLOTS, chunk=CHUNK)
         reqs = [Request(**s) for s in specs]
         i, p = 0, 0
         while i < len(reqs) or sched.has_work:
@@ -276,33 +294,45 @@ _PAGED_TRAFFIC_SCRIPT = textwrap.dedent("""
 
     hits = preempts = 0
     for s in range(N_STREAMS):
-        for mesh_spec, bucket, pages in (("2x2", "pow2", 0),
-                                         ("1x8", "exact", 0),
-                                         ("2x2", "pow2", 11)):
-            # pages=11 (vs the 33-page worst case): the four coexisting
-            # shared-base requests alone need 12 unique pages, so the pool
-            # must preempt — eviction is fuzzed alongside prefix reuse
+        for mesh_spec, prefill_chunk, pages in (("2x2", 4, 0),
+                                                ("1x8", None, 0),
+                                                ("2x2", 4, 7)):
+            # pages=7 (vs the 33-page worst case): chunked admission maps
+            # pages exactly (no bucket inflation), so the pool must be this
+            # tight before the coexisting shared-base requests exhaust it —
+            # eviction is fuzzed alongside prefix reuse
             cfg = dataclasses.replace(
                 configs.get_config("qwen2-7b", smoke=True, quant="w4a4_lut"),
                 compute_dtype="float32")
             params = T.init_params(jax.random.PRNGKey(0), cfg)
             specs, plan = make_stream(cfg, 1000 + s)
-            dense = ServeConfig(max_len=MAX_LEN, quant="w4a4_lut")
-            _, want = drive(Engine(cfg, params, dense), specs, plan, bucket)
+            dense = ServeConfig(max_len=MAX_LEN, quant="w4a4_lut",
+                                prefill_chunk=prefill_chunk)
+            _, want = drive(make_engine(params, cfg, dense), specs, plan)
             paged = dataclasses.replace(dense, paged=True, page_size=4,
                                         num_pages=pages)
-            peng = Engine(cfg, params, paged)
-            _, got = drive(peng, specs, plan, bucket)
+            peng = make_engine(params, cfg, paged)
+            _, got = drive(peng, specs, plan)
             assert got == want, ("paged-1dev", mesh_spec, s)
             hits += peng.pool.prefix_hits
             preempts += peng.pool.preemptions
             if pages == 0:      # sharded pool sizes must divide the mesh
-                seng = ShardedEngine(cfg, params, paged,
-                                     mesh=make_serving_mesh(mesh_spec))
-                _, got_s = drive(seng, specs, plan, bucket)
+                seng = make_engine(params, cfg, paged,
+                                   mesh=make_serving_mesh(mesh_spec))
+                _, got_s = drive(seng, specs, plan)
                 assert got_s == want, ("paged-sharded", mesh_spec, s)
                 hits += seng.pool.prefix_hits
-            print("OK", mesh_spec, "bucket=", bucket, "pages=", pages,
+            if s == 0 and pages == 0 and mesh_spec == "2x2":
+                # chunked-vs-monolithic: the batched-prefill fallback must
+                # serve the same stream bit-identically — paged single
+                # device AND paged sharded
+                _, mono = drive(MonoEngine(cfg, params, paged), specs, plan)
+                assert mono == want, ("monolithic-paged", s)
+                meng = MonoSharded(cfg, params, paged,
+                                   mesh=make_serving_mesh(mesh_spec))
+                _, mono_s = drive(meng, specs, plan)
+                assert mono_s == want, ("monolithic-paged-sharded", s)
+            print("OK", mesh_spec, "chunk=", prefill_chunk, "pages=", pages,
                   flush=True)
     assert hits > 0, "prefix reuse never fired across the fuzz streams"
     assert preempts > 0, "the contended pool never forced a preemption"

@@ -210,6 +210,39 @@ def plane_decomposition(spec) -> tuple[int, tuple[int, ...], int]:
     return b, tuple([1 << i for i in range(b - 1)] + [-(1 << (b - 1))]), 0
 
 
+def truncate_plane_spec(spec, keep: int) -> tuple[int, int]:
+    """Plane-suffix truncation: ``(kept_spec, scale_mult)`` for a drafter.
+
+    For an int spec ``B`` the plane order is LSB-first with the sign plane
+    last, so the *top* ``keep`` planes are the suffix slice
+    ``planes[..., B-keep:, :, :]`` and their coefficients
+    ``(2^(B-keep), .., 2^(B-2), -2^(B-1))`` factor as
+    ``2^(B-keep) * plane_decomposition(keep)[1]`` — i.e. the suffix IS a
+    valid ``keep``-bit plane stack once the weight scale absorbs the
+    ``2^(B-keep)`` multiplier.  Truncation drops the low planes, so the
+    approximation error per code is in ``[0, 2^(B-keep) - 1]`` (sign kept).
+
+    Only int specs with ``2 <= keep < B`` truncate; ``ternary``/``w1`` have
+    no positional planes to drop and raise.
+    """
+    validate_weight_bits(spec)
+    if spec in ("ternary", 1):
+        raise ValueError(
+            f"weight spec {spec!r} has no truncatable plane prefix: its "
+            "planes are not positional powers of two")
+    b = int(spec)
+    if not 2 <= keep < b:
+        raise ValueError(
+            f"draft plane count must satisfy 2 <= keep < {b} for a w{b} "
+            f"weight, got keep={keep}")
+    n, coeffs, const = plane_decomposition(b)
+    kn, kcoeffs, kconst = plane_decomposition(keep)
+    mult = 1 << (b - keep)
+    assert coeffs[b - keep:] == tuple(c * mult for c in kcoeffs) and not const \
+        and not kconst
+    return keep, mult
+
+
 def planes_from_codes(codes, spec) -> jnp.ndarray:
     """Integer weight codes [..., K, N] -> {0,1} uint8 planes [..., P, K, N].
 

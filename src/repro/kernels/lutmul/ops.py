@@ -32,7 +32,8 @@ import jax.numpy as jnp
 
 from repro.core.lut import (contraction_table, decode_planes, pack_bitplanes,
                             pack_int4, plane_decomposition, planes_from_codes,
-                            validate_weight_bits, weight_bits)
+                            truncate_plane_spec, validate_weight_bits,
+                            weight_bits)
 from repro.kernels.lutmul import kernel, ref
 
 _BACKEND: Optional[str] = None
@@ -242,6 +243,28 @@ def _check_tmac_shapes(a_q: jax.Array, w_planes: jax.Array, wbits) -> None:
             f"tmac w_planes rows ({w_planes.shape[1]}) must be K//8 = "
             f"{K // 8} for activation K={K}: the weight was packed for "
             f"K={w_planes.shape[1] * 8}")
+
+
+def truncate_planes(w_planes: jax.Array, wbits, keep: int
+                    ) -> tuple[jax.Array, int, int]:
+    """Top-``keep`` plane suffix of a packed w{wbits} tmac stack.
+
+    ``w_planes`` is a packed bitplane stack with the plane axis at -3
+    (``[P, K//8, N]`` or stacked ``[G, P, K//8, N]``).  Returns
+    ``(draft_planes, draft_wbits, scale_mult)``: the suffix slice is a
+    *valid* ``w{keep}`` tmac stack (``truncate_plane_spec`` proves the
+    coefficient algebra), and ``scale_mult = 2^(wbits-keep)`` must be folded
+    into the leaf's ``w_scale`` so the drafter dequantizes on the target's
+    code grid.  Pure slicing — the draft view shares the target's packed
+    bytes, zero extra weight memory.
+    """
+    kept, mult = truncate_plane_spec(wbits, keep)
+    n_planes = plane_decomposition(wbits)[0]
+    if w_planes.ndim < 3 or w_planes.shape[-3] != n_planes:
+        raise ValueError(
+            f"cannot truncate: leaf has plane axis {w_planes.shape} but "
+            f"wbits={wbits!r} decomposes into {n_planes} planes")
+    return w_planes[..., n_planes - kept:, :, :], kept, mult
 
 
 # ---------------------------------------------------------------------------

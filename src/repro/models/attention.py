@@ -278,6 +278,15 @@ def paged_write(pool: jax.Array, table: jax.Array, slot: jax.Array,
     return pool.at[page, slot % ps].set(new[:, 0].astype(pool.dtype))
 
 
+def _write_kv_block(cache: jax.Array, new: jax.Array,
+                    start: jax.Array) -> jax.Array:
+    """Contiguous S-token cache write: cache [B,T,...], new [B,S,...],
+    start [B] (dynamic_update_slice clamps starts into [0, T-S])."""
+    return jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
+    )(cache, new.astype(cache.dtype), start)
+
+
 def decode_kv_positions(pos: jax.Array, T: int, rolling: bool) -> jax.Array:
     """Absolute positions of cache slots for per-sequence decode.
 
@@ -346,6 +355,65 @@ def decode_attention(p: Params, x: jax.Array, cache_k: jax.Array,
     out = full_attention(q, dense_k, dense_v, posb, k_pos, causal=True,
                          window=window, logit_softcap=logit_softcap)
     y = _proj_out(p, out.astype(compute_dtype), B, 1, n_heads, head_dim,
+                  quant, compute_dtype)
+    return y, cache_k, cache_v
+
+
+def decode_attention_multi(p: Params, x: jax.Array, cache_k: jax.Array,
+                           cache_v: jax.Array, pos: jax.Array, *,
+                           n_heads: int, n_kv: int, head_dim: int,
+                           logit_softcap: Optional[float] = None,
+                           rope_theta: float = 10000.0, rope_mode: str = "rope",
+                           mrope_sections: tuple[int, ...] = (),
+                           quant: str = "none", compute_dtype=jnp.bfloat16,
+                           table: Optional[jax.Array] = None):
+    """A contiguous S-token decode block in one call (speculative verify).
+
+    x: [B, S, d]; pos: [B] int32 start positions — token i of a row sits at
+    ``pos + i``.  All S writes land *before* attention, and the causal mask
+    hides keys past ``pos + i`` from query i, so output position i is
+    bit-identical to what S sequential :func:`decode_attention` calls would
+    produce (same einsum contractions, per-row independent reductions —
+    the chunked-prefill differentials' invariant).
+
+    Only the full-length (non-rolling) cache layout: SWA rings are excluded
+    from speculative rounds by the engine's eligibility check.  Negative
+    ``pos`` rows (free slots) clamp their writes into their own row / the
+    null page and keep every key masked, exactly like single-token decode.
+    """
+    B, S = x.shape[:2]
+    paged = table is not None
+    T = table.shape[1] * cache_k.shape[1] if paged else cache_k.shape[1]
+    q = _proj_qkv(p, "wq", x, B, S, n_heads, head_dim, quant, compute_dtype)
+    k = _proj_qkv(p, "wk", x, B, S, n_kv, head_dim, quant, compute_dtype)
+    v = _proj_qkv(p, "wv", x, B, S, n_kv, head_dim, quant, compute_dtype)
+    posv = _pos_vec(pos, B)
+    q_pos = posv[:, None] + jnp.arange(S, dtype=jnp.int32)[None]   # [B,S]
+    if rope_mode == "mrope":
+        mpos = jnp.broadcast_to(q_pos[..., None], (B, S, 3))
+        q = apply_mrope(q, mpos, mrope_sections, rope_theta)
+        k = apply_mrope(k, mpos, mrope_sections, rope_theta)
+    elif rope_mode == "rope":
+        q = apply_rope(q, q_pos, rope_theta)
+        k = apply_rope(k, q_pos, rope_theta)
+    if paged:
+        # S sequential table writes (deterministic, and unmapped/free rows
+        # collapse into the null page exactly like single-token decode)
+        for i in range(S):
+            slot = jnp.clip(posv + i, 0, T - 1)
+            cache_k = paged_write(cache_k, table, slot, k[:, i:i + 1])
+            cache_v = paged_write(cache_v, table, slot, v[:, i:i + 1])
+        dense_k = paged_gather(cache_k, table)
+        dense_v = paged_gather(cache_v, table)
+    else:
+        cache_k = dense_k = _write_kv_block(cache_k, k, posv)
+        cache_v = dense_v = _write_kv_block(cache_v, v, posv)
+    # free rows keep posv < 0 so every key stays masked for them
+    k_pos = decode_kv_positions(jnp.where(posv >= 0, posv + (S - 1), posv),
+                                T, rolling=False)
+    out = full_attention(q, dense_k, dense_v, q_pos, k_pos, causal=True,
+                         window=None, logit_softcap=logit_softcap)
+    y = _proj_out(p, out.astype(compute_dtype), B, S, n_heads, head_dim,
                   quant, compute_dtype)
     return y, cache_k, cache_v
 

@@ -656,6 +656,73 @@ def _finish_block_decode(bp, cache, spec, cfg, x, q, cd):
     return x, cache
 
 
+def _block_verify(bp: dict, cache: dict, spec: BlockSpec, cfg: ModelConfig,
+                  x: jax.Array, pos: jax.Array, tables=None):
+    """S-token decode block for the speculative verify forward.
+
+    Only chunk-eligible attention stacks reach here (the engine's
+    spec_decode eligibility raises for recurrent / MoE / int8-KV / SWA /
+    shared-attention patterns at construction)."""
+    cd = cfg.cdtype
+    q = _infer_quant(cfg)
+    if (spec.kind != "attn" or spec.shared_attn
+            or (spec.attn_type == "local" and cfg.window)
+            or spec.mlp in ("moe", "rwkv_cm") or "k_scale" in cache):
+        raise ValueError(
+            f"verify_step cannot run block spec {spec} (kv_quant="
+            f"{cfg.kv_quant!r}): speculative decoding supports plain "
+            "full-length attention blocks only")
+    full_t = tables[0] if tables is not None else None
+    h = _norm(bp["ln1"], x, cfg)
+    y, ck, cv = attn_lib.decode_attention_multi(
+        bp["attn"], h, cache["k"], cache["v"], pos,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+        logit_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+        rope_mode=cfg.rope_mode, mrope_sections=cfg.mrope_sections,
+        quant=q, compute_dtype=cd, table=full_t)
+    if cfg.gemma_norms:
+        y = _norm(bp["post_attn_ln"], y, cfg)
+    x = x + y
+    cache = {**cache, "k": ck, "v": cv}
+    return _finish_block_decode(bp, cache, spec, cfg, x, q, cd)
+
+
+def verify_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: tuple, pos: jax.Array,
+                tables=None) -> tuple[jax.Array, tuple]:
+    """S tokens for the whole batch in ONE forward (speculative verify).
+
+    tokens: [B, S] int32 — token i of a row logically sits at ``pos + i``;
+    pos: [B] int32 start positions (negative marks a free slot).  Returns
+    (logits [B, S, V], cache): ``logits[:, i]`` conditions on
+    ``tokens[:, :i+1]`` plus the cache history, bit-identical to S
+    sequential :func:`decode_step` calls, because every KV write lands
+    before attention and the causal mask hides keys past ``pos + i`` from
+    query i.  The batched [B*S] matmuls are where the verify step beats S
+    sequential target steps."""
+    cd = cfg.cdtype
+    x = params["embed"]["emb"].astype(cd)[tokens]               # [B,S,d]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+
+    def group_body(carry, scanned):
+        x, = carry
+        gp, gc = scanned
+        out_caches = []
+        for bp, c, spec in zip(gp, gc, cfg.pattern):
+            x, c = _block_verify(bp, c, spec, cfg, x, pos, tables=tables)
+            out_caches.append(c)
+        return (x,), tuple(out_caches)
+
+    (x,), cache = maybe_scan(group_body, (x,),
+                             (params["blocks"], cache), cfg.unroll_groups)
+    x = _norm(params["final_norm"], x, cfg)
+    logits = _lm_head(params, cfg, x.astype(cd)).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits, cache
+
+
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 cache: tuple, pos: jax.Array,
                 tables=None) -> tuple[jax.Array, tuple]:

@@ -74,6 +74,16 @@ class ServeConfig:
     # compiled executors always report (the flags cost one cheap on-device
     # reduction either way; this gates the host-side checks/raises)
     guards: bool = True
+    # bitplane-truncated self-speculative decoding: draft ``draft_k`` tokens
+    # per round with the top-``draft_planes``-plane view of the tmac weight
+    # codes (zero extra weight memory — the draft shares the target's packed
+    # planes), verify them in ONE batched (draft_k+1)-token target forward,
+    # accept the longest matching prefix.  Transcripts are bit-identical to
+    # the non-speculative engine at temperature 0; at temperature > 0 every
+    # emitted token is still sampled from the exact target conditional.
+    spec_decode: bool = False
+    draft_planes: int = 2         # top planes the drafter keeps (>= 2)
+    draft_k: int = 3              # tokens drafted per verify round
 
     def __post_init__(self):
         """Validate serving invariants at construction — a bad geometry
@@ -104,6 +114,19 @@ class ServeConfig:
                     f"prefill_chunk ({self.prefill_chunk}) must be a "
                     f"multiple of page_size ({self.page_size}) so chunk "
                     f"boundaries align with page boundaries")
+        if self.spec_decode:
+            if self.draft_k < 1:
+                raise ValueError(
+                    f"draft_k must be >= 1, got {self.draft_k}")
+            if self.draft_planes < 2:
+                raise ValueError(
+                    f"draft_planes must be >= 2 (the drafter keeps the sign "
+                    f"plane plus at least one magnitude plane), got "
+                    f"{self.draft_planes}")
+            if self.draft_k + 1 > self.max_len:
+                raise ValueError(
+                    f"draft_k ({self.draft_k}) needs max_len >= draft_k + 1 "
+                    f"({self.draft_k + 1}), got {self.max_len}")
 
     @property
     def chunk_tokens(self) -> int:
@@ -327,6 +350,37 @@ class Engine:
         # scheduler must prefill those models at exact prompt length
         self.has_recurrent_state = (not self.is_encdec and any(
             spec.kind != "attn" for spec in cfg.pattern))
+        # speculative decoding eligibility: the draft/verify round needs
+        # token-at-a-time state (same precondition as the chunk lane), no
+        # SWA rings (a K+1-token block write would wrap them), and tmac
+        # leaves wide enough to truncate.  Fail at construction, not inside
+        # the first compiled spec round.
+        self.n_draftable_leaves = 0
+        if scfg.spec_decode:
+            if self.requires_monolithic_admission:
+                raise ValueError(
+                    "spec_decode needs prompt/decode state that builds one "
+                    "token at a time — recurrent layers, MoE routing, "
+                    "int8-KV and enc-dec models cannot run draft/verify "
+                    "rounds")
+            if self.chunk_window_limit is not None:
+                raise ValueError(
+                    "spec_decode does not support sliding-window attention: "
+                    "a draft_k+1-token speculative block would wrap the "
+                    "window ring before the verify pass could roll it back")
+            if any(getattr(spec, "shared_attn", False)
+                   for spec in getattr(cfg, "pattern", ())):
+                raise ValueError(
+                    "spec_decode does not support shared-attention patterns")
+            from repro.serve.quantize import count_draftable_leaves
+            self.n_draftable_leaves = count_draftable_leaves(
+                self.params, scfg.draft_planes)
+            if self.n_draftable_leaves == 0:
+                raise ValueError(
+                    f"spec_decode found no draftable weight leaves: the "
+                    f"drafter truncates tmac bitplane stacks wider than "
+                    f"draft_planes={scfg.draft_planes} — quantize with a "
+                    f"w3/w4 tmac mode (e.g. quant='w4a4_tmac')")
 
     # -- compiled-executor construction (ShardedEngine overrides these with
     #    shard_map-wrapped variants; the impls themselves are shared) --------
@@ -334,8 +388,9 @@ class Engine:
     def _build_admit_fn(self):
         return jax.jit(self._admit_impl, donate_argnums=1)
 
-    def _build_step_fn(self, C: int, chunk: int, greedy: bool):
-        return jax.jit(self._make_step_impl(C, chunk, greedy),
+    def _build_step_fn(self, C: int, chunk: int, greedy: bool,
+                       spec: bool = False):
+        return jax.jit(self._make_step_impl(C, chunk, greedy, spec),
                        donate_argnums=1)
 
     # -- scheduler-facing API ------------------------------------------------
@@ -641,7 +696,8 @@ class Engine:
         return cache, tok, pos, done, tok0, done0, ok0
 
     def step(self, cache, entries, tok, pos, done, eos, temperature, top_k,
-             top_p, step0: int, chunk: int, greedy: bool = False):
+             top_p, step0: int, chunk: int, greedy: bool = False,
+             spec: bool = False):
         """ONE unified serving round in a single dispatch: a chunk lane of
         ``prefill_chunk`` masked prompt-token iterations (absent when
         ``entries`` is None) followed by a decode lane advancing every slot
@@ -668,21 +724,35 @@ class Engine:
         argmax-only variant that skips the per-token vocab sort; its tokens
         are bit-identical to the general path's.
 
-        Returns (cache, tok, pos, done, tok0, done0, tokens [B, chunk],
-        dones [B, chunk], ok [B]) — tok0/done0 are per-slot first tokens /
+        ``spec=True`` (requires ``scfg.spec_decode``) swaps the decode lane
+        for a draft/verify speculative round: ``draft_k`` sequential
+        truncated-plane drafter steps propose tokens, ONE batched
+        (draft_k+1)-token target forward verifies them, and the longest
+        matching prefix is accepted — up to ``draft_k + 1`` tokens per slot
+        per round, bit-identical to the non-speculative transcript at
+        temperature 0.  The tokens/dones outputs are then ``[B, draft_k+1]``
+        wide and only the first ``n_valid[b]`` columns of row b are real.
+
+        Returns (cache, tok, pos, done, tok0, done0, tokens [B, W],
+        dones [B, W], ok [B], n_valid [B]) with W = chunk (or draft_k+1
+        under ``spec``) — tok0/done0 are per-slot first tokens /
         immediately-finished flags, meaningful at rows whose ``first``
         entry fired this round; ok is the per-slot finite-logits guard over
-        the whole round.  Compiles once per (has-entries, chunk, greedy).
+        the whole round; n_valid counts the tokens each row actually
+        advanced (always W on non-speculative rounds).  Compiles once per
+        (has-entries, chunk, greedy, spec).
         """
         if self.is_encdec:
             raise NotImplementedError(
                 "continuous batching serves decoder-only LMs; enc-dec uses "
                 "Engine.generate")
+        if spec and not self.scfg.spec_decode:
+            raise ValueError("spec=True requires ServeConfig(spec_decode=True)")
         C = self.prefill_chunk if entries is not None else 0
-        fn = self._step_fns.get((C, chunk, greedy))
+        fn = self._step_fns.get((C, chunk, greedy, spec))
         if fn is None:
-            fn = self._build_step_fn(C, chunk, greedy)
-            self._step_fns[(C, chunk, greedy)] = fn
+            fn = self._build_step_fn(C, chunk, greedy, spec)
+            self._step_fns[(C, chunk, greedy, spec)] = fn
         if entries is not None:
             cache = self._fault_site("admit", cache, pos)
         cache = self._fault_site("decode", cache, pos)
@@ -702,8 +772,11 @@ class Engine:
         return fn(self.params, cache, *c_args, tok, pos, done, eos,
                   temperature, top_k, top_p, key, jnp.int32(step0), *extra)
 
-    def _make_step_impl(self, C: int, chunk: int, greedy: bool):
+    def _make_step_impl(self, C: int, chunk: int, greedy: bool,
+                        spec: bool = False):
         mod, cfg = self._mod, self.cfg
+        K = self.scfg.draft_k
+        draft_planes = self.scfg.draft_planes
 
         def run(params, cache, c_slot, c_tok, c_pos, c_first, c_b1, tok,
                 pos, done, eos, temperature, top_k, top_p, key, step0,
@@ -756,23 +829,84 @@ class Engine:
                 (cache, tok, pos, done, ok, tok0, done0), _ = jax.lax.scan(
                     fill, (cache, tok, pos, done, ok, tok0, done0), xs)
 
-            def step(carry, j):
-                cache, tok, pos, done, ok = carry
-                logits, cache = mod.decode_step(params, cfg, tok, cache, pos,
-                                                tables=tables)
-                # finite-logits guard: rows already done (or free) before
-                # this step never sampled these logits — ignore them
-                ok = ok & (jnp.isfinite(logits).all(axis=-1) | done)
-                nxt = sample(logits,
-                             jax.random.fold_in(key, step0 + C + j))
-                nxt = jnp.where(done, tok, nxt)
-                pos = jnp.where(done, pos, pos + 1)
-                done = done | ((nxt == eos) & (eos >= 0))
-                return (cache, nxt, pos, done, ok), (nxt, done)
+            if spec:
+                # -- speculative decode lane: draft K / verify 1 -----------
+                # Precondition (scheduler-enforced): every non-free slot has
+                # pos <= max_len - (K+1), so no block write clamps into live
+                # history.  Rows done at round entry (parked mid-prefill /
+                # free) hold (tok, pos) throughout; the drafter's writes at
+                # their held slot are restored by the verify pass's target-
+                # bits rewrite of the same slots.
+                from repro.serve.quantize import draft_params_view
+                S = K + 1
+                # trace-time truncated-plane view: pure slices of the
+                # target's packed codes (zero extra weight memory; XLA
+                # hoists them as loop-invariant)
+                dparams = draft_params_view(params, draft_planes)
 
-            (cache, tok, pos, done, ok), (toks, dones) = jax.lax.scan(
-                step, (cache, tok, pos, done, ok),
-                jnp.arange(chunk, dtype=jnp.int32))
+                def draft(carry, j):
+                    cache, dtok, dpos = carry
+                    logits, cache = mod.decode_step(dparams, cfg, dtok,
+                                                    cache, dpos,
+                                                    tables=tables)
+                    nxt = sample(logits,
+                                 jax.random.fold_in(key, step0 + C + j))
+                    nxt = jnp.where(done, dtok, nxt)
+                    dpos = jnp.where(done, dpos, dpos + 1)
+                    return (cache, nxt, dpos), nxt
+
+                (cache, _, _), drafts = jax.lax.scan(
+                    draft, (cache, tok, pos), jnp.arange(K, dtype=jnp.int32))
+                drafts = drafts.T                               # [B, K]
+                # ONE batched target forward over [t0, d_1..d_K]: logits[i]
+                # conditions on the accepted-so-far prefix exactly like i
+                # sequential target steps would (verify_step writes target
+                # bits over every speculative slot before attending)
+                vtoks = jnp.concatenate([tok[:, None], drafts], axis=1)
+                logits, cache = mod.verify_step(params, cfg, vtoks, cache,
+                                                pos, tables=tables)
+                ok = ok & (jnp.isfinite(logits).all(axis=(-2, -1)) | done)
+                v = jnp.stack(
+                    [sample(logits[:, i],
+                            jax.random.fold_in(key, step0 + C + K + i))
+                     for i in range(S)], axis=1)                # [B, S]
+                # accept the longest prefix where the target reproduces the
+                # draft; v_{m+1} (the first mismatch / bonus token) is free
+                match = (v[:, :K] == drafts).astype(jnp.int32)
+                m = jnp.sum(jnp.cumprod(match, axis=1), axis=1)   # [B] 0..K
+                cols = jnp.arange(S, dtype=jnp.int32)[None]       # [1, S]
+                is_eos = (eos[:, None] >= 0) & (v == eos[:, None])
+                eos_in = is_eos & (cols <= m[:, None])
+                any_eos = eos_in.any(axis=1)
+                first_eos = jnp.argmax(eos_in, axis=1).astype(jnp.int32)
+                n_valid = jnp.where(any_eos, first_eos + 1, m + 1)
+                n_valid = jnp.where(done, 0, n_valid).astype(jnp.int32)
+                newtok = jnp.take_along_axis(
+                    v, jnp.maximum(n_valid - 1, 0)[:, None], axis=1)[:, 0]
+                tok = jnp.where(done, tok, newtok)
+                pos = pos + n_valid
+                done = done | (any_eos & (n_valid > 0))
+                toks, dones = v.T, (is_eos
+                                    & (cols < n_valid[:, None])).T
+            else:
+                def step(carry, j):
+                    cache, tok, pos, done, ok = carry
+                    logits, cache = mod.decode_step(params, cfg, tok, cache,
+                                                    pos, tables=tables)
+                    # finite-logits guard: rows already done (or free)
+                    # before this step never sampled these logits — ignore
+                    ok = ok & (jnp.isfinite(logits).all(axis=-1) | done)
+                    nxt = sample(logits,
+                                 jax.random.fold_in(key, step0 + C + j))
+                    nxt = jnp.where(done, tok, nxt)
+                    pos = jnp.where(done, pos, pos + 1)
+                    done = done | ((nxt == eos) & (eos >= 0))
+                    return (cache, nxt, pos, done, ok), (nxt, done)
+
+                (cache, tok, pos, done, ok), (toks, dones) = jax.lax.scan(
+                    step, (cache, tok, pos, done, ok),
+                    jnp.arange(chunk, dtype=jnp.int32))
+                n_valid = jnp.full(tok.shape, chunk, jnp.int32)
             # cache-finiteness guard: quantized (integer-code) matmul paths
             # launder NaN activations into finite garbage codes, so poisoned
             # KV can yield wrong-but-FINITE logits the guard above never
@@ -789,7 +923,8 @@ class Engine:
                 cache_ok = jax.lax.pmin(
                     cache_ok.astype(jnp.int32), axis).astype(bool)
             ok = ok & cache_ok
-            return cache, tok, pos, done, tok0, done0, toks.T, dones.T, ok
+            return (cache, tok, pos, done, tok0, done0, toks.T, dones.T, ok,
+                    n_valid)
 
         return run
 

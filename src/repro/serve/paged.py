@@ -290,6 +290,27 @@ class PagePool:
         self._bump(extra_f + extra_r)
         return True
 
+    def trim(self, slot: int, keep_tokens: int) -> int:
+        """Shrink ``slot``'s FULL mapping to the fewest entries covering
+        ``keep_tokens`` positions — the paged rollback of rejected
+        speculative writes: a draft/verify round maps pages for the whole
+        ``draft_k+1``-token block up front, and the tail past the accepted
+        prefix unmaps here so low-accept rounds can't hold pages other
+        slots need.  Callers keep at least the committed sequence (prompt +
+        emitted + the pending token's slot), so registered prompt pages are
+        never reachable by a trim; shared pages just drop one reference.
+        Ring entries never shrink (the SWA ring is a rolling window).
+        Returns the number of pages actually freed."""
+        sh = self._shards[self.shard_of(slot)]
+        nf, _ = self._entries_for(max(int(keep_tokens), 1))
+        freed = 0
+        for j in range(nf, self.n_full[slot]):
+            freed += sh.decref(int(self.table[slot, j]))
+            self.table[slot, j] = 0
+        self.n_full[slot] = min(self.n_full[slot], nf)
+        self.allocated_pages -= freed
+        return freed
+
     def release(self, slot: int) -> None:
         """Return every page ``slot`` references (shared pages survive while
         other sharers hold them) and point the slot back at the null page so

@@ -161,6 +161,70 @@ def quantize_params_for_serving(params, mode: str = "w4a4_mxu",
     return walk(params)
 
 
+def _draftable(leaf, draft_planes: int) -> bool:
+    """True for tmac leaves whose plane stack truncates to ``draft_planes``.
+
+    Positional int planes only: ternary's two planes are (+1, -1) masks, not
+    powers of two, so it (and w1) pass through undrafted — as do leaves
+    already at or below the draft width, one-hot nibble leaves, the w8a8
+    head, and MoE banks (legacy stack format).
+    """
+    return (isinstance(leaf, dict) and "w_tmac" in leaf
+            and "w_tern" not in leaf and leaf["w_q"].ndim >= 3
+            and leaf["w_q"].shape[-3] > draft_planes >= 2)
+
+
+def draft_params_view(params, draft_planes: int):
+    """Truncated-plane drafter view of quantized serving params.
+
+    For every draftable tmac leaf, slice the top ``draft_planes`` bitplanes
+    (plane axis -3 — leading scanned stack dims pass through) and fold the
+    ``2^(B-p)`` coefficient factor into ``w_scale``; every other leaf is the
+    *same object* as the target's.  The view is a pure tree walk over slices
+    — zero extra weight memory, safe to build inside ``jit`` (XLA hoists it
+    as loop-invariant), and it preserves the ``w_tmac``/tp markers so
+    formulation dispatch and the row-parallel int32 psum work unchanged.
+    """
+    from repro.kernels.lutmul import ops as lut_ops
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            if _draftable(tree, draft_planes):
+                wbits = int(tree["w_q"].shape[-3])
+                sliced, _, mult = lut_ops.truncate_planes(
+                    tree["w_q"], wbits, draft_planes)
+                out = dict(tree)
+                out["w_q"] = sliced
+                out["w_scale"] = tree["w_scale"] * jnp.float32(mult)
+                return out
+            return {k: walk(v) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+
+    return walk(params)
+
+
+def count_draftable_leaves(params, draft_planes: int) -> int:
+    """How many leaves :func:`draft_params_view` would actually truncate."""
+    n = 0
+
+    def walk(tree):
+        nonlocal n
+        if isinstance(tree, dict):
+            if _draftable(tree, draft_planes):
+                n += 1
+            else:
+                for v in tree.values():
+                    walk(v)
+        elif isinstance(tree, (tuple, list)):
+            for v in tree:
+                walk(v)
+
+    walk(params)
+    return n
+
+
 def dequantize_weight(p: dict, dtype=jnp.bfloat16) -> jax.Array:
     """Reassemble a float weight from codes (tests / fallbacks)."""
     from repro.core.lut import decode_planes, unpack_bitplanes, unpack_int4

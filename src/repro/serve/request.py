@@ -103,7 +103,10 @@ class Request:
         return self.deadline - now
 
     def emit(self, token: int) -> None:
-        """Record one generated token (and stream it)."""
+        """Record one generated token (and stream it).  The token lands on
+        the transcript BEFORE the callback runs, and a raising ``on_token``
+        propagates to the caller — the scheduler catches it and fails only
+        this request (status ``failed``), never the serving round."""
         self.tokens.append(int(token))
         if self.on_token is not None:
             self.on_token(self, int(token))

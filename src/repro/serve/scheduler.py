@@ -170,7 +170,9 @@ class Scheduler:
                       "prefill_tokens": 0, "admitted_tokens": 0,
                       "emitted_tokens": 0, "occupancy_sum": 0.0,
                       "preemptions": 0, "shed": 0, "timed_out": 0,
-                      "recoveries": 0, "dispatch_retries": 0, "failed": 0}
+                      "recoveries": 0, "dispatch_retries": 0, "failed": 0,
+                      "spec_rounds": 0, "spec_drafted": 0,
+                      "spec_accepted": 0}
 
     # -- paged helpers -------------------------------------------------------
 
@@ -216,7 +218,14 @@ class Scheduler:
         youngest first) until the remaining slots fit (or one sequence
         alone exhausts the pool, which is a configuration error)."""
         pool = self.engine.pool
-        max_len = self.engine.scfg.max_len
+        scfg = self.engine.scfg
+        max_len = scfg.max_len
+        # a speculative round writes a draft_k+1-token block per slot, so
+        # reserve for whichever lane this round ends up running (the spec
+        # fallback decision happens after assembly; over-reservation trims
+        # back after the round)
+        W = max(self.chunk, scfg.draft_k + 1) if scfg.spec_decode \
+            else self.chunk
         freed, evicted = [], []
         while True:
             active = [(s, r) for s, r in enumerate(self.slots)
@@ -227,7 +236,7 @@ class Scheduler:
             # decodes a FULL chunk past its sequence (which may include
             # previously emitted tokens after a preempt-and-resume), so it
             # needs one more
-            need = [(s, min(len(r.prompt) + len(r.tokens) + self.chunk
+            need = [(s, min(len(r.prompt) + len(r.tokens) + W
                             - (0 if self._progress[s] < self._target[s]
                                else 1), max_len))
                     for s, r in active]
@@ -415,9 +424,16 @@ class Scheduler:
             self._admit_seq[slot] = self._admit_counter
             L = int(lengths[slot])
             self._progress[slot] = self._target[slot] = L
+            cb_ok = True
             if req.remaining >= 1:
-                req.emit(int(tok0_h[slot]))
-            if done0_h[slot]:
+                cb_ok = self._deliver(req, int(tok0_h[slot]))
+            if not cb_ok:
+                # a raising streaming callback fails only ITS request; the
+                # rest of the admission round stands
+                self._retire(req, "failed", now)
+                self.stats["failed"] += 1
+                self._free_on_device([slot])
+            elif done0_h[slot]:
                 eos = self._eos_h[slot]
                 req.finish("eos" if eos >= 0 and req.tokens
                            and req.tokens[-1] == eos
@@ -569,6 +585,8 @@ class Scheduler:
         if snap["pool"] is not None:
             eng.pool.load_state(snap["pool"])
         self.stats = dict(snap["stats"])
+        for k in ("spec_rounds", "spec_drafted", "spec_accepted"):
+            self.stats.setdefault(k, 0)
         for r in self._submit_log:       # post-snapshot submissions survive
             r.status = RequestStatus.QUEUED
             r.tokens = []
@@ -683,6 +701,8 @@ class Scheduler:
         self._target = list(s.get("target", [0] * self.n_slots))
         self._submit_count = s["submit_count"]
         self.stats = dict(s["stats"])
+        for k in ("spec_rounds", "spec_drafted", "spec_accepted"):
+            self.stats.setdefault(k, 0)
         if s["pool"] is not None:
             self.engine.pool.load_state(s["pool"])
         self.queue = collections.deque(
@@ -889,12 +909,34 @@ class Scheduler:
         # host mirrors let us pick the argmax-only decode variant statically
         greedy = all(t <= 0.0 and k == 0 and p >= 1.0 for t, k, p in
                      zip(self._temp_h, self._topk_h, self._topp_h))
+        scfg = self.engine.scfg
+        use_spec = scfg.spec_decode
+        if use_spec:
+            # a speculative block writes draft_k+1 positions from every
+            # occupied row's post-chunk-lane held position; fall back to a
+            # plain round whenever any row sits too close to max_len for
+            # the block to land unclamped (the decision is a pure function
+            # of host state, so fault replays re-derive it identically)
+            lim = scfg.max_len - (scfg.draft_k + 1)
+            for slot, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                p = plan.get(slot, self._progress[slot])
+                if p < self._target[slot]:
+                    held = p - 1                  # parks on its latest entry
+                elif slot in completing:
+                    held = self._target[slot]     # becomes a decoder at L
+                else:
+                    held = len(req.prompt) + len(req.tokens) - 1
+                if held > lim:
+                    use_spec = False
+                    break
         try:
             (self.cache, self.tok, self.pos, self.done, tok0, done0, toks,
-             dones, ok) = self.engine.step(
+             dones, ok, n_valid) = self.engine.step(
                 self.cache, entries, self.tok, self.pos, self.done, self.eos,
                 self.temperature, self.top_k, self.top_p, self._step,
-                self.chunk, greedy=greedy)
+                self.chunk, greedy=greedy, spec=use_spec)
         except InjectedFault:
             # the dispatch never ran: roll back this round's fresh chunk
             # admissions (pages released, candidates back at the queue head
@@ -913,7 +955,8 @@ class Scheduler:
                 # restore the free-slot sentinel the parks overwrote
                 self._free_on_device([slot for slot, _ in fresh])
             raise
-        self._step += C + self.chunk
+        # spec rounds burn draft_k draft + draft_k+1 verify sampling streams
+        self._step += C + (2 * scfg.draft_k + 1 if use_spec else self.chunk)
         if self.engine.scfg.guards:
             ok_h = np.asarray(ok)
             if not ok_h.all():
@@ -941,6 +984,16 @@ class Scheduler:
             sum(r is not None for r in self.slots) / self.n_slots)
         toks_h, dones_h = np.asarray(toks), np.asarray(dones)
         tok0_h, done0_h = np.asarray(tok0), np.asarray(done0)
+        nv_h = np.asarray(n_valid)
+        if use_spec:
+            # accept-rate telemetry: every live decode row drafted draft_k
+            # tokens and committed n_valid-1 of them (the last committed
+            # token is the verifier's own bonus/correction sample)
+            self.stats["spec_rounds"] += 1
+            self.stats["spec_drafted"] += int((nv_h > 0).sum()) * \
+                scfg.draft_k
+            self.stats["spec_accepted"] += int(
+                np.maximum(nv_h - 1, 0).sum())
         if callable(now):      # stamp finish times after the round completed
             now = now()
         emitted, freed = 0, []
@@ -949,19 +1002,25 @@ class Scheduler:
                 continue
             if self._progress[slot] < self._target[slot]:
                 continue            # still mid-prefill: nothing to emit yet
+            cb_ok = True
             if slot in completing:
                 # the slot's last prompt token landed this round: its first
                 # output token was sampled in the same dispatch
                 if req.remaining >= 1:
-                    req.emit(int(tok0_h[slot]))
-                    emitted += 1
-                if done0_h[slot]:
+                    cb_ok = self._deliver(req, int(tok0_h[slot]))
+                    emitted += 1 if cb_ok else 0
+                if cb_ok and done0_h[slot]:
                     eos = self._eos_h[slot]
                     req.finish("eos" if eos >= 0 and req.tokens
                                and req.tokens[-1] == eos else "length", now)
-            if not req.done:
-                for j in range(self.chunk):
-                    req.emit(int(toks_h[slot, j]))
+            if cb_ok and not req.done:
+                # only the first n_valid columns of the row are real (all
+                # of them on a plain round; the accepted prefix + bonus
+                # token on a speculative one)
+                for j in range(int(nv_h[slot])):
+                    cb_ok = self._deliver(req, int(toks_h[slot, j]))
+                    if not cb_ok:
+                        break
                     emitted += 1
                     if dones_h[slot, j]:
                         req.finish("eos", now)
@@ -969,6 +1028,11 @@ class Scheduler:
                     if req.remaining <= 0:
                         req.finish("length", now)
                         break
+            if not cb_ok:
+                # a raising streaming callback fails only ITS request —
+                # every other slot's tokens this round still commit
+                req.finish("failed", now)
+                self.stats["failed"] += 1
             if req.done:
                 self.finished.append(req)
                 self.slots[slot] = None
@@ -977,10 +1041,30 @@ class Scheduler:
                 if self.engine.paged:
                     self.engine.pool.release(slot)
                 freed.append(slot)
+        if use_spec and self.engine.paged:
+            # paged-KV rollback of rejected speculation: drop page mappings
+            # grown for the draft_k+1 block past the accepted sequence (the
+            # pending token's slot stays resident)
+            for slot, req in enumerate(self.slots):
+                if req is None or self._progress[slot] < self._target[slot]:
+                    continue
+                self.engine.pool.trim(
+                    slot, len(req.prompt) + len(req.tokens))
         if freed:
             self._free_on_device(freed)
         self.stats["emitted_tokens"] += emitted
         return emitted
+
+    @staticmethod
+    def _deliver(req: Request, token: int) -> bool:
+        """Emit one token; False when the streaming callback raised (the
+        token itself is already on the transcript — at-least-once delivery
+        ends at the callback boundary)."""
+        try:
+            req.emit(token)
+            return True
+        except Exception:
+            return False
 
     def check_drained(self) -> None:
         """Leak telemetry at drain: with no work left, the page pool must

@@ -132,7 +132,8 @@ class ShardedEngine(Engine):
                      d)                              # ok0 finite-logits guard
         return self._shard_jit(self._admit_impl, in_specs, out_specs)
 
-    def _build_step_fn(self, C: int, chunk: int, greedy: bool):
+    def _build_step_fn(self, C: int, chunk: int, greedy: bool,
+                       spec: bool = False):
         d = self._dspec
         in_specs = (self._param_specs, self._cache_specs,
                     *serving_chunk_specs(),         # slot, tok, pos, first, b1
@@ -143,9 +144,10 @@ class ShardedEngine(Engine):
             in_specs += (d, d)                      # full + ring page tables
         out_specs = (self._cache_specs, d, d, d,
                      d, d,                # first tokens/dones [slots]
-                     d, d,                # decode tokens/dones [slots, chunk]
-                     d)                   # ok finite-logits guard
-        return self._shard_jit(self._make_step_impl(C, chunk, greedy),
+                     d, d,                # decode tokens/dones [slots, W]
+                     d,                   # ok finite-logits guard
+                     d)                   # n_valid accepted-width [slots]
+        return self._shard_jit(self._make_step_impl(C, chunk, greedy, spec),
                                in_specs, out_specs)
 
     # -- scheduler-facing API ------------------------------------------------

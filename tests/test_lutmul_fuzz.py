@@ -12,6 +12,7 @@ import os
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -205,6 +206,42 @@ def test_fuzz_tmac_fused_matches_scaled_oracle(blocks, wbits, out_dtype,
     acc = a.astype(jnp.int32) @ dense.astype(jnp.int32)
     want = (acc.astype(jnp.float32) * a_scale * w_scale).astype(od)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(TMAC_DIMS, WBITS, st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=N_EXAMPLES, deadline=None)
+def test_fuzz_plane_prefix_is_low_width_code(dims, wbits, seed):
+    """The self-speculative drafter's algebra: the top-``keep`` plane prefix
+    of a wB tmac weight IS a valid w(keep) tmac operand whose decode is
+    exactly ``floor(code / 2^(B-keep))`` of the full code — every truncated
+    code lands in the keep-bit range, the residual is bounded by the dropped
+    planes' mass, and the tmac kernel contracts the sliced planes exactly
+    like their decoded dense codes.  Ternary and w1 have no positional
+    prefix and must refuse."""
+    m, k, n = dims
+    rng = np.random.default_rng(seed)
+    wf = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    planes, _ = lut_ops.quantize_weights_planes(wf, wbits)
+    if wbits in (1, "ternary"):
+        with pytest.raises(ValueError):
+            lut_ops.truncate_planes(planes, wbits, 2)
+        return
+    with pytest.raises(ValueError):                    # keep == B: no draft
+        lut_ops.truncate_planes(planes, wbits, wbits)
+    full = np.asarray(decode_planes(unpack_bitplanes(planes), wbits))
+    for keep in range(2, wbits):
+        sliced, kept, mult = lut_ops.truncate_planes(planes, wbits, keep)
+        assert (kept, mult) == (keep, 2 ** (wbits - keep))
+        low = np.asarray(decode_planes(unpack_bitplanes(sliced), keep))
+        qmax = 2 ** (keep - 1)
+        assert low.min() >= -qmax and low.max() <= qmax - 1
+        err = full - mult * low
+        assert err.min() >= 0 and err.max() <= mult - 1
+        a = jnp.asarray(_int8_vals(rng, (m, k), 4))
+        got = lut_ops.lutmul_tmac(a, sliced, keep, abits=4,
+                                  backend="interpret")
+        oracle = np.asarray(a, np.int32) @ low.astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(got), oracle)
 
 
 @given(st.tuples(st.integers(1, 8), st.integers(1, 32).map(lambda k: 2 * k),

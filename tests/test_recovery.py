@@ -417,3 +417,110 @@ def test_drain_leak_telemetry():
     with pytest.raises(AssertionError, match="leak"):
         sched.check_drained()
     eng.pool._shards[0].ref[2] -= 1
+
+
+# ---------------------------------------------------------------------------
+# streaming-callback isolation + shed-tiebreak restore determinism
+# ---------------------------------------------------------------------------
+
+def test_raising_stream_callback_fails_only_its_request():
+    """A streaming ``on_token`` that raises mid-decode must fail ONLY its
+    own request (terminal status ``failed``, counted in stats) — every
+    other slot's tokens in the same continuous-batching round still commit
+    bit-identically to a run without the bad consumer."""
+    cfg, params, scfg = _make()
+    ref = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2)
+    clean = _reqs(cfg)
+    for r in clean:
+        ref.submit(r)
+    _drain(ref)
+    want = {tuple(r.prompt): list(r.tokens) for r in clean}
+
+    calls = {"n": 0}
+
+    def bad_consumer(req, tok):
+        calls["n"] += 1
+        if calls["n"] >= 3:
+            raise RuntimeError("consumer went away")
+
+    sched = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2)
+    reqs = _reqs(cfg)
+    reqs[0].on_token = bad_consumer
+    for r in reqs:
+        sched.submit(r)
+    _drain(sched)
+    assert reqs[0].status.value == "failed"
+    assert reqs[0].finish_reason == "failed"
+    assert sched.stats["failed"] == 1
+    # the poisoned request keeps the tokens delivered before the raise
+    # (at-least-once up to the callback boundary), a prefix of the oracle's
+    got0 = list(reqs[0].tokens)
+    assert got0 == want[tuple(reqs[0].prompt)][:len(got0)]
+    for r in reqs[1:]:
+        assert r.finish_reason == "length"
+        assert list(r.tokens) == want[tuple(r.prompt)]
+
+
+def test_raising_callback_at_admission_keeps_round():
+    """First-token delivery happens inside the admission round; a raising
+    callback there must not poison the other admissions."""
+    cfg, params, scfg = _make(paged=True, page_size=4)
+
+    def boom(req, tok):
+        raise RuntimeError("no")
+
+    eng = Engine(cfg, params, scfg)
+    sched = Scheduler(eng, slots=2, chunk=2)
+    reqs = _reqs(cfg, n=2)
+    reqs[0].on_token = boom
+    for r in reqs:
+        sched.submit(r)
+    _drain(sched)
+    assert reqs[0].status.value == "failed"
+    assert len(reqs[0].tokens) == 1      # the token itself is on record
+    assert reqs[1].finish_reason == "length"
+    assert eng.pool.allocated_pages == 0 and not eng.pool.leaked_pages()
+
+
+def test_shed_tiebreak_survives_save_load(tmp_path):
+    """The shed ordering's final tie-break is the submission sequence
+    (latest submitted goes first); a crash-restored scheduler must shed the
+    SAME set as the uninterrupted one — i.e. ``_seq`` and the submit
+    counter round-trip through save/load."""
+    def build():
+        cfg, params, scfg = _make()
+        sched = Scheduler(Engine(cfg, params, scfg), slots=1, chunk=2,
+                          shed_watermark=1.0, overload_queue=2)
+        keep = Request(prompt=[1, 2, 3], max_new_tokens=8)
+        sched.submit(keep, now=0.0)
+        sched.step(now=0.0)              # slot saturated
+        # identical priority, no deadlines: ONLY -_seq breaks the tie
+        waiting = [Request(prompt=[10 + i, 2, 3], max_new_tokens=2)
+                   for i in range(4)]
+        for r in waiting:
+            sched.submit(r, now=1.0)
+        return cfg, params, scfg, sched, waiting
+
+    _, _, _, ref, ref_wait = build()
+    ref.step(now=1.0)
+    want = [r.status.value for r in ref_wait]
+    assert want == ["queued", "queued", "shed", "shed"]
+    want_shed = {tuple(r.prompt) for r in ref_wait
+                 if r.status.value == "shed"}
+
+    cfg, params, scfg, a, _ = build()
+    a.save(str(tmp_path))
+    b = Scheduler(Engine(cfg, T.init_params(jax.random.PRNGKey(0), cfg),
+                         scfg), slots=1, chunk=2, shed_watermark=1.0,
+                  overload_queue=2)
+    b.load(str(tmp_path))
+    b.step(now=1.0)
+    got_shed = {tuple(r.prompt) for r in b.finished
+                if r.finish_reason == "shed"}
+    assert got_shed == want_shed
+    # and a fresh submission continues the restored counter, keeping the
+    # latest-first tie-break monotone across the crash
+    late = Request(prompt=[99, 2, 3], max_new_tokens=2)
+    b.submit(late, now=1.0)
+    assert late._seq == b._submit_count and late._seq > max(
+        getattr(r, "_seq", 0) for r in b.queue if r is not late)

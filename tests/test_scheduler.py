@@ -175,7 +175,7 @@ def test_no_retrace_across_staggered_admissions():
     while sched.has_work:
         sched.step()                 # warmup: chunked admission + decode
     C = eng.prefill_chunk
-    assert set(eng._step_fns) == {(C, 2, True), (0, 2, True)}
+    assert set(eng._step_fns) == {(C, 2, True, False), (0, 2, True, False)}
     sizes = {k: fn._cache_size() for k, fn in eng._step_fns.items()}
     assert all(v == 1 for v in sizes.values())
     for p in ([7, 7, 7], [5, 4, 3, 2, 1], [1, 2, 3, 4, 5, 6, 7, 8]):

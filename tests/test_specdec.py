@@ -1,0 +1,327 @@
+"""Bitplane-truncated self-speculative decoding.
+
+The drafter is the SAME packed tmac weight codes sliced to their top
+``draft_planes`` bitplanes (scale folded by ``2^(B-p)``), so it costs zero
+extra weight memory; ``draft_k`` drafter steps are verified by ONE batched
+``draft_k+1``-token target forward and the longest matching prefix commits.
+At temperature 0 the argmax chain makes acceptance exact, so every
+transcript here must be BIT-IDENTICAL to the non-speculative scheduler —
+dense and paged, across mid-stream snapshots, injected-fault replays, crash
+save/load, and the sharded (2x2 / 1x8) engines.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve import Engine, Request, Scheduler, ServeConfig
+from repro.serve.faults import Fault, FaultPlan
+from repro.serve.paged import PagedLayout, PagePool
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _make(max_len=32, **scfg):
+    cfg = dataclasses.replace(configs.get_config("qwen2-7b", smoke=True),
+                              compute_dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params, ServeConfig(max_len=max_len, quant="w4a4_tmac",
+                                    **scfg)
+
+
+def _reqs(cfg, n=4, S=5, budget=9, eos_id=None):
+    p = jax.random.randint(jax.random.PRNGKey(1), (n, S), 0, cfg.vocab)
+    return [Request(prompt=np.asarray(p[i]).tolist(), max_new_tokens=budget,
+                    eos_id=eos_id) for i in range(n)]
+
+
+def _drain(sched, max_rounds=200):
+    rounds = 0
+    while sched.has_work:
+        sched.step()
+        rounds += 1
+        assert rounds <= max_rounds
+    sched.check_drained()
+    return sorted((tuple(r.prompt), r.finish_reason, tuple(r.tokens))
+                  for r in sched.finished)
+
+
+# ---------------------------------------------------------------------------
+# config / eligibility validation
+# ---------------------------------------------------------------------------
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="draft_k"):
+        ServeConfig(spec_decode=True, draft_k=0)
+    with pytest.raises(ValueError, match="draft_planes"):
+        ServeConfig(spec_decode=True, draft_planes=1)
+    with pytest.raises(ValueError, match="max_len"):
+        ServeConfig(spec_decode=True, draft_k=8, max_len=8)
+
+
+def test_spec_requires_draftable_leaves():
+    cfg, params, _ = _make()
+    # w8a8 quantizes to int8 codes, not bitplanes: nothing to truncate
+    with pytest.raises(ValueError, match="draftable"):
+        Engine(cfg, params, ServeConfig(max_len=32, quant="w8a8",
+                                        spec_decode=True))
+    # spec=True on a non-spec engine is a usage error, not a silent fallback
+    eng = Engine(cfg, params, ServeConfig(max_len=32, quant="w4a4_tmac"))
+    with pytest.raises(ValueError, match="spec_decode"):
+        eng.step(eng.init_cache(1), None, *[None] * 7, 0, 1, spec=True)
+
+
+def test_spec_rejects_sliding_window():
+    cfg = dataclasses.replace(configs.get_config("gemma2-2b", smoke=True),
+                              compute_dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="sliding-window"):
+        Engine(cfg, params, ServeConfig(max_len=32, quant="w4a4_tmac",
+                                        spec_decode=True))
+
+
+# ---------------------------------------------------------------------------
+# temperature-0 bit-identity vs the non-speculative scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_transcripts_bit_identical(paged):
+    cfg, params, _ = _make()
+    pkw = {"paged": True, "page_size": 4} if paged else {}
+
+    def run(**kw):
+        eng = Engine(cfg, params, ServeConfig(max_len=32, quant="w4a4_tmac",
+                                              **pkw, **kw))
+        sched = Scheduler(eng, slots=2, chunk=2)
+        for r in _reqs(cfg):
+            sched.submit(r)
+        return _drain(sched), dict(sched.stats)
+
+    want, _ = run()
+    got, st = run(spec_decode=True, draft_k=3)
+    assert got == want
+    assert st["spec_rounds"] > 0
+    assert st["spec_drafted"] >= st["spec_accepted"] >= 0
+
+
+def test_spec_eos_truncation_bit_identical():
+    """An EOS landing inside the accepted speculative block must cut the
+    transcript at exactly the oracle's position (pos advances for the EOS
+    token itself, tokens after it are discarded)."""
+    cfg, params, scfg = _make()
+    ref = Scheduler(Engine(cfg, params, scfg), slots=2, chunk=2)
+    probe = _reqs(cfg)
+    for r in probe:
+        ref.submit(r)
+    _drain(ref)
+    eos = int(probe[0].tokens[3])        # a token the oracle really emits
+
+    def run(**kw):
+        eng = Engine(cfg, params, ServeConfig(max_len=32, quant="w4a4_tmac",
+                                              **kw))
+        sched = Scheduler(eng, slots=2, chunk=2)
+        for r in _reqs(cfg, eos_id=eos):
+            sched.submit(r)
+        return _drain(sched)
+
+    want = run()
+    assert any(reason == "eos" for _, reason, _ in want)
+    assert run(spec_decode=True, draft_k=3) == want
+
+
+def test_spec_near_max_len_falls_back_and_matches():
+    """Rows close to max_len can't fit a draft_k+1 block unclamped: those
+    rounds must fall back to plain decode and still match the oracle."""
+    cfg, params, _ = _make(max_len=16)
+
+    def run(**kw):
+        eng = Engine(cfg, params, ServeConfig(max_len=16, quant="w4a4_tmac",
+                                              **kw))
+        sched = Scheduler(eng, slots=2, chunk=2)
+        for r in _reqs(cfg, n=2, S=5, budget=11):     # runs right to the rim
+            sched.submit(r)
+        return _drain(sched)
+
+    assert run(spec_decode=True, draft_k=3) == run()
+
+
+# ---------------------------------------------------------------------------
+# fault replay / snapshot / crash recovery with speculation live
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["dispatch", "nan_logits"])
+def test_spec_fault_replay_bit_identical(kind):
+    cfg, params, _ = _make()
+    kw = dict(max_len=32, quant="w4a4_tmac", spec_decode=True, draft_k=3,
+              paged=True, page_size=4)
+    ref = Scheduler(Engine(cfg, params, ServeConfig(**kw)), slots=2, chunk=2)
+    for r in _reqs(cfg):
+        ref.submit(r)
+    want = _drain(ref)
+
+    eng = Engine(cfg, params, ServeConfig(**kw))
+    plan = FaultPlan([Fault(site="decode", index=3, kind=kind)])
+    eng.set_fault_plan(plan)
+    sched = Scheduler(eng, slots=2, chunk=2, snapshot_interval=1,
+                      max_retries=3)
+    for r in _reqs(cfg):
+        sched.submit(r)
+    try:
+        got = _drain(sched)
+    finally:
+        eng.set_fault_plan(None)
+    assert not plan.pending
+    assert sched.stats["recoveries"] >= 1
+    assert got == want
+
+
+def test_spec_save_load_continues_token_identically(tmp_path):
+    cfg, params, _ = _make()
+    kw = dict(max_len=32, quant="w4a4_tmac", spec_decode=True, draft_k=3)
+    ref = Scheduler(Engine(cfg, params, ServeConfig(**kw)), slots=2, chunk=2)
+    for r in _reqs(cfg):
+        ref.submit(r)
+    want = _drain(ref)
+
+    a = Scheduler(Engine(cfg, params, ServeConfig(**kw)), slots=2, chunk=2)
+    for r in _reqs(cfg):
+        a.submit(r)
+    a.step()
+    a.step()                              # save mid-stream, between rounds
+    a.save(str(tmp_path))
+    b = Scheduler(Engine(cfg, T.init_params(jax.random.PRNGKey(0), cfg),
+                         ServeConfig(**kw)), slots=2, chunk=2)
+    b.load(str(tmp_path))
+    assert _drain(b) == want
+
+
+# ---------------------------------------------------------------------------
+# paged rollback of rejected speculation
+# ---------------------------------------------------------------------------
+
+def test_pool_trim_unmaps_speculative_tail():
+    lay = PagedLayout(page_size=4, max_len=32, full_entries=8,
+                      ring_entries=0, ring_len=0)
+    pool = PagePool(4, lay)
+    assert pool.admit(0, list(range(8))) == 0          # 2 full pages
+    assert pool.ensure(0, 16)                          # + 2 speculative
+    before = pool.allocated_pages
+    assert pool.trim(0, 9) == 1                        # 9 tokens -> 3 pages
+    assert pool.allocated_pages == before - 1
+    assert pool.trim(0, 9) == 0                        # idempotent
+    assert not pool.validate() and not pool.leaked_pages()
+    # trim never reaches below the kept residency: the shared-prefix pages
+    # of a second sharer survive the first sharer's trim
+    assert pool.admit(1, list(range(8))) == 8          # full prefix hit
+    pool.trim(1, 9)
+    assert pool.table[0, 0] == pool.table[1, 0]
+    pool.release(0)
+    pool.release(1)
+    assert pool.allocated_pages == 0 and not pool.leaked_pages()
+
+
+def test_spec_paged_pool_drains_clean():
+    """Speculative page growth + trim rollback across a full serve: zero
+    allocated pages and zero unreachable refs at drain (check_drained
+    asserts inside _drain)."""
+    cfg, params, _ = _make()
+    eng = Engine(cfg, params, ServeConfig(
+        max_len=32, quant="w4a4_tmac", spec_decode=True, draft_k=3,
+        paged=True, page_size=4, num_pages=24))
+    sched = Scheduler(eng, slots=2, chunk=2)
+    for r in _reqs(cfg, n=4, budget=9):
+        sched.submit(r)
+    _drain(sched)
+    assert eng.pool.allocated_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# sharded engines (8 fake CPU devices in a subprocess — the CI recipe)
+# ---------------------------------------------------------------------------
+
+_SHARDED_SPEC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, numpy as np
+    from repro import configs
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import transformer as T
+    from repro.serve import Engine, Request, Scheduler, ServeConfig, \\
+        ShardedEngine
+
+    cfg = dataclasses.replace(configs.get_config("qwen2-7b", smoke=True),
+                              compute_dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 6), 0,
+                                 cfg.vocab)
+
+    def reqs():
+        return [Request(prompt=np.asarray(prompts[i]).tolist(),
+                        max_new_tokens=7) for i in range(4)]
+
+    def drain(sched):
+        rounds = 0
+        while sched.has_work:
+            sched.step()
+            rounds += 1
+            assert rounds <= 200
+        sched.check_drained()
+
+    # single-device dense NON-speculative oracle (same tmac codes)
+    ref = Scheduler(Engine(cfg, params,
+                           ServeConfig(max_len=32, quant="w4a4_tmac")),
+                    slots=4, chunk=2)
+    want = reqs()
+    for r in want:
+        ref.submit(r)
+    drain(ref)
+    want = [list(r.tokens) for r in want]
+
+    def case(mesh_spec, paged):
+        scfg = ServeConfig(max_len=32, quant="w4a4_tmac", spec_decode=True,
+                           draft_k=3,
+                           **({"paged": True, "page_size": 4} if paged
+                              else {}))
+        eng = ShardedEngine(cfg, params, scfg,
+                            mesh=make_serving_mesh(mesh_spec))
+        sched = Scheduler(eng, slots=4, chunk=2)
+        got = reqs()
+        for r in got:
+            sched.submit(r)
+        drain(sched)
+        for i, r in enumerate(got):
+            assert list(r.tokens) == want[i], \\
+                (mesh_spec, paged, i, r.tokens, want[i])
+        assert sched.stats["spec_rounds"] > 0
+        sizes = tuple(f._cache_size() for f in eng._step_fns.values())
+        assert sizes and all(s == 1 for s in sizes), (mesh_spec, sizes)
+        print("OK", mesh_spec, "paged=" + str(paged), flush=True)
+
+    case("2x2", False)
+    case("2x2", True)
+    case("1x8", True)
+    print("ALL-OK")
+""")
+
+
+@pytest.mark.slow
+def test_spec_sharded_bit_identical_subprocess():
+    """Speculative ShardedEngine (2x2 / 1x8, dense + paged) vs the
+    single-device dense non-speculative oracle: transcripts bit-identical
+    (the tmac drafter rides the same row-parallel int32 psum as the
+    target, so truncated-plane matmuls shard exactly too)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SPEC_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "ALL-OK" in out.stdout, out.stdout

@@ -290,6 +290,12 @@ _PAGED_TRAFFIC_SCRIPT = textwrap.dedent("""
                 sched.submit(reqs[i]); i += 1
             sched.step()
         assert all(s is None for s in sched.slots) and not sched.queue
+        if getattr(engine, "paged", False):
+            # zero-leak invariant: every retire path (EOS, budget, budget-0
+            # admission, preemption, queued victims) must return its pages
+            assert engine.pool.allocated_pages == 0, \\
+                ("drained pool still holds pages", engine.pool.allocated_pages)
+            assert not engine.pool.leaked_pages(), engine.pool.leaked_pages()
         return sched, [(r.tokens, r.finish_reason) for r in reqs]
 
     hits = preempts = 0
